@@ -1,0 +1,67 @@
+"""Beyond-paper: cost/energy as serving objectives (paper §VIII).
+
+Annotates the tau=0.75 RAG ladder with per-rung cost and compares the
+OPERATING cost of Elastico vs the static baselines under the spike workload:
+adaptive switching should land near static-fast's cost while holding higher
+accuracy — the cost story mirrors the latency story.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.cost import annotate_costs, timeline_cost
+from repro.core.elastico import ElasticoController
+
+from .common import Timer, paper_arrivals, plan_for, save_json, simulate
+from .table1_baselines import build_plan
+
+SLO_S = 1.0
+CHIPS = 1  # the paper's single-server box; scale freely for a pod slice
+
+
+def run() -> dict:
+    sur, res, _ = build_plan()
+    plan = plan_for(sur, res.feasible, SLO_S)
+    rungs = annotate_costs(plan, chips=CHIPS)
+    arrivals = paper_arrivals("spike")
+    ladder = plan.table.policies
+
+    rows = []
+    with Timer() as t:
+        for name, ctrl, static in [
+            ("elastico", ElasticoController(plan.table), 0),
+            ("static-fast", None, 0),
+            ("static-accurate", None, len(ladder) - 1),
+        ]:
+            out, acc = simulate(sur, plan, arrivals, 180.0,
+                                controller=ctrl, static=static)
+            per_rung = Counter(r.config_index for r in out.completed)
+            cost = timeline_cost(out.config_timeline, per_rung, rungs)
+            rows.append({
+                "variant": name,
+                "compliance": out.slo_compliance(SLO_S),
+                "accuracy": acc,
+                **cost,
+            })
+
+    payload = {
+        "rungs": [vars(r) for r in rungs],
+        "runs": rows,
+    }
+    save_json("cost_objective.json", payload)
+    el = rows[0]
+    fa = rows[1]
+    return {
+        "name": "cost_objective",
+        "us_per_call": t.elapsed / len(rows) * 1e6,
+        "derived": (
+            f"elastico=${el['usd_per_1k']:.4f}/1k "
+            f"fast=${fa['usd_per_1k']:.4f}/1k "
+            f"acc_delta=+{(el['accuracy'] - fa['accuracy']) * 100:.1f}pts"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

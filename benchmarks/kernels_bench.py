@@ -1,0 +1,99 @@
+"""Kernel microbenchmarks: allclose vs oracle + wall-clock of the jitted
+reference path on CPU (the Pallas kernels themselves run interpret=True here;
+TPU timing is projected by the roofline analysis, not measured)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cross_entropy import ops as ce_ops, ref as ce_ref
+from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
+from repro.kernels.ssm_scan import ops as ss_ops, ref as ss_ref
+
+from .common import save_json
+
+
+def time_fn(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    rows = []
+
+    # flash attention
+    B, H, S, D = 2, 4, 512, 64
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = fa_ops.flash_attention(q, k, v, causal=True, block_q=256, block_k=256, interpret=True)
+    ref = fa_ref.attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    jit_ref = jax.jit(lambda q, k, v: fa_ref.attention_ref(q, k, v, causal=True))
+    rows.append(("flash_attention", time_fn(jit_ref, q, k, v), err))
+
+    # decode attention
+    S = 4096
+    q1 = jax.random.normal(ks[3], (B, H, D))
+    k1 = jax.random.normal(ks[4], (B, S, H, D))
+    v1 = jax.random.normal(ks[5], (B, S, H, D))
+    length = jnp.asarray(S * 3 // 4, jnp.int32)
+    out = da_ops.decode_attention(q1, k1, v1, length, block_k=1024, interpret=True)
+    ref = da_ref.decode_attention_ref(q1, k1, v1, length)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    jit_ref = jax.jit(lambda *a: da_ref.decode_attention_ref(*a))
+    rows.append(("decode_attention", time_fn(jit_ref, q1, k1, v1, length), err))
+
+    # rmsnorm
+    x = jax.random.normal(ks[6], (256, 2048))
+    g = jax.random.normal(ks[7], (2048,))
+    out = rn_ops.rmsnorm(x, g, interpret=True)
+    ref = rn_ref.rmsnorm_ref(x, g)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("rmsnorm", time_fn(jax.jit(rn_ref.rmsnorm_ref), x, g), err))
+
+    # ssm scan
+    T, DI, N = 256, 256, 16
+    decay = jax.nn.sigmoid(jax.random.normal(ks[0], (1, T, DI, N)))
+    drive = 0.1 * jax.random.normal(ks[1], (1, T, DI, N))
+    c = jax.random.normal(ks[2], (1, T, N))
+    out = ss_ops.ssm_scan(decay, drive, c, block_d=128, time_chunk=128, interpret=True)
+    ref = ss_ref.ssm_scan_ref(decay, drive, c)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("ssm_scan", time_fn(jax.jit(ss_ref.ssm_scan_ref), decay, drive, c), err))
+
+    # chunked cross-entropy
+    T, V = 512, 8192
+    logits = jax.random.normal(ks[3], (T, V)) * 4
+    labels = jax.random.randint(ks[4], (T,), 0, V)
+    out = ce_ops.cross_entropy(logits, labels, block_t=256, block_v=2048, interpret=True)
+    ref = ce_ref.cross_entropy_ref(logits, labels)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("cross_entropy", time_fn(jax.jit(ce_ref.cross_entropy_ref), logits, labels), err))
+
+    payload = [
+        {"kernel": n, "ref_wall_us": w * 1e6, "max_abs_err_vs_oracle": e}
+        for n, w, e in rows
+    ]
+    save_json("kernels_bench.json", payload)
+    worst = max(r[2] for r in rows)
+    return {
+        "name": "kernels_bench",
+        "us_per_call": sum(r[1] for r in rows) / len(rows) * 1e6,
+        "derived": f"kernels={len(rows)} worst_err={worst:.2e}",
+    }
+
+
+if __name__ == "__main__":
+    print(run())

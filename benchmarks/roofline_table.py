@@ -1,0 +1,61 @@
+"""Roofline table from the committed multi-pod dry-run artifact.
+
+Reads experiments/dryrun_results.jsonl (written by
+``PYTHONPATH=src python -m repro.launch.dryrun``) and reports the
+compute/memory/collective terms per (arch x shape x mesh) with the dominant
+bottleneck — deliverable (g).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import Counter
+
+from .common import EXPERIMENTS_DIR, save_json
+
+DRYRUN = os.path.join(EXPERIMENTS_DIR, "dryrun_results.jsonl")
+
+
+def load_rows():
+    if not os.path.exists(DRYRUN):
+        raise FileNotFoundError(
+            "run `PYTHONPATH=src python -m repro.launch.dryrun` first"
+        )
+    return [json.loads(l) for l in open(DRYRUN)]
+
+
+def run() -> dict:
+    rows = load_rows()
+    table = []
+    for r in rows:
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        table.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "kind": r["kind"],
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "bottleneck": r["bottleneck"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "step_lower_bound_s": step,
+            }
+        )
+    bn = Counter((t["mesh"], t["bottleneck"]) for t in table)
+    save_json("roofline_table.json", table)
+    single = [t for t in table if t["mesh"] == "16x16"]
+    return {
+        "name": "roofline_table",
+        "us_per_call": 0.0,
+        "derived": (
+            f"pairs={len(single)} bottlenecks="
+            + ",".join(f"{k[1]}@{k[0]}:{v}" for k, v in sorted(bn.items()))
+        ),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

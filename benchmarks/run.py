@@ -1,0 +1,62 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+
+Prints ``name,us_per_call,derived`` CSV and writes per-benchmark JSON
+artifacts into experiments/.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    cost_objective,
+    fig1_pareto,
+    predictive_ablation,
+    fig3_convergence,
+    fig4_efficiency,
+    fig5_slo_compliance,
+    fig6_latency_cdf,
+    fig7_timeseries,
+    kernels_bench,
+    roofline_table,
+    serving_ladders_bench,
+    table1_baselines,
+)
+
+BENCHES = {
+    "fig1_pareto": fig1_pareto.run,
+    "fig3_convergence": fig3_convergence.run,
+    "fig4_efficiency": fig4_efficiency.run,
+    "table1_baselines": table1_baselines.run,
+    "fig5_slo_compliance": fig5_slo_compliance.run,
+    "fig6_latency_cdf": fig6_latency_cdf.run,
+    "fig7_timeseries": fig7_timeseries.run,
+    "kernels_bench": kernels_bench.run,
+    "predictive_ablation": predictive_ablation.run,
+    "serving_ladders": serving_ladders_bench.run,
+    "cost_objective": cost_objective.run,
+    "roofline_table": roofline_table.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            row = BENCHES[name]()
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

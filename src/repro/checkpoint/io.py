@@ -1,0 +1,99 @@
+"""Checkpointing: save/restore arbitrary pytrees as .npz + JSON treedef.
+
+No external deps (orbax unavailable offline): leaves go into a single .npz
+keyed by flattened index; structure and metadata (step, config) go into a
+sidecar JSON.  Atomic via write-to-temp + rename.  Supports keeping the last
+N checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    *, metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    """Save ``tree`` under ``directory/step_<step>/``.  Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        np.savez(
+            os.path.join(tmp, "arrays.npz"),
+            **{f"leaf_{i}": l for i, l in enumerate(leaves)},
+        )
+        meta = {
+            "step": step,
+            "treedef": str(treedef),
+            "num_leaves": len(leaves),
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        d for d in os.listdir(directory) if d.startswith("step_")
+    )
+    for stale in ckpts[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, stale), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(directory) if d.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, example_tree: Any,
+                       *, step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``example_tree``.  Returns
+    (tree, step, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(meta["num_leaves"])]
+    ex_leaves, treedef = jax.tree_util.tree_flatten(example_tree)
+    if len(ex_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(ex_leaves)}"
+        )
+    restored = [
+        np.asarray(l).astype(ex.dtype) if hasattr(ex, "dtype") else l
+        for l, ex in zip(leaves, ex_leaves)
+    ]
+    return (
+        jax.tree_util.tree_unflatten(treedef, restored),
+        meta["step"],
+        meta.get("metadata", {}),
+    )

@@ -1,0 +1,54 @@
+"""Compass core: the paper's contribution as composable modules.
+
+- :mod:`repro.core.space` — compound-AI configuration spaces (§II-A).
+- :mod:`repro.core.wilson` / :mod:`repro.core.evaluate` — progressive
+  budgeting with Wilson-CI early stopping (§IV-B).
+- :mod:`repro.core.gradient` — IDW finite-difference gradients (Eq. 3).
+- :mod:`repro.core.compass_v` — Algorithm 1 feasible-set search (§IV).
+- :mod:`repro.core.pareto` — accuracy/latency Pareto front (§III-A).
+- :mod:`repro.core.aqm` — M/G/1 switching thresholds (§V).
+- :mod:`repro.core.planner` — deployment planning (§III-A).
+- :mod:`repro.core.elastico` — runtime adaptation controller (§III-B, §V-F).
+"""
+
+from .aqm import (
+    AQMPolicyTable,
+    HysteresisSpec,
+    SwitchingPolicy,
+    derive_policies,
+    ladder_is_monotone,
+)
+from .compass_v import CompassV, SearchResult, exhaustive_search
+from .elastico import ElasticoController, SwitchEvent
+from .evaluate import ProgressiveEvaluator, make_budget_schedule
+from .gradient import idw_gradient
+from .pareto import LatencyProfile, ParetoPoint, pareto_front
+from .planner import DeploymentPlan, Planner, summarize_latencies
+from .space import Config, ConfigSpace, Parameter
+from .wilson import wilson_interval
+
+__all__ = [
+    "AQMPolicyTable",
+    "HysteresisSpec",
+    "SwitchingPolicy",
+    "derive_policies",
+    "ladder_is_monotone",
+    "CompassV",
+    "SearchResult",
+    "exhaustive_search",
+    "ElasticoController",
+    "SwitchEvent",
+    "ProgressiveEvaluator",
+    "make_budget_schedule",
+    "idw_gradient",
+    "LatencyProfile",
+    "ParetoPoint",
+    "pareto_front",
+    "DeploymentPlan",
+    "Planner",
+    "summarize_latencies",
+    "Config",
+    "ConfigSpace",
+    "Parameter",
+    "wilson_interval",
+]

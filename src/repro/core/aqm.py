@@ -1,0 +1,150 @@
+"""AQM: analytical queuing-theory model for switching policies (paper §V).
+
+The inference server is modeled as an M/G/1 FIFO queue.  Pareto-front
+configurations are ordered by increasing service time (Eq. 4).  For a P95
+latency SLO ``L``:
+
+  queuing slack      Delta_k = L - s95_k                      (Eq. 7)
+  upscale threshold  N_k(up) = floor(Delta_k / s-bar_k)       (Eq. 10)
+  downscale thresh.  N_k(dn) = floor((Delta_{k+1} - h_s) / s-bar_{k+1})  (Eq. 13)
+
+Configurations with Delta_k <= 0 cannot satisfy the SLO and are excluded.
+Asymmetric temporal hysteresis (§V-F): upscale cooldown ~0 (react to spikes
+immediately), downscale cooldown ~seconds (require sustained low load).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from .pareto import ParetoPoint
+
+
+@dataclass(frozen=True)
+class SwitchingPolicy:
+    """Per-configuration switching thresholds on the Pareto ladder.
+
+    Index k runs from 0 (fastest, least accurate) to n (slowest, most
+    accurate), matching the paper's ordering s_0 < s_1 < ... < s_n.
+    ``upscale_threshold[k]`` is N_k(up): max safe queue depth under config k;
+    when queue depth exceeds it the controller must move *down* the ladder to
+    the faster config k-1 ("upscale" in the paper = scale capacity up by
+    choosing a faster configuration).
+    ``downscale_threshold[k]`` is N_k(dn): when depth falls below it, config
+    k+1 (slower, more accurate) can absorb the current queue, so the
+    controller may move up the accuracy ladder.
+    """
+
+    point: ParetoPoint
+    index: int
+    queuing_slack: float            # Delta_k (seconds)
+    upscale_threshold: int          # N_k(up)
+    downscale_threshold: Optional[int]   # N_k(dn); None for the most accurate config
+
+
+@dataclass(frozen=True)
+class HysteresisSpec:
+    """Asymmetric temporal hysteresis (paper §V-F)."""
+
+    upscale_cooldown_s: float = 0.0      # t(up): react immediately to spikes
+    downscale_cooldown_s: float = 5.0    # t(dn): sustained low load required
+
+    def __post_init__(self) -> None:
+        if self.upscale_cooldown_s < 0 or self.downscale_cooldown_s < 0:
+            raise ValueError("cooldowns must be non-negative")
+
+
+@dataclass(frozen=True)
+class AQMPolicyTable:
+    """Complete switching policy for a Pareto front under one latency SLO."""
+
+    slo_p95_s: float                 # L
+    slack_buffer_s: float            # h_s
+    policies: Tuple[SwitchingPolicy, ...]   # index 0 = fastest
+    hysteresis: HysteresisSpec
+    excluded: Tuple[ParetoPoint, ...] = ()  # Delta_k <= 0 (cannot meet SLO)
+
+    @property
+    def ladder_size(self) -> int:
+        return len(self.policies)
+
+    def policy(self, k: int) -> SwitchingPolicy:
+        return self.policies[k]
+
+
+def derive_policies(
+    front: Sequence[ParetoPoint],
+    *,
+    slo_p95_s: float,
+    slack_buffer_s: float = 0.050,
+    hysteresis: HysteresisSpec = HysteresisSpec(),
+) -> AQMPolicyTable:
+    """Build the AQM policy table for a Pareto front (paper §V-C..F).
+
+    ``front`` must be ordered by increasing mean service time (the Planner
+    guarantees this via :func:`repro.core.pareto.pareto_front`).
+    """
+    if slo_p95_s <= 0:
+        raise ValueError("SLO must be positive")
+    for a, b in zip(front, front[1:]):
+        if not b.profile.mean > a.profile.mean:
+            raise ValueError("front must be ordered by increasing mean latency")
+
+    # Eq. 7: exclude configurations whose tail service time alone breaks the SLO.
+    admitted: List[ParetoPoint] = []
+    excluded: List[ParetoPoint] = []
+    for p in front:
+        slack = slo_p95_s - p.profile.p95
+        (admitted if slack > 0 else excluded).append(p)
+
+    policies: List[SwitchingPolicy] = []
+    n = len(admitted)
+    for k, p in enumerate(admitted):
+        delta_k = slo_p95_s - p.profile.p95                       # Eq. 7
+        up = int(math.floor(delta_k / p.profile.mean))            # Eq. 10
+        down: Optional[int] = None
+        if k + 1 < n:
+            nxt = admitted[k + 1]
+            delta_next = slo_p95_s - nxt.profile.p95
+            down = int(math.floor(max(0.0, delta_next - slack_buffer_s) / nxt.profile.mean))  # Eq. 13
+        policies.append(
+            SwitchingPolicy(
+                point=p,
+                index=k,
+                queuing_slack=delta_k,
+                upscale_threshold=max(0, up),
+                downscale_threshold=down,
+            )
+        )
+
+    # Eq. 11 sanity: faster configurations tolerate larger queues.  This holds
+    # whenever mean service times dominate the p95 spread; warn-level check
+    # only (real profiles can mildly violate it when p95/mean ratios differ).
+    return AQMPolicyTable(
+        slo_p95_s=slo_p95_s,
+        slack_buffer_s=slack_buffer_s,
+        policies=tuple(policies),
+        hysteresis=hysteresis,
+        excluded=tuple(excluded),
+    )
+
+
+def ladder_is_monotone(table: AQMPolicyTable) -> bool:
+    """Check Eq. 11: N_0(up) > N_1(up) > ... > N_n(up)."""
+    ups = [p.upscale_threshold for p in table.policies]
+    return all(a > b for a, b in zip(ups, ups[1:]))
+
+
+def expected_wait(queue_depth: int, mean_service_s: float) -> float:
+    """Eq. 8: E[W] = N * s-bar_k (mean as a proxy for the P95; exact for
+    deterministic service)."""
+    return queue_depth * mean_service_s
+
+
+def max_sustainable_rate(policy: SwitchingPolicy) -> float:
+    """Utilization bound for config k: the M/G/1 queue is stable only when
+    lambda < 1 / s-bar_k; beyond it the queue grows without bound and the
+    upscale threshold will trip.  Used by the Planner for reporting."""
+    return 1.0 / policy.point.profile.mean

@@ -1,0 +1,92 @@
+"""Cost/energy as first-class serving objectives (paper §VIII future work).
+
+Paper §VIII: "Extending Compass to multi-server deployments would require
+jointly deciding when to switch configurations versus when to add replicas,
+with cost and energy as first-class objectives."  The fixed-infrastructure
+premise keeps the replica decision out of scope here, but cost/energy per
+request ARE well-defined on a fixed pod and differ per ladder rung: a faster
+configuration finishes each request in fewer chip-seconds, so under low load
+the ACCURATE rung costs more per request in exact proportion to its service
+time.
+
+This module annotates a deployment plan with per-rung cost/energy and
+computes the ladder's operating cost under a given load profile — the
+quantities an operator needs to weigh "run accurate all day" against
+"descend one rung and save X%".
+
+v5e public reference numbers (constants, overridable):
+  on-demand price   ~$1.20 / chip-hour
+  board power       ~170 W per chip (inference-typical draw)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from .aqm import AQMPolicyTable
+from .planner import DeploymentPlan
+
+V5E_PRICE_PER_CHIP_HOUR = 1.20     # USD
+V5E_WATTS_PER_CHIP = 170.0
+
+
+@dataclass(frozen=True)
+class RungCost:
+    index: int
+    accuracy: float
+    service_s: float
+    chip_seconds: float            # chips occupied x service time
+    usd_per_1k_requests: float
+    wh_per_1k_requests: float
+
+
+def annotate_costs(
+    plan: DeploymentPlan,
+    *,
+    chips: int = 1,
+    price_per_chip_hour: float = V5E_PRICE_PER_CHIP_HOUR,
+    watts_per_chip: float = V5E_WATTS_PER_CHIP,
+) -> List[RungCost]:
+    """Per-rung serving cost.  ``chips`` is the slice the M/G/1 'server'
+    occupies (1 for the paper's single-GPU box; 256 for a v5e pod slice)."""
+    out = []
+    for pol in plan.table.policies:
+        s = pol.point.profile.mean
+        chip_s = s * chips
+        usd = chip_s / 3600.0 * price_per_chip_hour * 1e3
+        wh = chip_s * watts_per_chip / 3600.0 * 1e3
+        out.append(RungCost(
+            index=pol.index,
+            accuracy=pol.point.accuracy,
+            service_s=s,
+            chip_seconds=chip_s,
+            usd_per_1k_requests=usd,
+            wh_per_1k_requests=wh,
+        ))
+    return out
+
+
+def timeline_cost(
+    config_timeline: Sequence[Tuple[float, int]],
+    completed_per_rung: Dict[int, int],
+    rung_costs: Sequence[RungCost],
+) -> Dict[str, float]:
+    """Aggregate cost of a serving run from per-rung request counts."""
+    by_idx = {r.index: r for r in rung_costs}
+    usd = sum(
+        by_idx[k].usd_per_1k_requests / 1e3 * n
+        for k, n in completed_per_rung.items() if k in by_idx
+    )
+    wh = sum(
+        by_idx[k].wh_per_1k_requests / 1e3 * n
+        for k, n in completed_per_rung.items() if k in by_idx
+    )
+    total = sum(completed_per_rung.values())
+    return {
+        "requests": float(total),
+        "usd": usd,
+        "wh": wh,
+        "usd_per_1k": usd / total * 1e3 if total else 0.0,
+        "wh_per_1k": wh / total * 1e3 if total else 0.0,
+    }

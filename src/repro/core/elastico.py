@@ -1,0 +1,159 @@
+"""Elastico: runtime adaptation controller (paper §III-B, §V-F).
+
+Elastico monitors queue depth and walks the Pareto ladder using the
+AQM-derived thresholds:
+
+  - queue depth N > N_k(up)  ->  switch to the faster configuration c_{k-1}
+    (immediately — upscale cooldown ~0, load spikes cause instant SLO risk);
+  - queue depth N < N_k(dn) *sustained* for the downscale cooldown  ->
+    switch to the slower, more accurate configuration c_{k+1}.
+
+The asymmetric hysteresis prevents oscillation under fluctuating load and
+guarantees convergence to the highest-accuracy configuration under low load.
+During a switch the executor keeps serving with the old configuration until
+the new one is ready, so no requests are dropped (§III-B).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+from .aqm import AQMPolicyTable, SwitchingPolicy
+
+
+@dataclass(frozen=True)
+class SwitchEvent:
+    time_s: float
+    from_index: int
+    to_index: int
+    queue_depth: int
+    direction: str      # "faster" | "more_accurate"
+    reason: str
+
+
+@dataclass
+class ElasticoController:
+    """Queue-depth driven configuration selector.
+
+    Pure decision logic — time is injected (``now_s``) so the controller runs
+    identically under the discrete-event simulator and the real-time engine.
+
+    ``aggressive_descent`` is a beyond-paper option: instead of stepping one
+    ladder rung per decision, jump directly to the slowest configuration whose
+    upscale threshold tolerates the current depth.  The paper's Elastico steps
+    rung-by-rung (default False = paper-faithful).
+    """
+
+    table: AQMPolicyTable
+    initial_index: Optional[int] = None
+    aggressive_descent: bool = False
+
+    current_index: int = field(init=False)
+    last_upscale_s: float = field(init=False, default=float("-inf"))
+    last_downscale_s: float = field(init=False, default=float("-inf"))
+    _low_since_s: Optional[float] = field(init=False, default=None)
+    events: List[SwitchEvent] = field(init=False, default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.table.ladder_size == 0:
+            raise ValueError("empty policy table: no configuration can meet the SLO")
+        # Start at the most accurate configuration (paper Fig. 7 starts at
+        # Accurate and descends when the spike arrives).
+        self.current_index = (
+            self.initial_index
+            if self.initial_index is not None
+            else self.table.ladder_size - 1
+        )
+        if not 0 <= self.current_index < self.table.ladder_size:
+            raise ValueError("initial index out of range")
+
+    # -- accessors ------------------------------------------------------------
+
+    @property
+    def current_policy(self) -> SwitchingPolicy:
+        return self.table.policy(self.current_index)
+
+    # -- control --------------------------------------------------------------
+
+    def observe(self, queue_depth: int, now_s: float) -> Optional[SwitchEvent]:
+        """One control decision.  Returns a SwitchEvent when the active
+        configuration changes, else None."""
+        if queue_depth < 0:
+            raise ValueError("negative queue depth")
+        hyst = self.table.hysteresis
+        k = self.current_index
+        policy = self.table.policy(k)
+
+        # ---- upscale path: queue exceeds what config k can absorb ----------
+        if queue_depth > policy.upscale_threshold and k > 0:
+            if now_s - self.last_upscale_s >= hyst.upscale_cooldown_s:
+                target = k - 1
+                if self.aggressive_descent:
+                    # jump to the slowest (most accurate) config that still
+                    # tolerates the current depth; fall back to the fastest.
+                    target = 0
+                    for j in range(k - 1, -1, -1):
+                        if queue_depth <= self.table.policy(j).upscale_threshold:
+                            target = j
+                            break
+                event = SwitchEvent(
+                    time_s=now_s,
+                    from_index=k,
+                    to_index=target,
+                    queue_depth=queue_depth,
+                    direction="faster",
+                    reason=f"depth {queue_depth} > N_up[{k}]={policy.upscale_threshold}",
+                )
+                self.current_index = target
+                self.last_upscale_s = now_s
+                self._low_since_s = None
+                self.events.append(event)
+                return event
+            return None
+
+        # ---- downscale path: sustained low load -> recover accuracy --------
+        # Condition: the slower configuration can absorb the current queue,
+        # N * s-bar_{k+1} <= Delta_{k+1} - h_s (Eq. 12), i.e. N <= N_k(dn).
+        # The paper states this as strict N < N_k(dn) (Eq. 13); with the
+        # floor that deadlocks the ladder whenever Delta_{k+1} - h_s is below
+        # one mean service time (N_dn = 0 would require depth < 0), which is
+        # exactly the regime of the most accurate rungs under tight SLOs —
+        # so we apply Eq. 12 directly (<=).
+        down = policy.downscale_threshold
+        if down is not None and k + 1 < self.table.ladder_size and queue_depth <= down:
+            if self._low_since_s is None:
+                self._low_since_s = now_s
+            sustained = now_s - self._low_since_s
+            cooled = now_s - self.last_downscale_s >= hyst.downscale_cooldown_s
+            if sustained >= hyst.downscale_cooldown_s and cooled:
+                event = SwitchEvent(
+                    time_s=now_s,
+                    from_index=k,
+                    to_index=k + 1,
+                    queue_depth=queue_depth,
+                    direction="more_accurate",
+                    reason=(
+                        f"depth {queue_depth} < N_dn[{k}]={down} sustained "
+                        f"{sustained:.2f}s"
+                    ),
+                )
+                self.current_index = k + 1
+                self.last_downscale_s = now_s
+                self._low_since_s = now_s  # restart the sustain window per rung
+                self.events.append(event)
+                return event
+        else:
+            self._low_since_s = None
+        return None
+
+    def reset(self) -> None:
+        self.current_index = (
+            self.initial_index
+            if self.initial_index is not None
+            else self.table.ladder_size - 1
+        )
+        self.last_upscale_s = float("-inf")
+        self.last_downscale_s = float("-inf")
+        self._low_since_s = None
+        self.events.clear()

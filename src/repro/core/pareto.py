@@ -1,0 +1,113 @@
+"""Pareto-front construction over (accuracy, latency) (paper §III-A, §V-A).
+
+The Planner profiles each feasible configuration on target hardware and keeps
+only configurations that are not dominated on both dimensions; the resulting
+front is ordered by increasing service time, which by Pareto-optimality implies
+increasing accuracy (Eq. 4: s0 < s1 < ... < sn  =>  a0 < a1 < ... < an).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .space import Config
+
+
+@dataclass(frozen=True)
+class LatencyProfile:
+    """Per-configuration latency statistics measured on target hardware H.
+
+    The paper records percentile-based profiles for LLM components (latency
+    varies with input/output length) and means for traditional components; at
+    the workflow level we keep mean and P95 of end-to-end service time.
+    """
+
+    mean: float        # s-bar_k: mean service time (seconds)
+    p95: float         # s_95,k: tail service time (seconds)
+    p50: float = 0.0
+    std: float = 0.0
+    samples: int = 0
+
+    def __post_init__(self) -> None:
+        if self.mean <= 0 or self.p95 <= 0:
+            raise ValueError(f"latency profile must be positive, got {self}")
+        if self.p95 + 1e-12 < self.mean * 0.5:
+            raise ValueError("implausible profile: p95 far below mean/2")
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    config: Config
+    accuracy: float
+    profile: LatencyProfile
+    meta: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def mean_latency(self) -> float:
+        return self.profile.mean
+
+    @property
+    def p95_latency(self) -> float:
+        return self.profile.p95
+
+
+def pareto_front(points: Sequence[ParetoPoint]) -> List[ParetoPoint]:
+    """Keep non-dominated points (maximize accuracy, minimize mean latency),
+    returned ordered by increasing service time (Eq. 4).
+
+    A point is dominated if some other point has (accuracy >=, latency <=)
+    with at least one strict inequality.  Ties on both axes keep the first.
+    """
+    ordered = sorted(points, key=lambda p: (p.profile.mean, -p.accuracy))
+    front: List[ParetoPoint] = []
+    best_acc = float("-inf")
+    seen: set = set()
+    for p in ordered:
+        key = (round(p.profile.mean, 12), round(p.accuracy, 12))
+        if key in seen:
+            continue
+        if p.accuracy > best_acc:
+            front.append(p)
+            best_acc = p.accuracy
+            seen.add(key)
+    return front
+
+
+def thin_front(
+    front: Sequence[ParetoPoint],
+    *,
+    min_accuracy_gap: float = 0.0,
+) -> List[ParetoPoint]:
+    """Thin a dense Pareto front to operationally distinct rungs.
+
+    Real fronts contain near-duplicate points (accuracy within noise at
+    nearly identical latency).  Switching between them buys nothing and
+    bloats the policy ladder, so the Planner keeps a point only when it
+    improves accuracy by at least ``min_accuracy_gap`` over the previous kept
+    rung.  The fastest point is always kept; the most accurate point is
+    always kept so the ladder's top rung remains the true quality optimum.
+    """
+    if not front:
+        return []
+    kept: List[ParetoPoint] = [front[0]]
+    for p in front[1:-1]:
+        if p.accuracy - kept[-1].accuracy >= min_accuracy_gap:
+            kept.append(p)
+    if len(front) > 1:
+        top = front[-1]
+        if top.accuracy > kept[-1].accuracy:
+            kept.append(top)
+        elif len(kept) > 1 and top.accuracy <= kept[-1].accuracy:
+            pass
+    return kept
+
+
+def validate_front(front: Sequence[ParetoPoint]) -> None:
+    """Assert the paper's ladder invariants (Eq. 4 and the implied accuracy
+    ordering): strictly increasing service time and accuracy."""
+    for a, b in zip(front, front[1:]):
+        if not b.profile.mean > a.profile.mean:
+            raise AssertionError("front not strictly increasing in mean latency")
+        if not b.accuracy > a.accuracy:
+            raise AssertionError("front not strictly increasing in accuracy")

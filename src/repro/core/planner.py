@@ -1,0 +1,132 @@
+"""Planner: deployment planning for a feasible set (paper §III-A, §V).
+
+The Planner takes the feasible set F from COMPASS-V, profiles each
+configuration's end-to-end latency on the target hardware H using
+representative inputs from the dataset, constructs the Pareto front over
+(accuracy, latency), and derives AQM switching policies for the latency SLO.
+Task optimization is hardware-independent and reusable; only this stage
+re-runs when the deployment target changes.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .aqm import AQMPolicyTable, HysteresisSpec, derive_policies
+from .pareto import LatencyProfile, ParetoPoint, pareto_front, thin_front
+from .space import Config
+
+
+class LatencyProfiler:
+    """Protocol-ish: callable returning per-request service-time samples (s)
+    for a configuration on the target hardware."""
+
+    def __call__(self, config: Config, num_samples: int) -> Sequence[float]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def summarize_latencies(samples: Sequence[float]) -> LatencyProfile:
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError("no latency samples")
+    if any(x <= 0 for x in xs):
+        raise ValueError("latency samples must be positive")
+
+    def pct(q: float) -> float:
+        if len(xs) == 1:
+            return xs[0]
+        pos = q * (len(xs) - 1)
+        lo = int(math.floor(pos))
+        hi = min(lo + 1, len(xs) - 1)
+        frac = pos - lo
+        return xs[lo] * (1 - frac) + xs[hi] * frac
+
+    return LatencyProfile(
+        mean=sum(xs) / len(xs),
+        p95=pct(0.95),
+        p50=pct(0.50),
+        std=statistics.pstdev(xs) if len(xs) > 1 else 0.0,
+        samples=len(xs),
+    )
+
+
+@dataclass
+class DeploymentPlan:
+    """Planner output: the Pareto front plus switching policies (the 'ordered
+    set of configurations with their accuracy, latency profiles, and switching
+    policies' of §III-A)."""
+
+    front: Tuple[ParetoPoint, ...]
+    table: AQMPolicyTable
+    profiled: Dict[Config, LatencyProfile]
+    dominated: Tuple[ParetoPoint, ...]
+
+    def describe(self) -> str:
+        lines = [
+            f"SLO p95 = {self.table.slo_p95_s * 1e3:.0f} ms, "
+            f"ladder of {self.table.ladder_size} configs "
+            f"({len(self.dominated)} dominated, {len(self.table.excluded)} infeasible for SLO)"
+        ]
+        for pol in self.table.policies:
+            p = pol.point
+            lines.append(
+                f"  [{pol.index}] acc={p.accuracy:.3f} mean={p.profile.mean * 1e3:.1f}ms "
+                f"p95={p.profile.p95 * 1e3:.1f}ms N_up={pol.upscale_threshold} "
+                f"N_dn={pol.downscale_threshold}"
+            )
+        return "\n".join(lines)
+
+
+@dataclass
+class Planner:
+    """Profiles feasible configurations and derives the switching plan.
+
+    Parameters
+    ----------
+    profiler: measures per-request service times for a config on hardware H.
+    profile_samples: number of representative requests per configuration.
+    slack_buffer_s: h_s in Eq. 13.
+    hysteresis: asymmetric cooldown spec (§V-F).
+    """
+
+    profiler: Callable[[Config, int], Sequence[float]]
+    profile_samples: int = 40
+    slack_buffer_s: float = 0.050
+    min_accuracy_gap: float = 0.01
+    hysteresis: HysteresisSpec = field(default_factory=HysteresisSpec)
+
+    def plan(
+        self,
+        feasible: Dict[Config, float],
+        *,
+        slo_p95_s: float,
+    ) -> DeploymentPlan:
+        if not feasible:
+            raise ValueError("empty feasible set: nothing to plan")
+        profiled: Dict[Config, LatencyProfile] = {}
+        points: List[ParetoPoint] = []
+        for config, acc in feasible.items():
+            prof = summarize_latencies(self.profiler(config, self.profile_samples))
+            profiled[config] = prof
+            points.append(ParetoPoint(config=config, accuracy=acc, profile=prof))
+
+        front = thin_front(pareto_front(points), min_accuracy_gap=self.min_accuracy_gap)
+        # identify dominated/thinned points for reporting
+        front_keys = {(p.config) for p in front}
+        dominated = tuple(p for p in points if p.config not in front_keys)
+
+        table = derive_policies(
+            front,
+            slo_p95_s=slo_p95_s,
+            slack_buffer_s=self.slack_buffer_s,
+            hysteresis=self.hysteresis,
+        )
+        return DeploymentPlan(
+            front=tuple(front),
+            table=table,
+            profiled=profiled,
+            dominated=dominated,
+        )

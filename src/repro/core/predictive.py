@@ -1,0 +1,76 @@
+"""Predictive (anticipatory) adaptation — the paper's stated future work.
+
+Paper §VIII: "the AQM ... reacts to load changes after they occur.  Replacing
+the reactive model with predictive adaptation could enable anticipatory
+switching before queue buildup causes SLO violations."
+
+``PredictiveElastico`` implements that extension using only the signals the
+reactive controller already receives (queue depth + time), so it drops into
+the simulator and the threaded engine unchanged: it maintains an EWMA of the
+queue *growth rate* dN/dt (= lambda - mu while saturated) from successive
+observations and evaluates the AQM upscale condition on the projected depth
+
+    N_projected = N + max(0, dN/dt) * horizon_s
+
+instead of the instantaneous N.  Under a load spike the queue's first few
+observations already show dN/dt > 0, so the controller descends the ladder
+one control-tick earlier per rung — before the backlog itself crosses the
+threshold.  Downscale decisions stay purely reactive (they are already
+guarded by sustained-low-load hysteresis; predicting *down* would fight it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .elastico import ElasticoController, SwitchEvent
+
+
+@dataclass
+class PredictiveElastico(ElasticoController):
+    """Elastico with queue-derivative lookahead on the upscale path.
+
+    Parameters
+    ----------
+    horizon_s: how far ahead to project the queue depth.  Values near the
+        control tick x ladder depth work well; 0 reduces exactly to the
+        reactive controller.
+    rate_halflife_s: EWMA halflife for the dN/dt estimate.
+    """
+
+    horizon_s: float = 1.0
+    rate_halflife_s: float = 2.0
+
+    _last_depth: Optional[int] = field(init=False, default=None)
+    _last_time_s: Optional[float] = field(init=False, default=None)
+    _rate: float = field(init=False, default=0.0)
+
+    def observe(self, queue_depth: int, now_s: float) -> Optional[SwitchEvent]:
+        if queue_depth < 0:
+            raise ValueError("negative queue depth")
+        # update dN/dt EWMA
+        if self._last_time_s is not None:
+            dt = now_s - self._last_time_s
+            if dt > 1e-9:
+                inst = (queue_depth - self._last_depth) / dt
+                alpha = 1.0 - 0.5 ** (dt / max(self.rate_halflife_s, 1e-9))
+                self._rate += alpha * (inst - self._rate)
+        self._last_depth = queue_depth
+        self._last_time_s = now_s
+
+        projected = queue_depth + max(0.0, self._rate) * self.horizon_s
+        k = self.current_index
+        policy = self.table.policy(k)
+        if projected > policy.upscale_threshold and queue_depth <= policy.upscale_threshold:
+            # anticipatory: the backlog will cross N_up within the horizon —
+            # act now.  Use the projected depth for the (possibly aggressive)
+            # target selection, but never below the real depth.
+            return super().observe(int(projected), now_s)
+        return super().observe(queue_depth, now_s)
+
+    def reset(self) -> None:
+        super().reset()
+        self._last_depth = None
+        self._last_time_s = None
+        self._rate = 0.0

@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, SyntheticLM, stub_frontend_batch
+
+__all__ = ["DataConfig", "SyntheticLM", "stub_frontend_batch"]

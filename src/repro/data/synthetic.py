@@ -1,0 +1,100 @@
+"""Synthetic data pipeline: deterministic token streams with learnable
+structure, batching, and host-side sharding.
+
+The training substrate needs data a model can actually learn (loss must go
+down for the train-100M example), so the stream is a mixture of:
+
+  - order-k Markov chains over the vocab (local structure),
+  - copy spans ("needle" patterns: a marker token, a payload, and a later
+    re-quote of the payload) — the same pattern the RAG workflow's tiny
+    generators are trained on,
+  - uniform noise for regularization.
+
+Everything is generated on the fly from a counter-based RNG: no files, fully
+reproducible, infinite.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    markov_order: int = 2
+    copy_fraction: float = 0.3     # fraction of sequences with copy spans
+    noise_fraction: float = 0.05
+    seed: int = 0
+
+
+class SyntheticLM:
+    """Deterministic synthetic language-model stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        # sparse-ish Markov transition table: each context maps to a small
+        # set of likely successors (keeps the task learnable by tiny models)
+        self._n_contexts = min(4096, v * 4)
+        self._succ = rng.integers(0, v, size=(self._n_contexts, 4))
+        self._marker = 1  # token id used as the copy marker
+
+    def _context_id(self, a: int, b: int) -> int:
+        return (a * 31 + b * 7) % self._n_contexts
+
+    def sample_sequence(self, rng: np.random.Generator) -> np.ndarray:
+        cfg = self.cfg
+        v, s = cfg.vocab_size, cfg.seq_len
+        out = np.empty(s + 1, dtype=np.int64)
+        out[0] = rng.integers(2, v)
+        out[1] = rng.integers(2, v)
+        for t in range(2, s + 1):
+            if rng.random() < cfg.noise_fraction:
+                out[t] = rng.integers(2, v)
+            else:
+                ctx = self._context_id(int(out[t - 2]), int(out[t - 1]))
+                out[t] = self._succ[ctx, rng.integers(0, 4)]
+        if rng.random() < cfg.copy_fraction and s >= 32:
+            # plant a copy task: marker payload ... marker payload
+            span = int(rng.integers(4, 9))
+            start = int(rng.integers(2, s // 2 - span - 1))
+            payload = rng.integers(2, v, size=span)
+            out[start] = self._marker
+            out[start + 1 : start + 1 + span] = payload
+            echo = int(rng.integers(s // 2, s - span - 1))
+            out[echo] = self._marker
+            out[echo + 1 : echo + 1 + span] = payload
+        return out
+
+    def batches(self, *, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        """Yield {"tokens": (B, S), "labels": (B, S)} batches, deterministic
+        per step index (resume-safe: checkpoint stores only the step)."""
+        cfg = self.cfg
+        step = start_step
+        while True:
+            rng = np.random.default_rng((cfg.seed, step))
+            seqs = np.stack(
+                [self.sample_sequence(rng) for _ in range(cfg.global_batch)]
+            )
+            yield {
+                "tokens": seqs[:, :-1].astype(np.int32),
+                "labels": seqs[:, 1:].astype(np.int32),
+            }
+            step += 1
+
+
+def stub_frontend_batch(
+    kind: str, batch: int, seq: int, dim: int, *, seed: int = 0
+) -> np.ndarray:
+    """Precomputed frame/patch embeddings for the stubbed modality frontends
+    (the one permitted stub: we implement the language backbone, not the
+    ViT / conv codec)."""
+    rng = np.random.default_rng((hash(kind) & 0xFFFF, seed))
+    return rng.standard_normal((batch, seq, dim)).astype(np.float32)

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the serving/training hot spots.
+
+Each kernel package: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ``ops.py`` (jitted wrapper; interpret mode on CPU), ``ref.py``
+(pure-jnp oracle used by the allclose test sweeps).
+
+- flash_attention: blockwise online-softmax attention (prefill/train)
+- decode_attention: flash-decode GQA single-token attention over KV cache
+- ssm_scan: fused Mamba-style selective-scan recurrence
+- rmsnorm: fused normalization
+"""
+
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention
+from .rmsnorm import rmsnorm, rmsnorm_ref
+from .ssm_scan import ssm_scan, ssm_scan_ref
+
+__all__ = [
+    "decode_attention",
+    "decode_attention_ref",
+    "attention_ref",
+    "flash_attention",
+    "rmsnorm",
+    "rmsnorm_ref",
+    "ssm_scan",
+    "ssm_scan_ref",
+]

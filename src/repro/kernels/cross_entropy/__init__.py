@@ -1,0 +1,4 @@
+from .ops import cross_entropy
+from .ref import cross_entropy_ref
+
+__all__ = ["cross_entropy", "cross_entropy_ref"]

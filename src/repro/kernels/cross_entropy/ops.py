@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the chunked cross-entropy kernel.
+
+On CPU (this container) the kernel executes in interpret mode — the kernel
+body runs as Python/jnp per grid step, proving correctness of the exact TPU
+program.  On a TPU backend the same call compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .kernel import cross_entropy_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    block_t: int = 256,
+    block_v: int = 2048,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Per-token CE loss without materializing (T, V) fp32.  (T, V) x (T,)
+    -> (T,) float32."""
+    interp = _on_cpu() if interpret is None else interpret
+    return cross_entropy_pallas(
+        logits, labels, block_t=block_t, block_v=block_v, interpret=interp
+    )

@@ -1,0 +1,128 @@
+"""GQA single-token decode attention (flash-decode style) as a Pallas kernel.
+
+The serving hot path: one query token per sequence against a long KV cache.
+Grid: ``(batch, kv_heads, num_kv_blocks)`` — the last dimension walks the
+cache sequentially while (m, l, acc) statistics accumulate in VMEM scratch.
+All ``G = H / KV`` query heads of a kv group are processed together as a
+(G, hd) tile, so the MXU sees a (G, hd) x (hd, bk) matmul per block rather
+than G vector products.
+
+The cache is a ring buffer (see ``repro.models.attention.KVCache``): slots
+``>= length`` are masked out.  ``length`` arrives as a scalar-prefetch-style
+operand (an int32 array) so the same compiled kernel serves any fill level.
+
+VMEM per step: k,v (bk, hd) + q (G, hd) + acc (G, hd) + scores (G, bk);
+bk=1024, hd<=256, G<=32 is well under budget; hd and bk are 128-multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(
+    length_ref,                       # (1,1) int32 in SMEM-like memory
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    block_k: int,
+    scale: float,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                              # (G, bk)
+
+    length = length_ref[0, 0]
+    slot = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(slot < length, scores, NEG_INF)
+
+    m_prev, l_prev = m_scratch[...], l_scratch[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, H, hd) — one token per sequence
+    k: jax.Array,          # (B, S, KV, hd) ring-buffer cache
+    v: jax.Array,
+    length,                # () or (B,) int32 — valid cache entries
+    *,
+    scale: Optional[float] = None,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    if h % kv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kv}")
+    g = h // kv
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"cache len {s} must divide block_k {block_k}")
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nk = s // block_k
+
+    # regroup q: (B, KV, G, hd); cache to (B, KV, S, hd)
+    qg = q.reshape(b, kv, g, hd)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    length_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1, 1))
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, j, ik: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, j, ik: (b_, j, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, j, ik: (b_, j, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, j, ik: (b_, j, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, j, ik: (b_, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length_arr, qg, kt, vt)
+    return out.reshape(b, h, hd)

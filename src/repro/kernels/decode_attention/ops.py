@@ -1,0 +1,33 @@
+"""Jitted wrapper for the decode-attention kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import decode_attention as _kernel
+from .ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length,
+    *,
+    block_k: int = 1024,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One-token GQA decode.  q: (B, H, hd); cache k/v: (B, S, KV, hd)."""
+    interp = _on_cpu() if interpret is None else interpret
+    return _kernel(q, k, v, length, block_k=block_k, interpret=interp)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, hd)
+    k: jax.Array,          # (B, S, KV, hd)
+    v: jax.Array,
+    length,                # () int32
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    kt = k.swapaxes(1, 2).astype(jnp.float32)          # (B, KV, S, hd)
+    vt = v.swapaxes(1, 2).astype(jnp.float32)
+    scores = jnp.einsum("bjgd,bjsd->bjgs", qg, kt) * scale
+    valid = jnp.arange(s)[None, None, None, :] < jnp.asarray(length, jnp.int32)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bjgs,bjsd->bjgd", probs, vt)
+    return out.reshape(b, h, hd).astype(q.dtype)

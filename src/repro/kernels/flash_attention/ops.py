@@ -1,0 +1,47 @@
+"""Jitted public wrapper for flash attention.
+
+On CPU (this container) the kernel executes in interpret mode — the kernel
+body runs as Python/jnp per grid step, proving correctness of the exact TPU
+program.  On a TPU backend the same call compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention as _kernel
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Blockwise attention.  q: (B, H, S, hd); k, v: (B, KV, S, hd)."""
+    interp = _on_cpu() if interpret is None else interpret
+    return _kernel(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=interp,
+    )
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    group = h // kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with exotic windows) -> zeros
+    probs = jnp.where(mask.any(-1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

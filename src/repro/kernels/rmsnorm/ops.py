@@ -1,0 +1,36 @@
+"""Jitted wrapper for the RMSNorm kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import rmsnorm as _kernel
+from .ref import rmsnorm_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """RMSNorm over the last dim.  Accepts (..., D); leading dims flattened."""
+    interp = _on_cpu() if interpret is None else interpret
+    shape = x.shape
+    y = _kernel(x.reshape(-1, shape[-1]), weight, eps=eps,
+                block_rows=min(block_rows, max(1, x.size // shape[-1])),
+                interpret=interp)
+    return y.reshape(shape)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

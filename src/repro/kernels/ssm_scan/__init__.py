@@ -1,0 +1,4 @@
+from .ops import ssm_scan
+from .ref import ssm_scan_ref
+
+__all__ = ["ssm_scan", "ssm_scan_ref"]

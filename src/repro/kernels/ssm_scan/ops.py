@@ -1,0 +1,33 @@
+"""Jitted wrapper for the fused selective scan (interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import ssm_scan as _kernel
+from .ref import ssm_scan_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "time_chunk", "interpret"))
+def ssm_scan(
+    decay: jax.Array,
+    drive: jax.Array,
+    c: jax.Array,
+    *,
+    block_d: int = 128,
+    time_chunk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interp = _on_cpu() if interpret is None else interpret
+    return _kernel(decay, drive, c, block_d=block_d, time_chunk=time_chunk,
+                   interpret=interp)
+
+
+__all__ = ["ssm_scan", "ssm_scan_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(decay: jax.Array, drive: jax.Array, c: jax.Array) -> jax.Array:
+    """decay/drive: (B, T, di, N); c: (B, T, N) -> y: (B, T, di)."""
+    def step(h, inputs):
+        dec_t, drv_t, c_t = inputs
+        h = dec_t * h + drv_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    b, t, di, n = decay.shape
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (decay.astype(jnp.float32).swapaxes(0, 1),
+         drive.astype(jnp.float32).swapaxes(0, 1),
+         c.astype(jnp.float32).swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).astype(decay.dtype)

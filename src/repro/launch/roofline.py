@@ -1,0 +1,282 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs            / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips * 819 GB/s HBM)
+  collective = collective_bytes     / (chips * 50 GB/s/link ICI)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs / bytes (XLA reports
+whole-program totals for the SPMD program = per-device work; we multiply by
+device count to get global and divide back — i.e. use them per-chip
+directly).  Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD HLO text and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(for reduce-scatter the operand is group_size x result; we use the operand
+estimate).  This is "logical bytes entering the interconnect per chip per
+step" — algorithm factors (ring 2(n-1)/n etc.) are noted, not applied.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step; the ratio
+MODEL_FLOPS / HLO_FLOPs flags remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)[^\n]*?(?:condition=%?([\w.\-]+))[^\n]*?(?:body=%?([\w.\-]+))"
+)
+_WHILE_RE_BC = re.compile(
+    r"\bwhile\(.*?\)[^\n]*?(?:body=%?([\w.\-]+))[^\n]*?(?:condition=%?([\w.\-]+))"
+)
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Split HLO module text into {computation_name: [lines]}."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMPUTATION_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _while_edges(comps: Dict[str, List[str]]) -> List[Tuple[str, str, int]]:
+    """(caller_computation, body_computation, trip_count) for every while.
+
+    Trip count heuristic: the largest integer constant in the loop condition
+    computation (scan conditions compare the induction var against the
+    length).  Falls back to 1 when unparseable (undercounts, never over).
+    """
+    edges: List[Tuple[str, str, int]] = []
+    for caller, lines in comps.items():
+        for line in lines:
+            if " while(" not in line and "while(" not in line.strip():
+                continue
+            m = _WHILE_RE.search(line)
+            cond = body = None
+            if m:
+                cond, body = m.group(1), m.group(2)
+            else:
+                m = _WHILE_RE_BC.search(line)
+                if m:
+                    body, cond = m.group(1), m.group(2)
+            if not body:
+                continue
+            trip = 1
+            if cond and cond in comps:
+                consts = [int(c) for ln in comps[cond] for c in _CONST_RE.findall(ln)]
+                if consts:
+                    trip = max(consts)
+            edges.append((caller, body, max(1, trip)))
+    return edges
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: Optional[str] = None
+                 ) -> Dict[str, int]:
+    """Execution multiplier per computation, following while nesting."""
+    edges = _while_edges(comps)
+    mult: Dict[str, int] = {c: 1 for c in comps}
+    # propagate: body multiplier = caller multiplier * trip, iterate to fix
+    for _ in range(8):  # nesting depth bound
+        changed = False
+        for caller, body, trip in edges:
+            want = mult.get(caller, 1) * trip
+            if mult.get(body, 1) < want:
+                mult[body] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective data sizes from (post-SPMD, optimized) HLO text.
+
+    Collectives inside scan/while bodies are multiplied by the loop trip
+    count (XLA cost_analysis does NOT do this — verified; see
+    :mod:`repro.launch.analytic`).
+    """
+    comps = _split_computations(hlo_text)
+    mults = _multipliers(comps)
+    stats = CollectiveStats()
+    for comp_name, lines in comps.items():
+        mult = mults.get(comp_name, 1)
+        for raw in lines:
+            stripped = raw.strip()
+            m = re.match(r"^(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$", stripped)
+            if not m:
+                continue
+            rhs = m.group(2)
+            kind = None
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", rhs):
+                    kind = c
+                    break
+            if kind is None:
+                continue
+            result_part = rhs.split(kind)[0]
+            size = sum(
+                _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_part)
+            )
+            if kind == "reduce-scatter":
+                g = _GROUPS_RE.search(rhs)
+                group = len(g.group(1).split(",")) if g else 1
+                size *= max(1, group)
+            size *= mult
+            stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + size
+            stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + mult
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # analytic (trip-count-exact) global costs per step
+    analytic_flops: float
+    analytic_bytes: float
+    # raw XLA cost_analysis (per-device SPMD program; scan bodies counted ONCE)
+    xla_flops_raw: float
+    xla_bytes_raw: float
+    # collective bytes per device per step (HLO parse, trip-count corrected)
+    collective_bytes: float
+    model_flops: float             # useful-FLOPs floor: 6*N_active*D / 2*N*D
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_flops_ratio: float      # model_flops / analytic_flops
+    collectives: Dict[str, int]
+    memory_per_device: Dict[str, float] = field(default_factory=dict)
+    compile_s: float = 0.0
+    note: str = ""
+
+    def dominant_term_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    model_flops: float,
+    analytic_flops: float,
+    analytic_bytes: float,
+    memory_stats: Optional[Dict[str, float]] = None,
+    compile_s: float = 0.0,
+    note: str = "",
+) -> RooflineReport:
+    """Three-term roofline.  compute/memory terms use the analytic model
+    (global / chips); the collective term uses the corrected HLO parse (the
+    SPMD program is per-device, so parsed bytes are already per-chip)."""
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+
+    compute_s = (analytic_flops / chips) / PEAK_FLOPS_BF16
+    memory_s = (analytic_bytes / chips) / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    ratio = model_flops / analytic_flops if analytic_flops > 0 else float("nan")
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        analytic_flops=analytic_flops,
+        analytic_bytes=analytic_bytes,
+        xla_flops_raw=xla_flops,
+        xla_bytes_raw=xla_bytes,
+        collective_bytes=float(coll.total_bytes),
+        model_flops=model_flops,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_flops_ratio=ratio,
+        collectives=dict(coll.bytes_by_kind),
+        memory_per_device=memory_stats or {},
+        compile_s=compile_s,
+        note=note,
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    *, decoder_len: Optional[int] = None) -> float:
+    """6*N*D rule (3x forward for train: fwd + bwd = 3x2ND; serve: 2*N*D per
+    token).  MoE uses active params.  D = processed tokens per step."""
+    n_active = cfg_active_params(cfg)
+    if shape_kind == "train":
+        tokens = global_batch * (decoder_len or seq_len)
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = global_batch * (decoder_len or seq_len)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+_active_cache: Dict[str, float] = {}
+
+
+def cfg_active_params(cfg) -> float:
+    key = cfg.arch_id + str(cfg.num_layers) + str(cfg.d_model)
+    if key not in _active_cache:
+        _active_cache[key] = float(cfg.active_param_count())
+    return _active_cache[key]

@@ -1,0 +1,16 @@
+"""Model substrate: all assigned architecture families in functional JAX."""
+
+from .common import ModelConfig, ParamSpec
+from .model import Model
+from .registry import arch_ids, build_model, get_config, get_model, register_arch
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "Model",
+    "arch_ids",
+    "build_model",
+    "get_config",
+    "get_model",
+    "register_arch",
+]

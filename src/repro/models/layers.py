@@ -1,0 +1,172 @@
+"""Shared neural-net layers: RMSNorm, RoPE, gated MLPs, embeddings."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec(shape=(d,), axes=(None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation (TPU-safe for bf16 activations)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi": ParamSpec((d, f), ("embed", "mlp"), "scaled"),
+            "wg": ParamSpec((d, f), ("embed", "mlp"), "scaled"),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), "scaled"),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp"), "scaled"),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), "scaled"),
+    }
+
+
+def mlp_apply(params: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    specs: Dict[str, ParamSpec] = {
+        "embedding": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", 1.0
+        ),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tied_embeddings:
+        specs["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "scaled"
+        )
+    return specs
+
+
+def embed_tokens(params: Dict[str, jax.Array], tokens: jax.Array,
+                 dtype: jnp.dtype) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from ..sharding.planner import shard_hint
+
+    # Pin the residual stream entering the unembed to batch-sharded layout.
+    # Under FSDP rules GSPMD otherwise prefers to keep activations sharded on
+    # the hidden dim over 'data' (avoiding per-layer weight gathers) and pays
+    # a full-batch fp32 logits all-reduce here instead (§Perf pair B).
+    if cfg.act_hints:
+        x = shard_hint(x, ["batch"] + [None] * (x.ndim - 1))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tied_embeddings:
+        logits = x @ params["embedding"].astype(x.dtype).T
+    else:
+        logits = x @ params["unembed"].astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    # Pin the logits layout (batch over data axes, vocab over model): without
+    # this GSPMD may split the unembed contraction over 'data' and pay a
+    # full-logits fp32 all-reduce (measured 67 GB/chip, §Perf pair B).
+    # No-op outside a mesh context.
+    from ..sharding.planner import shard_hint
+
+    if not cfg.act_hints:
+        return logits
+    spec = ["batch"] + [None] * (logits.ndim - 2) + ["model"]
+    return shard_hint(logits, spec)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       *, z_loss: float = 1e-4, sharded: bool = False) -> jax.Array:
+    """Mean token-level cross entropy with an optional z-loss regularizer
+    (stabilizes the logit scale on long runs; standard in production LMs).
+
+    ``sharded=False`` — the straightforward formulation: cast the full logits
+    to fp32 and gather the gold logit with ``take_along_axis``.  Under GSPMD
+    with the vocab axis tensor-parallel this forces an all-gather of the fp32
+    logits over the 'model' axis (and a matching scatter in the backward
+    pass): ~4 bytes x tokens x vocab per chip — the dominant collective for
+    big-vocab archs (§Perf pair B).
+
+    ``sharded=True`` — GSPMD-friendly formulation: every reduction over the
+    vocab axis is a proper reduce (max / sum-exp / one-hot dot), so the
+    partitioner lowers them to (B, S)-sized all-reduces instead of gathering
+    logits.  The one-hot product is fused into the reduction and its backward
+    is a local scatter.  Numerically identical math (max-shifted logsumexp,
+    fp32 accumulation).
+    """
+    if not sharded:
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    else:
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))          # (B, S)
+        shifted = logits - m[..., None].astype(logits.dtype)
+        sumexp = jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)
+        lse = m.astype(jnp.float32) + jnp.log(sumexp)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum(
+            "...v,...v->...", logits, onehot,
+            preferred_element_type=jnp.float32,
+        )
+    loss = (lse - gold).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss

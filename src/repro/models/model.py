@@ -1,0 +1,271 @@
+"""The Model facade: init / forward / loss / prefill / decode for every
+architecture family, built from a :class:`ModelConfig`.
+
+Parameter tree layout::
+
+  {
+    "embed":    {embedding, final_norm, unembed?},
+    "decoder":  [segment_0, segment_1, ...],        # stacked (repeat, count, ...)
+    "encoder":  [...],                              # encdec / audio only
+    "frontend": {proj}                              # stubbed modality projector
+  }
+
+Batch conventions (what :func:`repro.launch.dryrun.input_specs` produces):
+
+  decoder-only train:  {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm train:           {"patch_embeds": (B,P,prefix_dim), "tokens": (B,S_t), "labels": (B,S_t)}
+  encdec train:        {"frames": (B,S_enc,prefix_dim), "tokens": (B,S_dec), "labels": (B,S_dec)}
+  prefill:             same minus labels
+  decode:              state + {"token": (B,) i32, "position": () i32}
+
+``labels[t]`` is the target for output position ``t`` (callers pre-shift).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .common import (
+    ModelConfig,
+    ParamSpec,
+    abstract_params as _abstract,
+    init_params as _init,
+    logical_axes as _axes,
+)
+from .layers import cross_entropy_loss, embed_specs, embed_tokens, unembed
+from .transformer import (
+    Layout,
+    derive_layout,
+    run_stack_decode,
+    run_stack_prefill,
+    run_stack_seq,
+    _segment_specs,
+)
+
+
+def _cast_floats(tree: Any, dtype) -> Any:
+    """Cast floating-point leaves to the activation dtype (params are kept in
+    ``param_dtype`` for the optimizer; compute runs in ``dtype``).  Norm
+    scales and router/ssm-decay weights re-upcast internally where needed."""
+    def cast(a):
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+            return a.astype(dtype)
+        return a
+
+    return jax.tree.map(cast, tree)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- structure -----------------------------------------------------------
+
+    @property
+    def decoder_layout(self) -> Layout:
+        return derive_layout(self.cfg)
+
+    @property
+    def encoder_layout(self) -> Optional[Layout]:
+        if self.cfg.encoder_layers > 0:
+            return (1, [("encoder", self.cfg.encoder_layers)])
+        return None
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {"embed": embed_specs(cfg)}
+        dec_specs = _segment_specs(cfg, self.decoder_layout)
+        if cfg.family == "moe" and cfg.first_dense_layers > 0:
+            # leading dense layers (DeepSeek-MoE): separate unstacked segment
+            d_ff = cfg.dense_ff or cfg.d_ff
+            first = _segment_specs(
+                cfg, (1, [("dense", cfg.first_dense_layers)]), d_ff=d_ff
+            )
+            specs["first_dense"] = first
+        specs["decoder"] = dec_specs
+        if self.encoder_layout is not None:
+            specs["encoder"] = _segment_specs(cfg, self.encoder_layout)
+        if cfg.prefix_dim > 0:
+            specs["frontend"] = {
+                "proj": ParamSpec(
+                    (cfg.prefix_dim, cfg.d_model), ("frontend", "embed"), "scaled"
+                )
+            }
+        return specs
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        return _init(self.param_specs(), key, self.cfg.parameter_dtype)
+
+    def abstract_params(self) -> Dict[str, Any]:
+        return _abstract(self.param_specs(), self.cfg.parameter_dtype)
+
+    def logical_axes(self) -> Dict[str, Any]:
+        return _axes(self.param_specs())
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _embed_inputs(self, params: Dict, batch: Dict) -> Tuple[jax.Array, int]:
+        """Token + (optional) prefix embedding.  Returns (x, prefix_len)."""
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        x = embed_tokens(params["embed"], batch["tokens"], dtype)
+        prefix_len = 0
+        if cfg.family == "vlm":
+            prefix = (
+                batch["patch_embeds"].astype(dtype)
+                @ params["frontend"]["proj"].astype(dtype)
+            )
+            x = jnp.concatenate([prefix, x], axis=1)
+            prefix_len = prefix.shape[1]
+        return x, prefix_len
+
+    def _encode(self, params: Dict, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        enc_x = (
+            batch["frames"].astype(dtype)
+            @ params["frontend"]["proj"].astype(dtype)
+        )
+        enc_out, _ = run_stack_seq(
+            params["encoder"], enc_x, cfg, self.encoder_layout
+        )
+        return enc_out
+
+    def _first_dense(self, params: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        if "first_dense" not in params:
+            return x, jnp.zeros((), jnp.float32)
+        return run_stack_seq(
+            params["first_dense"], x, self.cfg,
+            (1, [("dense", self.cfg.first_dense_layers)]),
+        )
+
+    # -- forward / loss ---------------------------------------------------------
+
+    def forward(self, params: Dict, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        params = _cast_floats(params, cfg.activation_dtype)
+        x, prefix_len = self._embed_inputs(params, batch)
+        enc_out = None
+        if self.encoder_layout is not None:
+            enc_out = self._encode(params, batch)
+        x, aux0 = self._first_dense(params, x)
+        x, aux = run_stack_seq(
+            params["decoder"], x, cfg, self.decoder_layout,
+            prefix_len=prefix_len if cfg.prefix_lm else 0,
+            enc_out=enc_out,
+        )
+        if prefix_len:
+            x = x[:, prefix_len:, :]          # logits only over text positions
+        logits = unembed(params["embed"], x, cfg)
+        return logits, aux + aux0
+
+    def loss(self, params: Dict, batch: Dict, *, aux_weight: float = 0.01) -> jax.Array:
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy_loss(
+            logits, batch["labels"], sharded=self.cfg.sharded_ce
+        )
+        return ce + aux_weight * aux
+
+    # -- serving paths ------------------------------------------------------------
+
+    def cache_len_for(self, max_len: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window > 0:
+            return min(cfg.sliding_window, max_len)
+        return max_len
+
+    def prefill(self, params: Dict, batch: Dict, *, cache_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Prefill: forward over the prompt, build decode state, return the
+        last-position logits and the state."""
+        cfg = self.cfg
+        params = _cast_floats(params, cfg.activation_dtype)
+        x, prefix_len = self._embed_inputs(params, batch)
+        enc_out = None
+        if self.encoder_layout is not None:
+            enc_out = self._encode(params, batch)
+        seq_len = x.shape[1]
+        c_len = cache_len if cache_len is not None else self.cache_len_for(seq_len)
+        fd_states = None
+        if "first_dense" in params:
+            x, fd_states = run_stack_prefill(
+                params["first_dense"], x, cfg,
+                (1, [("dense", cfg.first_dense_layers)]), cache_len=c_len,
+            )
+        y, seg_states = run_stack_prefill(
+            params["decoder"], x, cfg, self.decoder_layout,
+            cache_len=c_len,
+            prefix_len=prefix_len if cfg.prefix_lm else 0,
+            enc_out=enc_out,
+        )
+        logits = unembed(params["embed"], y[:, -1:, :], cfg)[:, 0, :]
+        state = {
+            "segments": seg_states,
+            "first_dense": fd_states,
+            "position": jnp.asarray(seq_len, jnp.int32),
+        }
+        return logits, state
+
+    def init_decode_state(self, batch_size: int, cache_len: int,
+                          *, enc_len: int = 0, position: int = 0) -> Dict[str, Any]:
+        """Fresh (or shape-only, via jax.eval_shape) decode state."""
+        cfg = self.cfg
+        repeat, pattern = self.decoder_layout
+        dtype = cfg.activation_dtype
+
+        segs: List[Any] = []
+        for block_type, count in pattern:
+            one = blocks.block_init_state(
+                cfg, block_type, batch_size, cache_len, dtype, enc_len=enc_len
+            )
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (repeat, count) + a.shape), one
+            )
+            segs.append(stacked)
+        fd_states = None
+        if cfg.family == "moe" and cfg.first_dense_layers > 0:
+            one = blocks.block_init_state(cfg, "dense", batch_size, cache_len, dtype)
+            fd_states = [jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (1, cfg.first_dense_layers) + a.shape
+                ), one
+            )]
+        return {
+            "segments": segs,
+            "first_dense": fd_states,
+            "position": jnp.asarray(position, jnp.int32),
+        }
+
+    def decode_step(self, params: Dict, state: Dict, token: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One decode step.  token: (B,) int32.  Returns ((B, V) logits,
+        new state)."""
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        params = _cast_floats(params, dtype)
+        x = embed_tokens(params["embed"], token[:, None], dtype)   # (B, 1, D)
+        new_fd = state.get("first_dense")
+        if "first_dense" in params:
+            x, new_fd = run_stack_decode(
+                params["first_dense"], state["first_dense"], x, cfg,
+                (1, [("dense", cfg.first_dense_layers)]),
+                position=state["position"],
+            )
+        y, new_segs = run_stack_decode(
+            params["decoder"], state["segments"], x, cfg, self.decoder_layout,
+            position=state["position"],
+        )
+        logits = unembed(params["embed"], y, cfg)[:, 0, :]
+        return logits, {
+            "segments": new_segs,
+            "first_dense": new_fd,
+            "position": state["position"] + 1,
+        }

@@ -1,0 +1,44 @@
+"""Architecture registry: ModelConfig -> Model, and the --arch lookup."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .common import ModelConfig
+from .model import Model
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(arch_id: str, factory: Callable[[], ModelConfig]) -> None:
+    if arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch id {arch_id!r}")
+    _REGISTRY[arch_id] = factory
+
+
+def arch_ids() -> list:
+    _ensure_configs_loaded()
+    return sorted(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_configs_loaded()
+    try:
+        return _REGISTRY[arch_id]()
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(sorted(_REGISTRY))}"
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def get_model(arch_id: str) -> Model:
+    return build_model(get_config(arch_id))
+
+
+def _ensure_configs_loaded() -> None:
+    # configs register themselves on import
+    import repro.configs  # noqa: F401

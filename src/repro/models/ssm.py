@@ -1,0 +1,198 @@
+"""Mamba-style selective state-space block (for hymba's parallel SSM heads).
+
+Selective scan:  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,
+                 y_t = C_t . h_t + D_skip * x_t,
+with input-dependent (dt, B, C) — the "selective" part — and a depthwise
+causal conv in front (Mamba architecture, arXiv:2312.00752, adapted).
+
+Two sequence paths:
+- ``serial``  — ``jax.lax.scan`` over time.  O(1) memory in T, exact; the
+  paper-faithful substrate baseline.
+- ``chunked`` — split T into chunks, run an associative scan inside each
+  chunk and carry the state across chunks.  Parallel within chunks (TPU
+  friendly), identical math; the §Perf candidate.  The Pallas
+  ``ssm_scan`` kernel implements the fused version of the serial inner loop.
+
+Decode is a single recurrence step on a carried (B, d_inner, N) state plus a
+rolling conv window.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.ssm_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+    w = cfg.ssm_conv
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), "scaled"),
+        "conv_w": ParamSpec((w, di), (None, "ssm_inner"), "scaled", 1.0),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("ssm_inner", None), "scaled"),
+        "dt_proj": ParamSpec((r, di), (None, "ssm_inner"), "scaled"),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "a_log": ParamSpec((di, n), ("ssm_inner", None), "ones"),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), "scaled"),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jax.Array         # (B, d_inner, N) recurrent state
+    conv: jax.Array      # (B, conv_w - 1, d_inner) rolling conv inputs
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype: jnp.dtype) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, cfg.ssm_inner, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_inner), dtype),
+    )
+
+
+def _selective_params(params: Dict, u: jax.Array, cfg: ModelConfig):
+    """u: (..., d_inner) -> dt (..., d_inner), B (..., N), C (..., N)."""
+    r, n = dt_rank(cfg), cfg.ssm_state
+    proj = u @ params["x_proj"]
+    dt_in, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"])
+    return dt, b, c
+
+
+def _conv_causal(params: Dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, T, d_inner)."""
+    w = params["conv_w"]                     # (W, d_inner)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def ssm_apply_seq(
+    params: Dict, x: jax.Array, cfg: ModelConfig, *, mode: str = "serial",
+    chunk: int = 128, return_state: bool = False,
+):
+    """Full-sequence selective scan.  x: (B, T, D) -> (B, T, D)
+    (optionally also the final :class:`SSMState` for decode continuation)."""
+    xz = x @ params["in_proj"]
+    u_raw, z = jnp.split(xz, 2, axis=-1)               # (B, T, di) each
+    u = _conv_causal(params, u_raw)
+    dt, b, c = _selective_params(params, u, cfg)       # (B,T,di),(B,T,N),(B,T,N)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, N), negative
+
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)          # (B,T,di,N)
+    # drive: (B, T, di, N) = dt*u (B,T,di,1) * B_t (B,T,1,N)
+    drive = (dt * u).astype(jnp.float32)[..., None] * b.astype(jnp.float32)[..., None, :]
+
+    if mode == "chunked":
+        y, h_final = _scan_chunked(decay, drive, c, chunk)
+    else:
+        y, h_final = _scan_serial(decay, drive, c)
+    y = y + u.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        w = params["conv_w"].shape[0]
+        t = x.shape[1]
+        if t >= w - 1:
+            conv_state = u_raw[:, t - (w - 1) :, :]
+        else:
+            conv_state = jnp.pad(u_raw, ((0, 0), (w - 1 - t, 0), (0, 0)))
+        return out, SSMState(h=h_final, conv=conv_state)
+    return out
+
+
+def _scan_serial(decay: jax.Array, drive: jax.Array, c: jax.Array):
+    """Serial recurrence.  decay/drive: (B,T,di,N); c: (B,T,N) ->
+    (y (B,T,di), final state (B,di,N))."""
+    def step(h, inputs):
+        dec_t, drv_t, c_t = inputs
+        h = dec_t * h + drv_t                       # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b_, t, di, n = decay.shape
+    h0 = jnp.zeros((b_, di, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (decay.swapaxes(0, 1), drive.swapaxes(0, 1),
+         c.astype(jnp.float32).swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1), h_final                # (B, T, di), (B, di, N)
+
+
+def _scan_chunked(decay: jax.Array, drive: jax.Array, c: jax.Array,
+                  chunk: int):
+    """Chunked associative scan: parallel inside chunks, serial across.
+
+    Identical recurrence; inside a chunk the pairs (decay, drive) compose
+    associatively: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2).
+    """
+    b_, t, di, n = decay.shape
+    if t % chunk != 0:
+        return _scan_serial(decay, drive, c)
+    nc = t // chunk
+    dec = decay.reshape(b_, nc, chunk, di, n)
+    drv = drive.reshape(b_, nc, chunk, di, n)
+    cc = c.astype(jnp.float32).reshape(b_, nc, chunk, n)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    # prefix-scan within each chunk (axis=2)
+    a_pref, b_pref = jax.lax.associative_scan(combine, (dec, drv), axis=2)
+
+    def chunk_step(h, inputs):
+        a_p, b_p, c_p = inputs                       # (B, chunk, di, N), ..., (B, chunk, N)
+        h_t = a_p * h[:, None] + b_p                 # states at every pos in chunk
+        y = jnp.einsum("btdn,btn->btd", h_t, c_p)
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((b_, di, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0,
+        (a_pref.swapaxes(0, 1), b_pref.swapaxes(0, 1), cc.swapaxes(0, 1)),
+    )                                                # ys: (nc, B, chunk, di)
+    return ys.swapaxes(0, 1).reshape(b_, t, di), h_final
+
+
+def ssm_apply_decode(
+    params: Dict, x: jax.Array, state: SSMState, cfg: ModelConfig
+) -> Tuple[jax.Array, SSMState]:
+    """One decode step.  x: (B, 1, D) -> (B, 1, D), new state."""
+    xz = x[:, 0, :] @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                 # (B, di)
+
+    # rolling causal conv window
+    window = jnp.concatenate([state.conv, u[:, None, :]], axis=1)  # (B, W, di)
+    w = params["conv_w"]
+    u_conv = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", window, w) + params["conv_b"]
+    )
+    new_conv = window[:, 1:, :]
+
+    dt, b, c = _selective_params(params, u_conv, cfg)              # (B,di),(B,N),(B,N)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)         # (B, di, N)
+    drive = (dt * u_conv).astype(jnp.float32)[..., None] * b.astype(jnp.float32)[:, None, :]
+    h = decay * state.h + drive
+    y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32))
+    y = y + u_conv.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SSMState(h=h, conv=new_conv)

@@ -1,0 +1,203 @@
+"""Backbone: periodic layer layout, scan-over-layers, and the Model API.
+
+A backbone is described by a *layout*: ``(repeat, [(block_type, count), ...])``
+— the block pattern of one period and how many times it repeats.  Examples:
+
+  dense 32L        -> (1, [("dense", 32)])
+  xLSTM 48L (1 sLSTM per 8) -> (6, [("mlstm", 7), ("slstm", 1)])
+  deepseek-moe 28L -> dense first layer + (1, [("moe", 27)])
+
+Per-segment parameters are stacked ``(repeat, count, *param_shape)`` and the
+forward pass is a scan over ``repeat`` with an inner scan over ``count`` —
+the HLO contains one body per distinct segment regardless of depth, which is
+what keeps the 126-layer llama3-405b dry-run compile tractable.
+
+``remat``: the per-layer body is wrapped in ``jax.checkpoint`` for training
+(``cfg.remat``: "none" | "full" | "dots_saveable").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .common import (
+    ModelConfig,
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+)
+from .layers import cross_entropy_loss, embed_specs, embed_tokens, rmsnorm, unembed
+
+Layout = Tuple[int, List[Tuple[str, int]]]
+
+
+def derive_layout(cfg: ModelConfig) -> Layout:
+    """Layer layout for the config's family (decoder stack)."""
+    l = cfg.num_layers
+    if cfg.family in ("dense", "vlm"):
+        return (1, [("dense", l)])
+    if cfg.family == "moe":
+        n_moe = l - cfg.first_dense_layers
+        return (1, [("moe", n_moe)])
+    if cfg.family == "hybrid":
+        return (1, [("hybrid", l)])
+    if cfg.family == "ssm":
+        if cfg.slstm_every and cfg.slstm_every > 1:
+            period = cfg.slstm_every
+            if l % period != 0:
+                raise ValueError(f"{cfg.arch_id}: layers {l} not divisible by period {period}")
+            return (l // period, [("mlstm", period - 1), ("slstm", 1)])
+        return (1, [("mlstm", l)])
+    if cfg.family in ("encdec", "audio"):
+        return (1, [("cross", l)])       # decoder stack; encoder built separately
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _stack_spec(spec: ParamSpec, repeat: int, count: int) -> ParamSpec:
+    return ParamSpec(
+        shape=(repeat, count) + spec.shape,
+        axes=("layers", "layers") + spec.axes,
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def _segment_specs(cfg: ModelConfig, layout: Layout, *, d_ff: Optional[int] = None) -> List[Dict]:
+    repeat, pattern = layout
+    out = []
+    for block_type, count in pattern:
+        base = blocks.block_specs(cfg, block_type, d_ff=d_ff)
+        out.append(
+            jax.tree.map(
+                lambda s: _stack_spec(s, repeat, count),
+                base,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn: Callable, cfg: ModelConfig) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable
+        )
+    raise ValueError(f"unknown remat policy {cfg.remat!r}")
+
+
+def run_stack_seq(
+    seg_params: List[Dict],
+    x: jax.Array,
+    cfg: ModelConfig,
+    layout: Layout,
+    *,
+    positions: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    enc_out: Optional[jax.Array] = None,
+    ssm_mode: str = "serial",
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence pass through the whole stack.  Returns (y, aux_sum)."""
+    repeat, pattern = layout
+
+    def period_body(carry, period_params):
+        h, aux = carry
+        for (block_type, count), p_seg in zip(pattern, period_params):
+            def layer_body(inner, p_layer, _bt=block_type):
+                hh, aa = inner
+                hh, a, _ = blocks.block_apply_seq(
+                    p_layer, hh, cfg, _bt,
+                    positions=positions, prefix_len=prefix_len,
+                    enc_out=enc_out, ssm_mode=ssm_mode,
+                )
+                return (hh, aa + a)
+
+            body = _maybe_remat(layer_body, cfg)
+            (h, aux), _ = jax.lax.scan(
+                lambda c, p: (body(c, p), None), (h, aux), p_seg
+            )
+        return (h, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), _ = jax.lax.scan(period_body, (x, aux0), seg_params)
+    return x, aux
+
+
+def run_stack_prefill(
+    seg_params: List[Dict],
+    x: jax.Array,
+    cfg: ModelConfig,
+    layout: Layout,
+    *,
+    cache_len: int,
+    positions: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    enc_out: Optional[jax.Array] = None,
+    ssm_mode: str = "serial",
+) -> Tuple[jax.Array, List[Any]]:
+    """Full-sequence pass that also builds the decode state for every layer.
+    Returns (y, segment states stacked (repeat, count, ...))."""
+    repeat, pattern = layout
+
+    def period_body(h, period_params):
+        states = []
+        for (block_type, count), p_seg in zip(pattern, period_params):
+            def layer_body(hh, p_layer, _bt=block_type):
+                hh, _, st = blocks.block_apply_seq(
+                    p_layer, hh, cfg, _bt,
+                    positions=positions, prefix_len=prefix_len,
+                    enc_out=enc_out, ssm_mode=ssm_mode, cache_len=cache_len,
+                )
+                return hh, st
+
+            h, st_seg = jax.lax.scan(layer_body, h, p_seg)
+            states.append(st_seg)
+        return h, states
+
+    x, seg_states = jax.lax.scan(period_body, x, seg_params)
+    return x, seg_states
+
+
+def run_stack_decode(
+    seg_params: List[Dict],
+    seg_states: List[Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    layout: Layout,
+    *,
+    position: jax.Array,
+) -> Tuple[jax.Array, List[Any]]:
+    """One-token decode through the stack.  Returns (y, new segment states)."""
+    repeat, pattern = layout
+
+    def period_body(h, inputs):
+        period_params, period_states = inputs
+        new_states = []
+        for (block_type, count), p_seg, s_seg in zip(pattern, period_params, period_states):
+            def layer_body(hh, xs, _bt=block_type):
+                p_layer, s_layer = xs
+                hh, new_s = blocks.block_apply_decode(
+                    p_layer, hh, s_layer, cfg, _bt, position=position
+                )
+                return hh, new_s
+
+            h, ns = jax.lax.scan(layer_body, h, (p_seg, s_seg))
+            new_states.append(ns)
+        return h, new_states
+
+    x, new_seg_states = jax.lax.scan(period_body, x, (seg_params, seg_states))
+    return x, new_seg_states

@@ -1,0 +1,214 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent connections), following arXiv:2405.04517 (stabilized exponential
+gating), adapted to the functional JAX substrate.
+
+mLSTM recurrence (per head, head_dim = hd):
+    i_t = exp(w_i . x_t + b_i)          (input gate, stabilized)
+    f_t = sigmoid(w_f . x_t + b_f)       (forget gate)
+    C_t = f_t * C_{t-1} + i_t * v_t k_t^T      (hd x hd matrix state)
+    n_t = f_t * n_{t-1} + i_t * k_t
+    h_t = o_t * (C_t q_t) / max(|n_t . q_t|, 1)
+
+Stabilization: gates tracked in log space with running max m_t (paper Eq. 15)
+so exp() never overflows.  mLSTM has no token-mixing recurrence other than
+the state, so the sequence path is a scan with (C, n, m) carry.
+
+sLSTM keeps per-head scalar cells with a recurrent weight on h_{t-1}
+(true recurrence — serial by construction).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+from .layers import rmsnorm, rmsnorm_spec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "wk": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "wv": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "wi": ParamSpec((d, h), ("embed", "heads"), "scaled"),
+        "wf": ParamSpec((d, h), ("embed", "heads"), "scaled"),
+        "bi": ParamSpec((h,), ("heads",), "zeros"),
+        "bf": ParamSpec((h,), ("heads",), "ones"),
+        "wo_gate": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "wo": ParamSpec((h, hd, d), ("heads", "head", "embed"), "scaled"),
+        "norm": rmsnorm_spec(cfg.head_dim),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, hd, hd)
+    n: jax.Array     # (B, H, hd)
+    m: jax.Array     # (B, H)   log-space stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, hd = cfg.num_heads, cfg.head_dim
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e9, jnp.float32),
+    )
+
+
+def _mlstm_gates(params: Dict, x: jax.Array):
+    """x: (..., D) -> (q, k, v, o_gate, log_i, log_f) with head dims."""
+    q = jnp.einsum("...d,dhk->...hk", x, params["wq"])
+    k = jnp.einsum("...d,dhk->...hk", x, params["wk"]) / (x.shape[-1] ** 0.5)
+    v = jnp.einsum("...d,dhk->...hk", x, params["wv"])
+    o = jax.nn.sigmoid(jnp.einsum("...d,dhk->...hk", x, params["wo_gate"]))
+    log_i = (jnp.einsum("...d,dh->...h", x, params["wi"]) + params["bi"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("...d,dh->...h", x, params["wf"]) + params["bf"]
+    ).astype(jnp.float32)
+    return q, k, v, o, log_i, log_f
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, o, log_i, log_f, eps=1e-6):
+    """One stabilized mLSTM step.  q,k,v,o: (B,H,hd); gates: (B,H)."""
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_eff = jnp.exp(log_f + state.m - m_new)[..., None]            # (B,H,1)
+    i_eff = jnp.exp(log_i - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_eff[..., None] * state.c + i_eff[..., None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )                                                              # (B,H,hd,hd)
+    n = f_eff * state.n + i_eff * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhij,bhj->bhi", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qf)), 1.0)[..., None]
+    h_out = (num / den) * o.astype(jnp.float32)
+    return MLSTMState(c=c, n=n, m=m_new), h_out
+
+
+def mlstm_apply_seq(params: Dict, x: jax.Array, cfg: ModelConfig,
+                    *, return_state: bool = False):
+    """Full-sequence mLSTM.  x: (B, T, D) -> (B, T, D)."""
+    b, t, d = x.shape
+    q, k, v, o, log_i, log_f = _mlstm_gates(params, x)   # (B,T,H,hd)...
+
+    def step(state, inputs):
+        qt, kt, vt, ot, lit, lft = inputs
+        state, h_out = _mlstm_step(state, qt, kt, vt, ot, lit, lft)
+        return state, h_out
+
+    state0 = init_mlstm_state(cfg, b)
+    xs = (
+        q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+        o.swapaxes(0, 1), log_i.swapaxes(0, 1), log_f.swapaxes(0, 1),
+    )
+    state_f, hs = jax.lax.scan(step, state0, xs)         # (T, B, H, hd)
+    hs = rmsnorm(hs.swapaxes(0, 1).astype(x.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bthk,hkd->btd", hs, params["wo"])
+    if return_state:
+        return out, state_f
+    return out
+
+
+def mlstm_apply_decode(
+    params: Dict, x: jax.Array, state: MLSTMState, cfg: ModelConfig
+) -> Tuple[jax.Array, MLSTMState]:
+    """One decode step.  x: (B, 1, D)."""
+    q, k, v, o, log_i, log_f = _mlstm_gates(params, x[:, 0, :])
+    state, h_out = _mlstm_step(state, q, k, v, o, log_i, log_f)
+    h_out = rmsnorm(h_out.astype(x.dtype), params["norm"], cfg.norm_eps)
+    return jnp.einsum("bhk,hkd->bd", h_out, params["wo"])[:, None, :], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wz": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "rz": ParamSpec((h, hd, hd), ("heads", "head", None), "scaled"),
+        "wi": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "ri": ParamSpec((h, hd, hd), ("heads", "head", None), "scaled"),
+        "wf": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "rf": ParamSpec((h, hd, hd), ("heads", "head", None), "scaled"),
+        "wo_gate": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "ro": ParamSpec((h, hd, hd), ("heads", "head", None), "scaled"),
+        "bf": ParamSpec((h, hd), ("heads", "head"), "ones"),
+        "wo": ParamSpec((h, hd, d), ("heads", "head", "embed"), "scaled"),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, hd) cell
+    n: jax.Array     # (B, H, hd) normalizer
+    h: jax.Array     # (B, H, hd) hidden (recurrent input)
+    m: jax.Array     # (B, H, hd) stabilizer
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    shape = (batch, cfg.num_heads, cfg.head_dim)
+    return SLSTMState(
+        c=jnp.zeros(shape, jnp.float32),
+        n=jnp.zeros(shape, jnp.float32),
+        h=jnp.zeros(shape, jnp.float32),
+        m=jnp.full(shape, -1e9, jnp.float32),
+    )
+
+
+def _slstm_step(params: Dict, state: SLSTMState, x_t: jax.Array, eps=1e-6):
+    """x_t: (B, D) -> (state, h_out (B,H,hd)).  Recurrent on h_{t-1}."""
+    hp = state.h                                           # (B,H,hd) fp32
+
+    def gate(wname, rname):
+        return (
+            jnp.einsum("bd,dhk->bhk", x_t, params[wname]).astype(jnp.float32)
+            + jnp.einsum("bhj,hjk->bhk", hp, params[rname].astype(jnp.float32))
+        )
+
+    z = jnp.tanh(gate("wz", "rz"))
+    log_i = gate("wi", "ri")
+    log_f = jax.nn.log_sigmoid(gate("wf", "rf") + params["bf"].astype(jnp.float32))
+    o = jax.nn.sigmoid(gate("wo_gate", "ro"))
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_eff = jnp.exp(log_f + state.m - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    c = f_eff * state.c + i_eff * z
+    n = f_eff * state.n + i_eff
+    h_out = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h_out, m=m_new), h_out
+
+
+def slstm_apply_seq(params: Dict, x: jax.Array, cfg: ModelConfig,
+                    *, return_state: bool = False):
+    b, t, d = x.shape
+
+    def step(state, x_t):
+        state, h_out = _slstm_step(params, state, x_t)
+        return state, h_out
+
+    state_f, hs = jax.lax.scan(step, init_slstm_state(cfg, b), x.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)                 # (B,T,H,hd)
+    out = jnp.einsum("bthk,hkd->btd", hs, params["wo"])
+    if return_state:
+        return out, state_f
+    return out
+
+
+def slstm_apply_decode(
+    params: Dict, x: jax.Array, state: SLSTMState, cfg: ModelConfig
+) -> Tuple[jax.Array, SLSTMState]:
+    state, h_out = _slstm_step(params, state, x[:, 0, :])
+    out = jnp.einsum("bhk,hkd->bd", h_out.astype(x.dtype), params["wo"])
+    return out[:, None, :], state

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay and configurable state dtype.
+
+Pure-functional (init / update), pytree-shaped exactly like the params so the
+sharding planner can reuse the parameter shardings for the optimizer state.
+``state_dtype`` lets big-model configs keep m/v in bf16 (halves optimizer HBM
+— required for llama3-405b on a single 256-chip pod, see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # () int32
+    m: Any               # first-moment pytree (like params)
+    v: Any               # second-moment pytree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Optional[str] = None    # None = same as param
+    grad_clip_norm: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        def zeros_like(p):
+            dt = jnp.dtype(self.state_dtype) if self.state_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros_like, params),
+            v=jax.tree.map(zeros_like, params),
+        )
+
+    def update(
+        self,
+        grads: Any,
+        state: AdamWState,
+        params: Any,
+        *,
+        lr_scale: jax.Array | float = 1.0,
+    ) -> Tuple[Any, AdamWState]:
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        if self.grad_clip_norm > 0:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads))
+            )
+            clip = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * clip.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate * lr_scale
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            m_hat = mf / bc1
+            v_hat = vf / bc2
+            delta = m_hat / (jnp.sqrt(v_hat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_params, AdamWState(step=step, m=new_m, v=new_v)

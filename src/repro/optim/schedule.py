@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio`` of peak LR."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, warmup_steps))
+    progress = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return warm * (min_ratio + (1.0 - min_ratio) * cos)
+
+
+def constant(step, *, value: float = 1.0):
+    return jnp.full((), value, jnp.float32)

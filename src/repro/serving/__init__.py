@@ -1,0 +1,43 @@
+"""Inference serving runtime: queue, monitor, executor, engine, simulator."""
+
+from .engine import EngineReport, ServingEngine, replay_workload
+from .executor import ExecutionRecord, WorkflowExecutor
+from .monitor import LoadMonitor, LoadSnapshot
+from .queue import RequestQueue
+from .simulator import (
+    CompletedRequest,
+    ServingSimulator,
+    SimulationResult,
+    deterministic_sampler,
+    lognormal_sampler_from_profile,
+)
+from .workload import (
+    Request,
+    bursty_pattern,
+    constant_rate,
+    diurnal_pattern,
+    generate_arrivals,
+    spike_pattern,
+)
+
+__all__ = [
+    "EngineReport",
+    "ServingEngine",
+    "replay_workload",
+    "ExecutionRecord",
+    "WorkflowExecutor",
+    "LoadMonitor",
+    "LoadSnapshot",
+    "RequestQueue",
+    "CompletedRequest",
+    "ServingSimulator",
+    "SimulationResult",
+    "deterministic_sampler",
+    "lognormal_sampler_from_profile",
+    "Request",
+    "bursty_pattern",
+    "constant_rate",
+    "diurnal_pattern",
+    "generate_arrivals",
+    "spike_pattern",
+]

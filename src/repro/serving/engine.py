@@ -1,0 +1,159 @@
+"""Real-time serving engine: queue + monitor + Elastico + executor (§III-B).
+
+The engine wires the four runtime components of the paper's serving
+architecture and runs them against wall-clock time on this host:
+
+  ingress thread  ->  RequestQueue  ->  worker thread (WorkflowExecutor)
+                          |                   |
+                      LoadMonitor  <----------+
+                          |
+                  control thread (ElasticoController) -> executor.set_active
+
+A deterministic-virtual-time variant is provided by
+:mod:`repro.serving.simulator`; this module is the "it actually serves"
+path used by the examples and smoke tests.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+from ..core.elastico import ElasticoController
+from .executor import ExecutionRecord, WorkflowExecutor
+from .monitor import LoadMonitor
+from .queue import RequestQueue
+from .workload import Request
+
+
+@dataclass
+class EngineReport:
+    records: List[ExecutionRecord]
+    switch_events: List
+    config_timeline: List
+    total_requests: int
+    dropped: int = 0
+
+    def slo_compliance(self, slo_s: float) -> float:
+        if not self.records:
+            return 1.0
+        return sum(1 for r in self.records if r.latency_s <= slo_s) / len(self.records)
+
+    def mean_accuracy(self, accuracies: Sequence[float]) -> float:
+        if not self.records:
+            return 0.0
+        return sum(accuracies[r.config_index] for r in self.records) / len(self.records)
+
+
+class ServingEngine:
+    """Threaded serving engine with dynamic configuration switching."""
+
+    def __init__(
+        self,
+        executor: WorkflowExecutor,
+        controller: Optional[ElasticoController] = None,
+        *,
+        control_tick_s: float = 0.05,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.queue = RequestQueue()
+        self.monitor = LoadMonitor(clock=clock)
+        self.executor = executor
+        self.controller = controller
+        self.control_tick_s = control_tick_s
+        self._clock = clock
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._timeline: List = []
+        self._epoch: Optional[float] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        if self._threads:
+            raise RuntimeError("engine already started")
+        self._epoch = self._clock()
+        self.executor.set_clock(self._now_rel)
+        if self.controller is not None:
+            self.controller.reset()
+            self.executor.set_active(self.controller.current_index)
+            self._timeline.append((0.0, self.controller.current_index))
+        worker = threading.Thread(target=self._worker_loop, name="compass-worker", daemon=True)
+        ctrl = threading.Thread(target=self._control_loop, name="compass-elastico", daemon=True)
+        self._threads = [worker, ctrl]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, request: Request) -> None:
+        self.monitor.record_arrival()
+        self.queue.put(request)
+
+    def drain_and_stop(self, *, timeout_s: float = 120.0) -> EngineReport:
+        """Close ingress, wait until the queue empties, stop threads."""
+        deadline = self._clock() + timeout_s
+        while (self.queue.depth() > 0 or self.executor.in_flight() > 0) \
+                and self._clock() < deadline:
+            time.sleep(0.01)
+        self.queue.close()
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+        return EngineReport(
+            records=list(self.executor.records),
+            switch_events=list(self.controller.events) if self.controller else [],
+            config_timeline=list(self._timeline),
+            total_requests=self.queue.total_enqueued,
+        )
+
+    # -- loops ---------------------------------------------------------------
+
+    def _now_rel(self) -> float:
+        assert self._epoch is not None
+        return self._clock() - self._epoch
+
+    def _worker_loop(self) -> None:
+        while not self._stop.is_set():
+            req = self.queue.get(timeout=0.05)
+            if req is None:
+                continue
+            self._observe()          # arrival-to-service boundary decision
+            self.executor.execute(req.request_id, req.arrival_s, req.payload)
+            self._observe()
+
+    def _control_loop(self) -> None:
+        while not self._stop.is_set():
+            self._observe()
+            time.sleep(self.control_tick_s)
+
+    def _observe(self) -> None:
+        if self.controller is None:
+            return
+        depth = self.queue.depth()  # buffered requests only (see simulator)
+        now = self._now_rel()
+        self.monitor.snapshot(self.queue.depth(), self.executor.in_flight(), now)
+        ev = self.controller.observe(depth, now)
+        if ev is not None:
+            self.executor.set_active(ev.to_index)
+            self._timeline.append((now, ev.to_index))
+
+
+def replay_workload(
+    engine: ServingEngine,
+    arrivals: Sequence[float],
+    *,
+    payload_fn: Optional[Callable[[int], Any]] = None,
+    time_scale: float = 1.0,
+) -> None:
+    """Feed a precomputed arrival trace into a started engine in real time
+    (optionally time-scaled for faster tests)."""
+    t0 = time.monotonic()
+    for i, at in enumerate(arrivals):
+        target = t0 + at * time_scale
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        payload = payload_fn(i) if payload_fn is not None else None
+        engine.submit(Request(request_id=i, arrival_s=engine._now_rel(), payload=payload))

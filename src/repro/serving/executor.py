@@ -1,0 +1,105 @@
+"""Workflow executor: processes requests with the active configuration.
+
+The executor owns the mapping config -> executable workflow.  All Pareto
+configurations are kept *resident* (the paper pre-loads all configs in GPU
+memory; here every config's parameters/compiled functions stay live), so a
+switch only flips an index — the paper's <10 ms "pipeline rerouting".
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from ..core.space import Config
+
+WorkflowFn = Callable[[Config, Any], Any]
+"""(config, payload) -> result.  One full compound-workflow execution."""
+
+
+@dataclass
+class ExecutionRecord:
+    request_id: int
+    arrival_s: float
+    start_s: float
+    completion_s: float
+    config_index: int
+    result: Any = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.completion_s - self.arrival_s
+
+
+class WorkflowExecutor:
+    """Single-worker executor (the M/G/1 server).
+
+    ``configs`` is the Pareto ladder (index 0 = fastest); ``workflow_fn`` runs
+    one request under a given configuration.  ``set_active`` is thread-safe
+    and takes effect for the *next* request — the in-flight request always
+    completes under the configuration it started with (no drops, §III-B).
+    """
+
+    def __init__(self, configs: Sequence[Config], workflow_fn: WorkflowFn,
+                 *, clock: Callable[[], float] = time.monotonic) -> None:
+        if not configs:
+            raise ValueError("executor needs at least one configuration")
+        self._configs = list(configs)
+        self._workflow_fn = workflow_fn
+        self._clock = clock
+        self._active = len(configs) - 1
+        self._lock = threading.Lock()
+        self._in_flight = 0
+        self.records: List[ExecutionRecord] = []
+
+    @property
+    def num_configs(self) -> int:
+        return len(self._configs)
+
+    def active_index(self) -> int:
+        with self._lock:
+            return self._active
+
+    def set_active(self, index: int) -> None:
+        if not 0 <= index < len(self._configs):
+            raise IndexError(f"config index {index} out of range")
+        with self._lock:
+            self._active = index
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Align the executor's timestamps with the engine's relative clock.
+
+        Request ``arrival_s`` values are engine-epoch-relative; the executor
+        must stamp start/completion on the same axis or latencies come out
+        shifted by the epoch (a real bug caught by examples/serve_adaptive).
+        """
+        self._clock = clock
+
+    def execute(self, request_id: int, arrival_s: float, payload: Any) -> ExecutionRecord:
+        with self._lock:
+            idx = self._active
+            self._in_flight += 1
+        try:
+            start = self._clock()
+            result = self._workflow_fn(self._configs[idx], payload)
+            end = self._clock()
+        finally:
+            with self._lock:
+                self._in_flight -= 1
+        rec = ExecutionRecord(
+            request_id=request_id,
+            arrival_s=arrival_s,
+            start_s=start,
+            completion_s=end,
+            config_index=idx,
+            result=result,
+        )
+        with self._lock:
+            self.records.append(rec)
+        return rec

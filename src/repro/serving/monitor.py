@@ -1,0 +1,84 @@
+"""Load monitor: queue depth + arrival-rate tracking (paper §III-B).
+
+Elastico's decisions key off queue depth; the arrival-rate EWMA is exposed for
+observability and for the predictive-adaptation extension point mentioned in
+the paper's future work.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+
+@dataclass
+class LoadSnapshot:
+    time_s: float
+    queue_depth: int
+    arrival_rate_qps: float
+    in_flight: int
+
+
+class LoadMonitor:
+    """Tracks arrivals with an exponentially-weighted rate estimate.
+
+    ``record_arrival`` is called by the engine's ingress; ``snapshot`` is
+    called by the controller loop.  ``halflife_s`` controls the EWMA memory.
+    """
+
+    def __init__(self, *, halflife_s: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self._clock = clock
+        self._halflife_s = halflife_s
+        self._lock = threading.Lock()
+        self._rate_qps = 0.0
+        self._last_update_s: Optional[float] = None
+        self._arrivals = 0
+        self._history: List[LoadSnapshot] = []
+
+    def record_arrival(self, now_s: Optional[float] = None) -> None:
+        now = self._clock() if now_s is None else now_s
+        with self._lock:
+            if self._last_update_s is None:
+                self._rate_qps = 0.0
+            else:
+                dt = max(1e-9, now - self._last_update_s)
+                decay = 0.5 ** (dt / self._halflife_s)
+                # event-driven EWMA of instantaneous rate 1/dt
+                self._rate_qps = decay * self._rate_qps + (1.0 - decay) * (1.0 / dt)
+            self._last_update_s = now
+            self._arrivals += 1
+
+    def arrival_rate(self, now_s: Optional[float] = None) -> float:
+        now = self._clock() if now_s is None else now_s
+        with self._lock:
+            if self._last_update_s is None:
+                return 0.0
+            dt = max(0.0, now - self._last_update_s)
+            decay = 0.5 ** (dt / self._halflife_s)
+            return self._rate_qps * decay
+
+    @property
+    def total_arrivals(self) -> int:
+        with self._lock:
+            return self._arrivals
+
+    def snapshot(self, queue_depth: int, in_flight: int,
+                 now_s: Optional[float] = None) -> LoadSnapshot:
+        now = self._clock() if now_s is None else now_s
+        snap = LoadSnapshot(
+            time_s=now,
+            queue_depth=queue_depth,
+            arrival_rate_qps=self.arrival_rate(now),
+            in_flight=in_flight,
+        )
+        with self._lock:
+            self._history.append(snap)
+        return snap
+
+    def history(self) -> List[LoadSnapshot]:
+        with self._lock:
+            return list(self._history)

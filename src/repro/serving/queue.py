@@ -1,0 +1,56 @@
+"""Central request queue for the inference serving system (paper §III-B).
+
+A thread-safe FIFO buffer.  The queue never drops requests: during a
+configuration switch the executor keeps draining with the old configuration
+until the new one is ready.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Optional
+
+from .workload import Request
+
+
+class RequestQueue:
+    def __init__(self) -> None:
+        self._items: Deque[Request] = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._closed = False
+        self._total_enqueued = 0
+
+    def put(self, request: Request) -> None:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("queue closed")
+            self._items.append(request)
+            self._total_enqueued += 1
+            self._not_empty.notify()
+
+    def get(self, timeout: Optional[float] = None) -> Optional[Request]:
+        """Pop the oldest request (FIFO); None on timeout or closed+empty."""
+        with self._not_empty:
+            while not self._items:
+                if self._closed:
+                    return None
+                if not self._not_empty.wait(timeout=timeout):
+                    return None
+            return self._items.popleft()
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    @property
+    def total_enqueued(self) -> int:
+        with self._lock:
+            return self._total_enqueued
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()

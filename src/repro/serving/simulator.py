@@ -1,0 +1,226 @@
+"""Discrete-event simulation of the Compass serving system (paper §VI-C).
+
+Single-server FIFO queue (the M/G/1 of §V-A) with:
+  - non-homogeneous Poisson arrivals (spike / bursty / diurnal patterns),
+  - per-configuration stochastic service times (pluggable samplers, e.g.
+    lognormal fitted to a profile's mean/p95 — LLM-like tails),
+  - the Elastico controller observing queue depth at every event and at
+    periodic control ticks,
+  - configuration switches that take effect for subsequent requests while the
+    in-flight request finishes under the old configuration (no drops, §III-B).
+
+Deterministic given seeds, which is what lets EXPERIMENTS.md reproduce the
+paper's Figures 5-7 bit-for-bit across runs.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.elastico import ElasticoController
+from .workload import RateFn, generate_arrivals
+
+ServiceSampler = Callable[[int, random.Random], float]
+"""(config_index, rng) -> service time in seconds."""
+
+
+def lognormal_sampler_from_profile(mean_s: Sequence[float], p95_s: Sequence[float]) -> ServiceSampler:
+    """Service-time sampler with lognormal tails matched to (mean, p95) per
+    configuration — mirrors the paper's percentile-based LLM profiles.
+
+    For lognormal(mu, sigma): mean = exp(mu + sigma^2/2) and
+    p95 = exp(mu + 1.6449 * sigma); solve for (mu, sigma) per config.
+    """
+    params: List[Tuple[float, float]] = []
+    z95 = 1.6448536269514722
+    for m, p in zip(mean_s, p95_s):
+        if not (p > 0 and m > 0):
+            raise ValueError("profile stats must be positive")
+        ratio = max(p / m, 1.001)
+        # solve sigma from: ln(p) - ln(m) = z*sigma - sigma^2/2
+        c = math.log(ratio)
+        disc = z95 * z95 - 2.0 * c
+        sigma = z95 - math.sqrt(disc) if disc > 0 else z95  # smaller root
+        mu = math.log(m) - sigma * sigma / 2.0
+        params.append((mu, sigma))
+
+    def sample(k: int, rng: random.Random) -> float:
+        mu, sigma = params[k]
+        return math.exp(rng.gauss(mu, sigma))
+
+    return sample
+
+
+def deterministic_sampler(mean_s: Sequence[float]) -> ServiceSampler:
+    means = [float(m) for m in mean_s]
+
+    def sample(k: int, rng: random.Random) -> float:
+        return means[k]
+
+    return sample
+
+
+@dataclass
+class CompletedRequest:
+    request_id: int
+    arrival_s: float
+    start_s: float
+    completion_s: float
+    config_index: int
+
+    @property
+    def latency_s(self) -> float:
+        return self.completion_s - self.arrival_s
+
+    @property
+    def wait_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+
+@dataclass
+class SimulationResult:
+    completed: List[CompletedRequest]
+    switch_events: List                       # List[SwitchEvent]
+    config_timeline: List[Tuple[float, int]]  # (time, active index)
+    queue_depth_samples: List[Tuple[float, int]]
+    duration_s: float
+
+    def slo_compliance(self, slo_s: float) -> float:
+        if not self.completed:
+            return 1.0
+        ok = sum(1 for r in self.completed if r.latency_s <= slo_s)
+        return ok / len(self.completed)
+
+    def mean_accuracy(self, accuracies: Sequence[float]) -> float:
+        """Average task accuracy over served requests, where request r served
+        under config k scores accuracies[k] in expectation."""
+        if not self.completed:
+            return 0.0
+        return sum(accuracies[r.config_index] for r in self.completed) / len(self.completed)
+
+    def latencies(self) -> List[float]:
+        return [r.latency_s for r in self.completed]
+
+    def p95_latency(self) -> float:
+        xs = sorted(self.latencies())
+        if not xs:
+            return 0.0
+        pos = 0.95 * (len(xs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+@dataclass
+class ServingSimulator:
+    """Event-driven M/G/1 + Elastico simulator.
+
+    ``controller=None`` simulates a static baseline pinned to
+    ``static_index`` — the paper's Static-Fast / Medium / Accurate baselines.
+    ``switch_latency_s`` models the (small) pipeline-rerouting cost; the
+    paper measures <10 ms since all configs stay resident in memory.
+    """
+
+    service_sampler: ServiceSampler
+    controller: Optional[ElasticoController] = None
+    static_index: int = 0
+    control_tick_s: float = 0.25
+    switch_latency_s: float = 0.010
+    seed: int = 0
+
+    def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
+        rng = random.Random(self.seed)
+        ctrl = self.controller
+        if ctrl is not None:
+            ctrl.reset()
+        active = ctrl.current_index if ctrl is not None else self.static_index
+        switch_ready_s = 0.0  # time the latest switch completes
+
+        # event heap: (time, order, kind, payload)
+        events: List[Tuple[float, int, str, object]] = []
+        order = 0
+        for i, t in enumerate(arrivals):
+            heapq.heappush(events, (t, order, "arrival", i))
+            order += 1
+        t = 0.0
+        while t < duration_s:
+            heapq.heappush(events, (t, order, "tick", None))
+            order += 1
+            t += self.control_tick_s
+
+        waiting: List[int] = []            # FIFO queue of request ids
+        arrival_time: Dict[int, float] = {i: a for i, a in enumerate(arrivals)}
+        busy_until = 0.0
+        in_service: Optional[int] = None
+        completed: List[CompletedRequest] = []
+        timeline: List[Tuple[float, int]] = [(0.0, active)]
+        depth_samples: List[Tuple[float, int]] = []
+
+        def queue_depth() -> int:
+            # Elastico keys off the *buffered* queue depth (paper §III-B "a
+            # load monitor that tracks current queue depth"): requests waiting
+            # for service, excluding the one in service.  Counting the
+            # in-flight request would make N_up = 0 rungs (the most accurate
+            # configs under tight SLOs, Eq. 10) unreachable at any utilization.
+            return len(waiting)
+
+        def observe(now: float) -> None:
+            nonlocal active, switch_ready_s
+            if ctrl is None:
+                return
+            ev = ctrl.observe(queue_depth(), now)
+            if ev is not None:
+                # the new configuration becomes usable after the switch
+                # latency; the executor keeps draining with the old one.
+                switch_ready_s = now + self.switch_latency_s
+                active = ev.to_index
+                timeline.append((now, active))
+
+        def start_next(now: float) -> None:
+            nonlocal in_service, busy_until, order
+            if in_service is not None or not waiting:
+                return
+            rid = waiting.pop(0)
+            start = max(now, switch_ready_s) if now < switch_ready_s else now
+            svc = self.service_sampler(active, rng)
+            comp = start + svc
+            in_service = rid
+            busy_until = comp
+            completed.append(CompletedRequest(
+                request_id=rid,
+                arrival_s=arrival_time[rid],
+                start_s=start,
+                completion_s=comp,
+                config_index=active,
+            ))
+            heapq.heappush(events, (comp, order, "completion", rid))
+            order += 1
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if now > duration_s and kind == "tick":
+                continue
+            if kind == "arrival":
+                waiting.append(int(payload))  # type: ignore[arg-type]
+                start_next(now)
+                observe(now)
+            elif kind == "completion":
+                in_service = None
+                start_next(now)
+                observe(now)
+            else:  # control tick
+                observe(now)
+                start_next(now)
+                depth_samples.append((now, queue_depth()))
+
+        return SimulationResult(
+            completed=completed,
+            switch_events=list(ctrl.events) if ctrl is not None else [],
+            config_timeline=timeline,
+            queue_depth_samples=depth_samples,
+            duration_s=duration_s,
+        )

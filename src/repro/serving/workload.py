@@ -1,0 +1,99 @@
+"""Workload generators for serving experiments (paper §VI-C).
+
+Arrival processes are Poisson with a time-varying rate function (the AQM
+assumes Poisson arrivals; the evaluation stresses the controller with two
+rate patterns):
+
+- **Spike**: sustained 4x load increase during the middle third of the run.
+- **Bursty**: random short 2-5x bursts lasting 5-15 s throughout the run.
+
+Base rate 1.5 QPS, 180 s duration — the paper's setup, kept as defaults.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, List, Sequence, Tuple
+
+RateFn = Callable[[float], float]
+
+
+def constant_rate(qps: float) -> RateFn:
+    return lambda t: qps
+
+
+def spike_pattern(base_qps: float = 1.5, *, factor: float = 4.0,
+                  duration_s: float = 180.0) -> RateFn:
+    """Sustained ``factor``x increase during the middle third (paper §VI-C)."""
+    lo, hi = duration_s / 3.0, 2.0 * duration_s / 3.0
+
+    def rate(t: float) -> float:
+        return base_qps * factor if lo <= t < hi else base_qps
+
+    return rate
+
+
+def bursty_pattern(base_qps: float = 1.5, *, duration_s: float = 180.0,
+                   seed: int = 0, burst_factor_range: Tuple[float, float] = (2.0, 5.0),
+                   burst_len_range_s: Tuple[float, float] = (5.0, 15.0),
+                   mean_gap_s: float = 25.0) -> RateFn:
+    """Random short bursts of high load throughout the run (paper §VI-C)."""
+    rng = random.Random(seed)
+    bursts: List[Tuple[float, float, float]] = []  # (start, end, factor)
+    t = rng.uniform(0.0, mean_gap_s)
+    while t < duration_s:
+        length = rng.uniform(*burst_len_range_s)
+        factor = rng.uniform(*burst_factor_range)
+        bursts.append((t, min(t + length, duration_s), factor))
+        t += length + rng.expovariate(1.0 / mean_gap_s)
+
+    def rate(tt: float) -> float:
+        for s, e, f in bursts:
+            if s <= tt < e:
+                return base_qps * f
+        return base_qps
+
+    return rate
+
+
+def diurnal_pattern(base_qps: float = 1.5, *, period_s: float = 120.0,
+                    amplitude: float = 0.8) -> RateFn:
+    """Smooth diurnal-style cycle (listed in §II-B as a common pattern;
+    extra coverage beyond the paper's two stress patterns)."""
+
+    def rate(t: float) -> float:
+        return base_qps * (1.0 + amplitude * math.sin(2.0 * math.pi * t / period_s))
+
+    return rate
+
+
+def generate_arrivals(rate_fn: RateFn, duration_s: float, *, seed: int = 0,
+                      max_rate_hint: float | None = None) -> List[float]:
+    """Sample arrival times from a non-homogeneous Poisson process by
+    thinning (Lewis & Shedler).  Deterministic given the seed."""
+    rng = random.Random(seed)
+    if max_rate_hint is None:
+        # probe the rate function for an envelope
+        probes = [rate_fn(duration_s * i / 1000.0) for i in range(1001)]
+        max_rate_hint = max(probes) * 1.05 + 1e-9
+    lam = max_rate_hint
+    t = 0.0
+    out: List[float] = []
+    while True:
+        t += rng.expovariate(lam)
+        if t >= duration_s:
+            break
+        if rng.random() <= rate_fn(t) / lam:
+            out.append(t)
+    return out
+
+
+@dataclass(frozen=True)
+class Request:
+    """One inference request."""
+
+    request_id: int
+    arrival_s: float
+    payload: object = None

@@ -1,0 +1,3 @@
+from .planner import ShardingPlanner, state_logical_axes
+
+__all__ = ["ShardingPlanner", "state_logical_axes"]

@@ -1,0 +1,11 @@
+from .loop import TrainResult, train
+from .steps import make_eval_step, make_prefill_step, make_serve_step, make_train_step
+
+__all__ = [
+    "TrainResult",
+    "train",
+    "make_eval_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

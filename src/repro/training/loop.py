@@ -1,0 +1,93 @@
+"""Training loop: metrics, checkpointing, deterministic resume."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..data.synthetic import DataConfig, SyntheticLM
+from ..models.model import Model
+from ..optim.adamw import AdamW
+from ..optim.schedule import cosine_with_warmup
+from .steps import make_train_step
+
+
+@dataclass
+class TrainResult:
+    losses: List[float]
+    steps: int
+    wall_s: float
+
+    @property
+    def final_loss(self) -> float:
+        return float(np.mean(self.losses[-10:])) if self.losses else float("nan")
+
+    @property
+    def initial_loss(self) -> float:
+        return float(np.mean(self.losses[:10])) if self.losses else float("nan")
+
+
+def train(
+    model: Model,
+    *,
+    steps: int,
+    data_cfg: Optional[DataConfig] = None,
+    optimizer: Optional[AdamW] = None,
+    batch_fn: Optional[Callable[[int], Dict[str, np.ndarray]]] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 100,
+    log_every: int = 10,
+    seed: int = 0,
+    log_fn: Callable[[str], None] = print,
+) -> TrainResult:
+    """Single-host training loop (the examples and smoke tests use this;
+    the multi-pod path goes through repro.launch.train)."""
+    cfg = model.cfg
+    optimizer = optimizer or AdamW(learning_rate=3e-4)
+    if data_cfg is None:
+        data_cfg = DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=256, global_batch=8, seed=seed
+        )
+    stream = SyntheticLM(data_cfg)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    start_step = 0
+    if checkpoint_dir and latest_step(checkpoint_dir) is not None:
+        (params, opt_state), start_step, _ = restore_checkpoint(
+            checkpoint_dir, (params, opt_state)
+        )
+        log_fn(f"resumed from step {start_step}")
+
+    schedule = lambda s: cosine_with_warmup(
+        s, warmup_steps=max(10, steps // 20), total_steps=steps
+    )
+    step_fn = jax.jit(make_train_step(model, optimizer, schedule=schedule))
+
+    losses: List[float] = []
+    t0 = time.time()
+    batches = stream.batches(start_step=start_step) if batch_fn is None else None
+    for step in range(start_step, steps):
+        if batch_fn is not None:
+            batch = batch_fn(step)
+        else:
+            batch = next(batches)  # type: ignore[arg-type]
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, params, opt_state = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if np.isnan(losses[-1]):
+            raise FloatingPointError(f"NaN loss at step {step}")
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            log_fn(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                   f"({(time.time() - t0):.1f}s)")
+        if checkpoint_dir and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, step + 1, (params, opt_state),
+                            metadata={"arch": cfg.arch_id})
+    wall = time.time() - t0
+    return TrainResult(losses=losses, steps=steps - start_step, wall_s=wall)

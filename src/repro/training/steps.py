@@ -1,0 +1,70 @@
+"""Step factories: jit-able train / eval / prefill / serve steps.
+
+These are the functions the launcher jits with explicit in/out shardings and
+the dry-run lowers against the production mesh.  They close over the static
+Model + optimizer and take only pytrees of arrays, so ``.lower()`` works with
+ShapeDtypeStruct stand-ins.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim.adamw import AdamW, AdamWState
+from ..optim.schedule import cosine_with_warmup
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    *,
+    schedule: Optional[Callable] = None,
+) -> Callable:
+    """(params, opt_state, batch) -> (loss, new_params, new_opt_state)."""
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        lr_scale = schedule(opt_state.step) if schedule is not None else 1.0
+        new_params, new_opt = optimizer.update(
+            grads, opt_state, params, lr_scale=lr_scale
+        )
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+
+    return eval_step
+
+
+def make_prefill_step(model: Model, *, cache_len: Optional[int] = None) -> Callable:
+    """(params, batch) -> (last-position logits, decode state)."""
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, greedy: bool = True) -> Callable:
+    """(params, state, token) -> (next_token | logits, new_state).
+
+    The serve step is ONE new token against the standing decode state (the
+    decode_32k / long_500k dry-run shape).
+    """
+
+    def serve_step(params, state, token):
+        logits, new_state = model.decode_step(params, state, token)
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_state
+        return logits, new_state
+
+    return serve_step

@@ -1,0 +1,79 @@
+"""Compound-AI workflow abstractions (paper §II-A).
+
+A workflow is a DAG of *components* (AI models and engineered software
+pieces).  Each component exposes adjustable parameters; a *configuration* is
+one complete assignment across all components (Eq. 1).  The workflow publishes
+its :class:`~repro.core.space.ConfigSpace` and executes end-to-end under a
+given configuration.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.space import Config, ConfigSpace, Parameter
+
+
+@dataclass
+class Component:
+    """One workflow stage.
+
+    ``run(params, state) -> state``: consumes the accumulated workflow state
+    (dict) and returns an updated state.  ``params`` is the slice of the full
+    configuration owned by this component.
+    """
+
+    name: str
+    parameters: Tuple[Parameter, ...]
+    run: Callable[[Dict[str, Any], Dict[str, Any]], Dict[str, Any]]
+
+    @property
+    def parameter_names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.parameters)
+
+
+class Workflow:
+    """Linear compound workflow (retrieve -> rerank -> generate, or
+    detect -> verify).  Components run in order; each sees the state produced
+    by its predecessors — this is exactly the coupling that makes
+    per-component independent model selection unsound (paper fn. 2) and why
+    Compass switches the *whole* configuration atomically."""
+
+    def __init__(self, name: str, components: Sequence[Component]):
+        if not components:
+            raise ValueError("workflow needs at least one component")
+        self.name = name
+        self.components = list(components)
+        params: List[Parameter] = []
+        seen = set()
+        for comp in self.components:
+            for p in comp.parameters:
+                if p.name in seen:
+                    raise ValueError(f"duplicate parameter {p.name!r} across components")
+                seen.add(p.name)
+                params.append(p)
+        self.space = ConfigSpace(params)
+
+    def split_config(self, config: Config) -> Dict[str, Dict[str, Any]]:
+        """Slice a full configuration into per-component parameter dicts."""
+        full = self.space.as_dict(config)
+        return {
+            comp.name: {n: full[n] for n in comp.parameter_names}
+            for comp in self.components
+        }
+
+    def execute(self, config: Config, payload: Any) -> Dict[str, Any]:
+        """Run the workflow end-to-end; returns the final state dict."""
+        self.space.validate(config)
+        slices = self.split_config(config)
+        state: Dict[str, Any] = {"input": payload}
+        for comp in self.components:
+            state = comp.run(slices[comp.name], state)
+        return state
+
+    def timed_execute(self, config: Config, payload: Any) -> Tuple[Dict[str, Any], float]:
+        t0 = time.perf_counter()
+        state = self.execute(config, payload)
+        return state, time.perf_counter() - t0

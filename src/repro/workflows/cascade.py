@@ -1,0 +1,146 @@
+"""Detection-cascade workflow over REAL (tiny, locally-trained) JAX models.
+
+Mirrors the paper's second workflow (§VI-B): a lightweight detector processes
+every input; when its confidence falls below a threshold the prediction is
+escalated to a heavier verifier.  All models are small MLP classifiers over
+the synthetic PatternTask, trained in-process so that bigger-model =>
+higher-accuracy emerges honestly (the paper's YOLOv8 n/s/m -> m/l/x ladder).
+
+Configuration space (4 axes like the paper's):
+    detector   in {det-n, det-s, det-m}        (model size ladder)
+    verifier   in {none, ver-m, ver-l, ver-x}
+    confidence in {0.3 .. 0.9}                 (escalation threshold)
+    smoothing  in {0.0, 0.25, 0.5}             (input denoise strength; the
+                                               NMS-like post-processing knob)
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.space import Config, ConfigSpace, Parameter
+from .tasks import PatternTask
+
+DETECTORS = {
+    #        hidden, train steps, per-call cost weight
+    "det-n": (6, 25),
+    "det-s": (16, 80),
+    "det-m": (48, 200),
+}
+VERIFIERS = {
+    "ver-m": (48, 200),
+    "ver-l": (96, 400),
+    "ver-x": (192, 700),
+}
+
+
+def _init_mlp(key, sizes):
+    params = []
+    for din, dout in zip(sizes, sizes[1:]):
+        key, k1 = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k1, (din, dout)) * (2.0 / din) ** 0.5,
+            "b": jnp.zeros((dout,)),
+        })
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x
+
+
+@dataclass
+class CascadeWorkflow:
+    """Confidence-gated two-stage classification cascade."""
+
+    task: PatternTask = field(default_factory=PatternTask)
+    seed: int = 0
+    train_n: int = 512
+    log_fn: Any = None
+
+    def __post_init__(self) -> None:
+        self.space = ConfigSpace([
+            Parameter("detector", tuple(DETECTORS), kind="ordinal"),
+            Parameter("verifier", ("none",) + tuple(VERIFIERS), kind="ordinal"),
+            Parameter("confidence", (0.3, 0.45, 0.6, 0.75, 0.9), kind="ordinal"),
+            Parameter("smoothing", (0.0, 0.25, 0.5), kind="ordinal"),
+        ])
+        self._models: Dict[str, Any] = {}
+        self._predict: Dict[str, Any] = {}
+        self._trained = False
+
+    # -- training -------------------------------------------------------------
+
+    def prepare(self) -> None:
+        if self._trained:
+            return
+        log = self.log_fn or (lambda s: None)
+        d_in = self.task.size ** 2
+        xs, ys, _ = self.task.sample(self.train_n, seed=1)
+        x, y = jnp.asarray(xs), jnp.asarray(ys)
+        for name, (hidden, steps) in {**DETECTORS, **VERIFIERS}.items():
+            key = jax.random.PRNGKey((self.seed, hash(name) & 0xFFFF)[1])
+            params = _init_mlp(key, (d_in, hidden, self.task.num_classes))
+
+            def loss_fn(p):
+                logits = _mlp_apply(p, x)
+                onehot = jax.nn.one_hot(y, self.task.num_classes)
+                return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+            grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+            t0 = time.time()
+            lr = 0.5
+            for _ in range(steps):
+                l, g = grad_fn(params)
+                params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+            log(f"trained {name}: loss {float(l):.3f} in {time.time() - t0:.1f}s")
+            self._models[name] = params
+            self._predict[name] = jax.jit(lambda p, xx: jax.nn.softmax(_mlp_apply(p, xx)))
+        self._trained = True
+
+    # -- pipeline ---------------------------------------------------------------
+
+    def run_sample(self, config: Config, sample_index: int) -> float:
+        self.prepare()
+        d = self.space.as_dict(config)
+        img, label, _ = self.task.sample(1, noise=0.5, seed=10_000 + sample_index)
+        x = jnp.asarray(img)
+        if d["smoothing"] > 0:
+            x = (1 - d["smoothing"]) * x + d["smoothing"] * 0.5  # shrink noise
+        probs = self._predict[d["detector"]](self._models[d["detector"]], x)
+        conf = float(jnp.max(probs))
+        pred = int(jnp.argmax(probs))
+        if d["verifier"] != "none" and conf < d["confidence"]:
+            probs = self._predict[d["verifier"]](self._models[d["verifier"]], x)
+            pred = int(jnp.argmax(probs))
+        return 1.0 if pred == int(label[0]) else 0.0
+
+    # SampleEvaluator protocol
+    def evaluate_samples(self, config: Config, sample_indices: Sequence[int]
+                         ) -> List[float]:
+        return [self.run_sample(config, i) for i in sample_indices]
+
+    __call__ = evaluate_samples
+
+    # LatencyProfiler protocol — real wall-clock
+    def profile_latency(self, config: Config, num_samples: int) -> List[float]:
+        self.prepare()
+        out = []
+        for i in range(num_samples):
+            t0 = time.perf_counter()
+            self.run_sample(config, 50_000 + i)
+            out.append(time.perf_counter() - t0)
+        return out
+
+    def executor_fn(self, config: Config, payload: Any) -> float:
+        return self.run_sample(config, int(payload) if payload is not None else 0)

@@ -1,0 +1,117 @@
+"""Synthetic tasks with ground truth for the real-model workflows.
+
+**Needle QA** (drives the RAG workflow): a corpus of (key, value) fact
+documents.  A query names a key; the correct answer is its value token.  The
+pipeline must retrieve the right document and the generator must copy the
+value out of the serialized context — the same retrieval+grounding structure
+as the paper's SQuAD RAG, scaled to tiny models.
+
+**Pattern classification** (drives the detection cascade): 8x8 binary
+images containing one of C prototype patterns plus noise; detector /
+verifier models classify them, and per-sample difficulty varies with the
+noise draw so a confidence-gated cascade genuinely helps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+# token-id layout for needle QA
+PAD, SEP, QUERY_MARK, ANS_MARK = 0, 1, 2, 3
+FIRST_CONTENT = 4
+
+
+@dataclass(frozen=True)
+class NeedleTask:
+    vocab_size: int = 256
+    num_keys: int = 48
+    corpus_size: int = 64
+    seq_len: int = 64
+    seed: int = 0
+
+    def keys_values(self) -> Tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        half = (self.vocab_size - FIRST_CONTENT) // 2
+        keys = FIRST_CONTENT + rng.choice(half, size=self.num_keys, replace=False)
+        values = FIRST_CONTENT + half + rng.choice(
+            half, size=self.num_keys, replace=False
+        )
+        return keys.astype(np.int64), values.astype(np.int64)
+
+    def corpus(self) -> List[Tuple[int, int]]:
+        """(key, value) documents; num_keys unique facts, the rest duplicates
+        with distractor values (retrieval must find a *relevant* doc)."""
+        rng = np.random.default_rng(self.seed + 1)
+        keys, values = self.keys_values()
+        docs = [(int(k), int(v)) for k, v in zip(keys, values)]
+        while len(docs) < self.corpus_size:
+            k = int(keys[rng.integers(self.num_keys)])
+            v = int(values[rng.integers(self.num_keys)])
+            docs.append((k, v))
+        return docs[: self.corpus_size]
+
+    # -- sequence serialization (shared by training and the live pipeline) --
+
+    def serialize(self, query_key: int, docs: Sequence[Tuple[int, int]]
+                  ) -> np.ndarray:
+        """[QUERY_MARK, key, SEP, (k, v, SEP)*, ANS_MARK] padded to seq_len."""
+        seq = [QUERY_MARK, query_key, SEP]
+        for k, v in docs:
+            if len(seq) + 3 >= self.seq_len - 1:
+                break
+            seq.extend([k, v, SEP])
+        seq.append(ANS_MARK)
+        seq = seq[: self.seq_len]
+        return np.array(seq + [PAD] * (self.seq_len - len(seq)), np.int64)
+
+    def answer_position(self, seq: np.ndarray) -> int:
+        pos = np.nonzero(seq == ANS_MARK)[0]
+        return int(pos[0]) if len(pos) else len(seq) - 1
+
+    def training_batch(self, batch: int, max_docs: int, step: int,
+                       *, seed: int = 0) -> Dict[str, np.ndarray]:
+        """Teacher-forced batches: context contains the gold doc among
+        distractors; label = value token at the ANS_MARK position."""
+        rng = np.random.default_rng((seed, step))
+        keys, values = self.keys_values()
+        toks = np.zeros((batch, self.seq_len), np.int64)
+        labels = np.full((batch, self.seq_len), PAD, np.int64)
+        for i in range(batch):
+            qi = rng.integers(self.num_keys)
+            n_docs = int(rng.integers(1, max_docs + 1))
+            distract = rng.choice(self.num_keys, size=n_docs - 1)
+            docs = [(int(keys[j]), int(values[j])) for j in distract]
+            docs.insert(int(rng.integers(n_docs)), (int(keys[qi]), int(values[qi])))
+            seq = self.serialize(int(keys[qi]), docs)
+            toks[i] = seq
+            labels[i, self.answer_position(seq)] = int(values[qi])
+        return {"tokens": toks.astype(np.int32), "labels": labels.astype(np.int32)}
+
+
+@dataclass(frozen=True)
+class PatternTask:
+    num_classes: int = 8
+    size: int = 8
+    seed: int = 0
+
+    def prototypes(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return (rng.random((self.num_classes, self.size, self.size)) > 0.5).astype(
+            np.float32
+        )
+
+    def sample(self, n: int, *, noise: float = 0.25, seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (images (n, size*size), labels (n,), difficulty (n,))."""
+        rng = np.random.default_rng((self.seed, seed))
+        protos = self.prototypes()
+        labels = rng.integers(0, self.num_classes, size=n)
+        # per-sample noise level: most easy, a tail of hard cases
+        diff = rng.beta(1.4, 3.0, size=n) * 2 * noise
+        imgs = protos[labels].reshape(n, -1).copy()
+        flips = rng.random(imgs.shape) < diff[:, None]
+        imgs = np.where(flips, 1.0 - imgs, imgs)
+        return imgs.astype(np.float32), labels.astype(np.int64), diff.astype(np.float32)

@@ -1,0 +1,75 @@
+"""Shared fixtures.
+
+NOTE: this process must keep the real single-device view — the 512-device
+forcing happens only inside ``repro.launch.dryrun`` subprocesses.
+"""
+
+import random
+
+import pytest
+
+from repro.core.compass_v import CompassV
+from repro.core.pareto import LatencyProfile, ParetoPoint
+from repro.core.planner import Planner
+from repro.workflows.surrogate import DetectionSurrogate, RagSurrogate
+
+
+@pytest.fixture(scope="session")
+def rag_surrogate():
+    return RagSurrogate(seed=0)
+
+
+@pytest.fixture(scope="session")
+def detection_surrogate():
+    return DetectionSurrogate(seed=0)
+
+
+def full_budget_accuracy(surrogate, config, budget=100):
+    xs = surrogate.evaluate_samples(config, range(budget))
+    return sum(xs) / len(xs)
+
+
+def exhaustive_feasible(surrogate, tau, budget=100):
+    """Ground truth exactly as the paper's grid-search baseline computes it:
+    every configuration evaluated at the full budget."""
+    return {
+        c
+        for c in surrogate.space.enumerate()
+        if full_budget_accuracy(surrogate, c, budget) >= tau
+    }
+
+
+def make_profiler(surrogate):
+    def profiler(config, n):
+        import zlib
+
+        rng = random.Random(zlib.crc32(repr(config).encode()) & 0xFFFF)
+        m = surrogate.mean_latency_s(config)
+        cv = surrogate.latency_cv(config)
+        return [max(1e-4, rng.gauss(m, m * cv)) for _ in range(n)]
+
+    return profiler
+
+
+@pytest.fixture(scope="session")
+def rag_plan(rag_surrogate):
+    """Search -> plan pipeline output for the RAG surrogate at tau=0.75."""
+    res = CompassV(
+        space=rag_surrogate.space,
+        evaluator=rag_surrogate,
+        tau=0.75,
+        budget_schedule=(10, 25, 50, 100),
+        seed=0,
+    ).run()
+    plan = Planner(profiler=make_profiler(rag_surrogate)).plan(
+        res.feasible, slo_p95_s=1.0
+    )
+    return res, plan
+
+
+def synthetic_point(mean, p95, acc, name="c"):
+    return ParetoPoint(
+        config=(name, mean),
+        accuracy=acc,
+        profile=LatencyProfile(mean=mean, p95=p95),
+    )

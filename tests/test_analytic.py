@@ -1,0 +1,102 @@
+"""Analytic FLOP/byte model invariants (the roofline's compute/memory source)."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs  # noqa: F401
+from repro.launch.analytic import param_bytes_cached, serving_config_costs, step_costs
+from repro.launch.roofline import model_flops_for
+from repro.models.registry import arch_ids, get_config
+
+ARCHS = arch_ids()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("kind,seq,batch", [
+    ("train", 4096, 256), ("prefill", 32768, 32), ("decode", 32768, 128),
+])
+def test_costs_positive_and_consistent(arch, kind, seq, batch):
+    cfg = get_config(arch)
+    c = step_costs(cfg, kind, seq, batch)
+    assert c.flops > 0 and c.param_bytes > 0 and c.hbm_bytes > 0
+    assert c.hbm_bytes >= c.param_bytes * (0.99 if kind != "train" else 0)
+    # enc-dec: the 6ND token count is the decoder length (as run_case does)
+    dec_len = (seq // cfg.decoder_len_ratio) if cfg.family == "audio" else None
+    mf = model_flops_for(cfg, kind, seq, batch, decoder_len=dec_len)
+    assert mf > 0
+    # the 6ND floor never exceeds the analytic count by more than the model's
+    # known slack (elementwise/recurrence terms are not in 6ND)
+    assert mf / c.flops < 1.25, (arch, kind, mf / c.flops)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_flops_exceed_prefill(arch):
+    """Backward pass: train >= ~3x the prefill forward at the same shape."""
+    cfg = get_config(arch)
+    tr = step_costs(cfg, "train", 4096, 8).flops
+    pf = step_costs(cfg, "prefill", 4096, 8).flops
+    assert tr >= 2.5 * pf
+
+
+def test_flops_scale_linearly_in_batch_and_layers():
+    cfg = get_config("internlm2-1.8b")
+    f1 = step_costs(cfg, "train", 2048, 8).flops
+    f2 = step_costs(cfg, "train", 2048, 16).flops
+    assert f2 == pytest.approx(2 * f1, rel=1e-6)
+    cfg2 = dataclasses.replace(cfg, num_layers=cfg.num_layers * 2)
+    f3 = step_costs(cfg2, "train", 2048, 8).flops
+    assert f3 / f1 == pytest.approx(2.0, rel=0.15)  # unembed not doubled
+
+
+def test_sliding_window_cuts_decode_state_bytes():
+    cfg = get_config("stablelm-3b")
+    full = step_costs(cfg, "decode", 32768, 128)
+    win = step_costs(dataclasses.replace(cfg, sliding_window=8192),
+                     "decode", 32768, 128)
+    assert win.state_bytes < 0.3 * full.state_bytes
+
+
+def test_int8_kv_halves_state_bytes():
+    cfg = get_config("llama3-405b")
+    bf16 = step_costs(cfg, "decode", 32768, 128)
+    int8 = step_costs(dataclasses.replace(cfg, kv_cache_dtype="int8"),
+                      "decode", 32768, 128)
+    assert 0.4 < int8.state_bytes / bf16.state_bytes < 0.6
+
+
+def test_gshard_cheaper_than_dense_dispatch():
+    cfg = get_config("deepseek-moe-16b")
+    dense = step_costs(cfg, "train", 4096, 256).flops
+    gsh = step_costs(dataclasses.replace(cfg, moe_impl="gshard"),
+                     "train", 4096, 256).flops
+    assert gsh < 0.35 * dense
+
+
+@given(st.sampled_from(ARCHS), st.sampled_from([512, 2048, 8192]),
+       st.sampled_from([1, 8, 64]))
+@settings(max_examples=40, deadline=None)
+def test_decode_flops_independent_of_nothing_weird(arch, seq, batch):
+    """Decode FLOPs grow with batch, and with context only via attention."""
+    cfg = get_config(arch)
+    f_small = step_costs(cfg, "decode", seq, batch).flops
+    f_big_batch = step_costs(cfg, "decode", seq, batch * 2).flops
+    assert f_big_batch == pytest.approx(2 * f_small, rel=1e-6)
+
+
+def test_serving_config_costs_tradeoffs():
+    cfg = get_config("granite-moe-3b-a800m")
+    base_acc, base_s = serving_config_costs(
+        cfg, {"quant": "bf16", "batch_cap": 16, "window": 0, "moe_top_k": 8})
+    fast_acc, fast_s = serving_config_costs(
+        cfg, {"quant": "int8", "batch_cap": 16, "window": 1024, "moe_top_k": 2})
+    assert base_acc == 1.0
+    assert fast_acc < base_acc
+    assert fast_s < base_s  # the ladder premise: cheaper configs are faster
+
+
+def test_param_bytes_cached_stable():
+    cfg = get_config("minitron-4b")
+    assert param_bytes_cached(cfg) == param_bytes_cached(cfg) > 1e9

@@ -1,0 +1,126 @@
+"""AQM threshold derivation (paper §V, Eqs. 7-13)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    derive_policies,
+    expected_wait,
+    ladder_is_monotone,
+    max_sustainable_rate,
+)
+
+from conftest import synthetic_point
+
+
+def simple_front():
+    # fast / medium / accurate, roughly the paper's Table I shape (seconds)
+    return [
+        synthetic_point(0.14, 0.20, 0.761, "fast"),
+        synthetic_point(0.32, 0.45, 0.825, "medium"),
+        synthetic_point(0.50, 0.70, 0.853, "accurate"),
+    ]
+
+
+def test_thresholds_match_hand_computation():
+    front = simple_front()
+    L, hs = 1.0, 0.05
+    table = derive_policies(front, slo_p95_s=L, slack_buffer_s=hs)
+    p0, p1, p2 = table.policies
+
+    # Eq. 7: Delta_k = L - s95_k
+    assert math.isclose(p0.queuing_slack, 1.0 - 0.20)
+    assert math.isclose(p2.queuing_slack, 1.0 - 0.70)
+    # Eq. 10: N_up = floor(Delta_k / mean_k)
+    assert p0.upscale_threshold == math.floor(0.80 / 0.14)  # 5
+    assert p1.upscale_threshold == math.floor(0.55 / 0.32)  # 1
+    assert p2.upscale_threshold == math.floor(0.30 / 0.50)  # 0
+    # Eq. 13: N_dn = floor((Delta_{k+1} - h_s) / mean_{k+1})
+    assert p0.downscale_threshold == math.floor((0.55 - hs) / 0.32)  # 1
+    assert p1.downscale_threshold == math.floor((0.30 - hs) / 0.50)  # 0
+    assert p2.downscale_threshold is None  # top rung
+
+
+def test_eq11_ladder_monotone():
+    table = derive_policies(simple_front(), slo_p95_s=1.0)
+    assert ladder_is_monotone(table)
+
+
+def test_infeasible_configs_excluded():
+    front = simple_front() + [synthetic_point(1.2, 1.8, 0.90, "too-slow")]
+    table = derive_policies(front, slo_p95_s=1.0)
+    assert len(table.excluded) == 1
+    assert table.excluded[0].config[0] == "too-slow"
+    assert table.ladder_size == 3
+
+
+def test_all_infeasible_gives_empty_ladder():
+    front = [synthetic_point(2.0, 3.0, 0.9, "slow")]
+    table = derive_policies(front, slo_p95_s=1.0)
+    assert table.ladder_size == 0 and len(table.excluded) == 1
+
+
+def test_requires_ordered_front():
+    front = simple_front()[::-1]
+    with pytest.raises(ValueError):
+        derive_policies(front, slo_p95_s=1.0)
+    with pytest.raises(ValueError):
+        derive_policies(simple_front(), slo_p95_s=0.0)
+
+
+def test_hysteresis_validation():
+    with pytest.raises(ValueError):
+        HysteresisSpec(upscale_cooldown_s=-1.0)
+
+
+def test_expected_wait_and_rate():
+    assert expected_wait(5, 0.2) == 1.0
+    table = derive_policies(simple_front(), slo_p95_s=1.0)
+    assert math.isclose(max_sustainable_rate(table.policy(0)), 1 / 0.14)
+
+
+# -- property: thresholds well-formed for arbitrary valid fronts --------------
+
+
+@st.composite
+def random_fronts(draw):
+    n = draw(st.integers(1, 8))
+    means = sorted(
+        draw(
+            st.lists(
+                st.floats(0.01, 1.5, allow_nan=False),
+                min_size=n,
+                max_size=n,
+                unique=True,
+            )
+        )
+    )
+    pts = []
+    acc = 0.5
+    for i, m in enumerate(means):
+        acc += draw(st.floats(0.001, 0.05))
+        p95 = m * draw(st.floats(1.0, 2.0))
+        pts.append(synthetic_point(m, p95, acc, f"c{i}"))
+    return pts
+
+
+@given(random_fronts(), st.floats(0.2, 3.0))
+@settings(max_examples=150, deadline=None)
+def test_policy_table_invariants(front, slo):
+    table = derive_policies(front, slo_p95_s=slo)
+    assert table.ladder_size + len(table.excluded) == len(front)
+    for k, pol in enumerate(table.policies):
+        assert pol.index == k
+        assert pol.queuing_slack > 0           # admitted => positive slack
+        assert pol.upscale_threshold >= 0
+        if k + 1 < table.ladder_size:
+            assert pol.downscale_threshold is not None
+            assert pol.downscale_threshold >= 0
+        if k == table.ladder_size - 1:
+            assert pol.downscale_threshold is None
+    for p in table.excluded:
+        assert slo - p.profile.p95 <= 0

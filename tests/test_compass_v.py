@@ -1,0 +1,103 @@
+"""COMPASS-V end-to-end: recall, savings, termination (paper §IV, §VI-B)."""
+
+import pytest
+
+from repro.core.compass_v import CompassV
+from repro.workflows.surrogate import (
+    DetectionSurrogate,
+    RagSurrogate,
+    paper_detection_thresholds,
+    paper_rag_thresholds,
+)
+
+from conftest import exhaustive_feasible
+
+
+def run_search(surrogate, tau, budget=(10, 25, 50, 100), seed=0):
+    cv = CompassV(
+        space=surrogate.space,
+        evaluator=surrogate,
+        tau=tau,
+        budget_schedule=budget,
+        seed=seed,
+    )
+    return cv.run()
+
+
+@pytest.mark.parametrize("tau", [0.5, 0.75, 0.85])
+def test_rag_full_recall(rag_surrogate, tau):
+    """Paper headline: 100% recall vs exhaustive grid-search ground truth."""
+    res = run_search(rag_surrogate, tau)
+    gt = exhaustive_feasible(rag_surrogate, tau)
+    found = set(res.feasible)
+    missed = gt - found
+    assert not missed, f"missed {len(missed)}/{len(gt)} feasible configs"
+    assert res.recall(gt) == 1.0
+
+
+@pytest.mark.parametrize("tau", [0.6, 0.7])
+def test_detection_full_recall(detection_surrogate, tau):
+    res = run_search(detection_surrogate, tau, budget=(20, 50, 100, 200))
+    gt = exhaustive_feasible(detection_surrogate, tau, budget=200)
+    assert not (gt - set(res.feasible))
+
+
+def test_savings_positive_at_tight_threshold(rag_surrogate):
+    """At tight thresholds most configs early-stop as infeasible; savings must
+    be large (paper: up to 95.3%)."""
+    res = run_search(rag_surrogate, 0.85)
+    exhaustive = rag_surrogate.space.cardinality * 100
+    savings = res.savings_vs_exhaustive(rag_surrogate.space, 100)
+    assert savings > 0.3
+    assert res.samples_consumed < exhaustive
+
+
+def test_each_config_evaluated_at_most_once(rag_surrogate):
+    res = run_search(rag_surrogate, 0.75)
+    assert len(res.evaluated) == res.num_evaluations
+    assert res.num_evaluations <= rag_surrogate.space.cardinality
+
+
+def test_feasible_subset_of_evaluated(rag_surrogate):
+    res = run_search(rag_surrogate, 0.75)
+    assert set(res.feasible) <= set(res.evaluated)
+    for c, a in res.feasible.items():
+        assert 0.0 <= a <= 1.0
+
+
+def test_trace_is_anytime_monotone(rag_surrogate):
+    """The convergence trace (Fig. 3) must be monotone: cumulative samples and
+    discovered-feasible counts only grow."""
+    res = run_search(rag_surrogate, 0.75)
+    samples = [t.samples for t in res.trace]
+    found = [t.feasible_found for t in res.trace]
+    assert samples == sorted(samples)
+    assert found == sorted(found)
+    assert found[-1] == len(res.feasible)
+
+
+def test_deterministic_given_seed(rag_surrogate):
+    r1 = run_search(rag_surrogate, 0.75, seed=3)
+    r2 = run_search(rag_surrogate, 0.75, seed=3)
+    assert set(r1.feasible) == set(r2.feasible)
+    assert r1.samples_consumed == r2.samples_consumed
+
+
+def test_empty_feasible_set_terminates(rag_surrogate):
+    res = run_search(rag_surrogate, 0.999)
+    assert dict(res.feasible) == {}
+    # early stopping should have pruned aggressively
+    assert res.savings_vs_exhaustive(rag_surrogate.space, 100) > 0.5
+
+
+def test_paper_threshold_grids_cover_both_workflows():
+    assert len(paper_rag_thresholds()) == 8
+    assert len(paper_detection_thresholds()) == 8
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tau", paper_rag_thresholds())
+def test_rag_recall_all_paper_thresholds(rag_surrogate, tau):
+    res = run_search(rag_surrogate, tau)
+    gt = exhaustive_feasible(rag_surrogate, tau)
+    assert not (gt - set(res.feasible)), f"tau={tau}"

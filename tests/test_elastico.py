@@ -1,0 +1,130 @@
+"""Elastico controller: ladder walking + asymmetric hysteresis (paper §V-F)."""
+
+import pytest
+
+from repro.core.aqm import HysteresisSpec, derive_policies
+from repro.core.elastico import ElasticoController
+
+from conftest import synthetic_point
+
+
+def make_table(upscale_cd=0.0, downscale_cd=5.0):
+    front = [
+        synthetic_point(0.14, 0.20, 0.761, "fast"),
+        synthetic_point(0.32, 0.45, 0.825, "medium"),
+        synthetic_point(0.50, 0.70, 0.853, "accurate"),
+    ]
+    return derive_policies(
+        front,
+        slo_p95_s=1.0,
+        hysteresis=HysteresisSpec(
+            upscale_cooldown_s=upscale_cd, downscale_cooldown_s=downscale_cd
+        ),
+    )
+
+
+def test_starts_at_most_accurate():
+    ctrl = ElasticoController(make_table())
+    assert ctrl.current_index == 2
+    assert ctrl.current_policy.point.config[0] == "accurate"
+
+
+def test_upscale_is_immediate():
+    ctrl = ElasticoController(make_table())
+    # accurate rung tolerates N_up=0; depth 1 must trip an immediate switch
+    ev = ctrl.observe(queue_depth=1, now_s=0.0)
+    assert ev is not None and ev.direction == "faster"
+    assert ctrl.current_index == 1
+
+
+def test_upscale_steps_one_rung_by_default():
+    ctrl = ElasticoController(make_table())
+    ctrl.observe(queue_depth=50, now_s=0.0)
+    assert ctrl.current_index == 1  # paper-faithful: rung by rung
+    ctrl.observe(queue_depth=50, now_s=0.1)
+    assert ctrl.current_index == 0
+
+
+def test_aggressive_descent_jumps():
+    ctrl = ElasticoController(make_table(), aggressive_descent=True)
+    ctrl.observe(queue_depth=50, now_s=0.0)
+    assert ctrl.current_index == 0  # beyond-paper: straight to fastest
+
+
+def test_downscale_requires_sustained_low_load():
+    ctrl = ElasticoController(make_table(downscale_cd=5.0), initial_index=0)
+    # low depth but not sustained: no switch before the cooldown elapses
+    assert ctrl.observe(0, now_s=0.0) is None
+    assert ctrl.observe(0, now_s=2.0) is None
+    assert ctrl.current_index == 0
+    ev = ctrl.observe(0, now_s=5.0)  # sustained 5s
+    assert ev is not None and ev.direction == "more_accurate"
+    assert ctrl.current_index == 1
+
+
+def test_high_depth_resets_sustain_window():
+    ctrl = ElasticoController(make_table(downscale_cd=5.0), initial_index=0)
+    ctrl.observe(0, now_s=0.0)
+    ctrl.observe(100, now_s=2.0)       # burst: resets low-load window
+    ctrl.observe(0, now_s=3.0)
+    assert ctrl.observe(0, now_s=7.9) is None   # only 4.9s sustained
+    assert ctrl.observe(0, now_s=8.1) is not None
+
+
+def test_no_oscillation_under_fluctuating_load():
+    """Alternating depths around the fast rung's thresholds must not produce
+    rapid back-and-forth switching (the hysteresis claim)."""
+    ctrl = ElasticoController(make_table(downscale_cd=5.0), initial_index=0)
+    t = 0.0
+    for i in range(100):
+        depth = 0 if i % 2 == 0 else 2   # flaps every 100 ms
+        ctrl.observe(depth, now_s=t)
+        t += 0.1
+    # N_dn[0]=1, so depth 2 resets the window; depth never exceeds N_up[0]=5
+    assert ctrl.current_index == 0
+    assert len(ctrl.events) == 0
+
+
+def test_converges_to_most_accurate_under_zero_load():
+    ctrl = ElasticoController(make_table(downscale_cd=1.0), initial_index=0)
+    t = 0.0
+    for _ in range(100):
+        ctrl.observe(0, now_s=t)
+        t += 0.25
+    assert ctrl.current_index == 2  # top of the ladder
+    dirs = {e.direction for e in ctrl.events}
+    assert dirs == {"more_accurate"}
+
+
+def test_upscale_cooldown_blocks_consecutive_switches():
+    ctrl = ElasticoController(make_table(upscale_cd=1.0))
+    assert ctrl.observe(50, now_s=0.0) is not None
+    assert ctrl.observe(50, now_s=0.5) is None   # within cooldown
+    assert ctrl.observe(50, now_s=1.5) is not None
+
+
+def test_bounds_and_validation():
+    table = make_table()
+    with pytest.raises(ValueError):
+        ElasticoController(table, initial_index=99)
+    ctrl = ElasticoController(table, initial_index=0)
+    with pytest.raises(ValueError):
+        ctrl.observe(-1, now_s=0.0)
+    # at fastest rung, huge depth cannot move further down
+    assert ctrl.observe(10_000, now_s=0.0) is None
+    assert ctrl.current_index == 0
+
+
+def test_empty_table_rejected():
+    front = [synthetic_point(2.0, 3.0, 0.9, "slow")]
+    table = derive_policies(front, slo_p95_s=1.0)
+    with pytest.raises(ValueError):
+        ElasticoController(table)
+
+
+def test_reset():
+    ctrl = ElasticoController(make_table())
+    ctrl.observe(50, now_s=0.0)
+    assert ctrl.current_index != 2 or ctrl.events
+    ctrl.reset()
+    assert ctrl.current_index == 2 and ctrl.events == []

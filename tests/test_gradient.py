@@ -1,0 +1,76 @@
+"""IDW finite-difference gradients (paper Eq. 3) and lateral-axis selection."""
+
+import math
+
+import pytest
+
+from repro.core.gradient import idw_gradient, low_gradient_axes
+from repro.core.space import ConfigSpace, Parameter
+
+
+def grid_space(n=5, m=5):
+    return ConfigSpace(
+        [
+            Parameter("x", tuple(range(n)), kind="ordinal"),
+            Parameter("y", tuple(range(m)), kind="ordinal"),
+        ]
+    )
+
+
+def test_gradient_points_uphill_on_linear_surface():
+    """Acc = x_norm (increases along axis 0, flat along axis 1)."""
+    space = grid_space()
+    evaluated = {c: space.normalize(c)[0] for c in space.enumerate()}
+    g = idw_gradient(space, (2, 2), evaluated, k=8)
+    assert g.vector[0] > 0.1
+    assert abs(g.vector[1]) < 1e-6
+    assert g.support == 8
+
+
+def test_gradient_sign_flips_on_descending_surface():
+    space = grid_space()
+    evaluated = {c: 1.0 - space.normalize(c)[0] for c in space.enumerate()}
+    g = idw_gradient(space, (2, 2), evaluated, k=8)
+    assert g.vector[0] < -0.1
+
+
+def test_gradient_requires_center_evaluated():
+    space = grid_space()
+    with pytest.raises(KeyError):
+        idw_gradient(space, (0, 0), {(1, 1): 0.5})
+
+
+def test_gradient_no_neighbors_is_zero():
+    space = grid_space()
+    g = idw_gradient(space, (0, 0), {(0, 0): 0.5})
+    assert g.vector == (0.0, 0.0)
+    assert g.support == 0 and g.magnitude == 0.0
+
+
+def test_closer_neighbors_dominate():
+    """IDW weighting: a near neighbor with +delta outweighs a far one with
+    -delta."""
+    space = grid_space(9, 9)
+    c = (4, 4)
+    evaluated = {
+        c: 0.5,
+        (5, 4): 0.6,   # distance 1/8 on axis 0, uphill
+        (0, 4): 0.1,   # distance 4/8, steeply downhill but far
+    }
+    g = idw_gradient(space, c, evaluated, k=8, power=2.0)
+    assert g.vector[0] > 0
+
+
+def test_low_gradient_axes_orders_by_magnitude():
+    from repro.core.gradient import GradientEstimate
+
+    g = GradientEstimate(vector=(0.9, 0.01, -0.5, 0.02), support=4)
+    axes = low_gradient_axes(g, fraction=0.5)
+    assert set(axes) == {1, 3}
+
+
+def test_magnitude():
+    from repro.core.gradient import GradientEstimate
+
+    g = GradientEstimate(vector=(3.0, 4.0), support=2)
+    assert math.isclose(g.magnitude, 5.0)

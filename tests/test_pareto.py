@@ -1,0 +1,103 @@
+"""Pareto front construction + ladder invariants (paper §V-A, Eq. 4)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pareto import (
+    LatencyProfile,
+    ParetoPoint,
+    pareto_front,
+    thin_front,
+    validate_front,
+)
+
+from conftest import synthetic_point
+
+
+def test_front_drops_dominated():
+    pts = [
+        synthetic_point(0.1, 0.15, 0.70, "fast"),
+        synthetic_point(0.2, 0.30, 0.80, "mid"),
+        synthetic_point(0.3, 0.45, 0.75, "dominated"),  # slower AND worse than mid
+        synthetic_point(0.4, 0.60, 0.90, "best"),
+    ]
+    front = pareto_front(pts)
+    names = [p.config[0] for p in front]
+    assert names == ["fast", "mid", "best"]
+    validate_front(front)
+
+
+def test_front_ordering_implies_accuracy_ordering():
+    pts = [synthetic_point(m, m * 1.4, a, f"c{i}") for i, (m, a) in enumerate(
+        [(0.1, 0.7), (0.15, 0.75), (0.2, 0.74), (0.25, 0.8)]
+    )]
+    front = pareto_front(pts)
+    accs = [p.accuracy for p in front]
+    means = [p.profile.mean for p in front]
+    assert accs == sorted(accs) and means == sorted(means)
+
+
+@st.composite
+def point_lists(draw):
+    n = draw(st.integers(2, 25))
+    pts = []
+    for i in range(n):
+        mean = draw(st.floats(0.01, 2.0, allow_nan=False))
+        acc = draw(st.floats(0.0, 1.0, allow_nan=False))
+        pts.append(synthetic_point(mean, mean * 1.5, acc, f"c{i}"))
+    return pts
+
+
+@given(point_lists())
+@settings(max_examples=100, deadline=None)
+def test_front_points_not_dominated(pts):
+    front = pareto_front(pts)
+    assert front, "front never empty for non-empty input"
+    for f in front:
+        for p in pts:
+            strictly_better = (
+                p.accuracy >= f.accuracy
+                and p.profile.mean <= f.profile.mean
+                and (p.accuracy > f.accuracy or p.profile.mean < f.profile.mean)
+            )
+            assert not strictly_better, (f, p)
+    # ladder invariant
+    validate_front(front)
+
+
+@given(point_lists())
+@settings(max_examples=50, deadline=None)
+def test_front_contains_best_accuracy_and_best_latency(pts):
+    front = pareto_front(pts)
+    best_acc = max(p.accuracy for p in pts)
+    best_lat = min(p.profile.mean for p in pts)
+    assert any(p.accuracy == best_acc for p in front)
+    assert any(p.profile.mean == best_lat for p in front)
+
+
+def test_thin_front_keeps_ends_and_gaps():
+    pts = [
+        synthetic_point(0.10, 0.15, 0.700, "c0"),
+        synthetic_point(0.11, 0.16, 0.702, "c1"),  # within gap -> thinned
+        synthetic_point(0.20, 0.30, 0.800, "c2"),
+        synthetic_point(0.30, 0.45, 0.900, "c3"),
+    ]
+    front = pareto_front(pts)
+    thinned = thin_front(front, min_accuracy_gap=0.01)
+    names = [p.config[0] for p in thinned]
+    assert names == ["c0", "c2", "c3"]
+    assert thinned[0] is front[0] and thinned[-1].accuracy == 0.900
+
+
+def test_thin_front_empty_and_singleton():
+    assert thin_front([]) == []
+    p = synthetic_point(0.1, 0.15, 0.7)
+    assert thin_front([p]) == [p]
+
+
+def test_latency_profile_validation():
+    with pytest.raises(ValueError):
+        LatencyProfile(mean=0.0, p95=0.1)
+    with pytest.raises(ValueError):
+        LatencyProfile(mean=1.0, p95=0.1)  # p95 far below mean

@@ -1,0 +1,85 @@
+"""PredictiveElastico: anticipatory switching (paper §VIII future work)."""
+
+import pytest
+
+from repro.core.aqm import HysteresisSpec, derive_policies
+from repro.core.elastico import ElasticoController
+from repro.core.predictive import PredictiveElastico
+
+from conftest import synthetic_point
+
+
+def make_table():
+    front = [
+        synthetic_point(0.10, 0.14, 0.76, "fast"),
+        synthetic_point(0.25, 0.35, 0.82, "medium"),
+        synthetic_point(0.45, 0.63, 0.85, "accurate"),
+    ]
+    return derive_policies(front, slo_p95_s=1.0,
+                           hysteresis=HysteresisSpec(downscale_cooldown_s=5.0))
+
+
+def test_zero_horizon_matches_reactive():
+    """horizon=0 must reproduce the reactive controller decision-for-decision."""
+    table = make_table()
+    reactive = ElasticoController(table)
+    predictive = PredictiveElastico(table, horizon_s=0.0)
+    depths = [0, 0, 1, 3, 5, 9, 4, 2, 0, 0, 0, 0, 7, 1, 0]
+    for i, d in enumerate(depths):
+        e1 = reactive.observe(d, i * 0.25)
+        e2 = predictive.observe(d, i * 0.25)
+        assert (e1 is None) == (e2 is None)
+        assert reactive.current_index == predictive.current_index
+
+
+def test_predictive_switches_before_threshold_crossed():
+    """A rising queue that has NOT yet crossed N_up must already trigger the
+    anticipatory upscale."""
+    table = make_table()
+    # start at the accurate rung: N_up = 0 there, so use medium (index 1)
+    ctrl = PredictiveElastico(table, horizon_s=3.0, rate_halflife_s=0.5,
+                              initial_index=1)
+    n_up = table.policy(1).upscale_threshold
+    # queue grows by 1 every 250 ms but stays AT the threshold, not above
+    t, ev = 0.0, None
+    for d in range(n_up + 1):  # 0..N_up inclusive — never exceeds N_up
+        ev = ctrl.observe(d, t)
+        if ev is not None:
+            break
+        t += 0.25
+    assert ev is not None and ev.direction == "faster"
+    # a reactive controller never switches on the same trace
+    reactive = ElasticoController(table, initial_index=1)
+    t = 0.0
+    for d in range(n_up + 1):
+        assert reactive.observe(d, t) is None
+        t += 0.25
+
+
+def test_predictive_steady_queue_no_false_positive():
+    """A constant (non-growing) queue below N_up must not trigger."""
+    table = make_table()
+    ctrl = PredictiveElastico(table, horizon_s=3.0, initial_index=1)
+    n_up = table.policy(1).upscale_threshold
+    for i in range(50):
+        assert ctrl.observe(max(0, n_up - 1), i * 0.25) is None
+    assert ctrl.current_index == 1
+
+
+def test_predictive_downscale_still_hysteretic():
+    table = make_table()
+    ctrl = PredictiveElastico(table, horizon_s=3.0, initial_index=0)
+    assert ctrl.observe(0, 0.0) is None
+    assert ctrl.observe(0, 2.0) is None         # not sustained yet
+    ev = ctrl.observe(0, 5.0)
+    assert ev is not None and ev.direction == "more_accurate"
+
+
+def test_reset_clears_rate_state():
+    table = make_table()
+    ctrl = PredictiveElastico(table, horizon_s=3.0, initial_index=1)
+    ctrl.observe(0, 0.0)
+    ctrl.observe(5, 0.25)
+    ctrl.reset()
+    assert ctrl._rate == 0.0 and ctrl._last_depth is None
+    assert ctrl.current_index == 1

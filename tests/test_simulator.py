@@ -1,0 +1,174 @@
+"""Discrete-event M/G/1 serving simulator + workload generators (paper §VI-C)."""
+
+import math
+import statistics
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aqm import HysteresisSpec, derive_policies
+from repro.core.elastico import ElasticoController
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workload import (
+    bursty_pattern,
+    constant_rate,
+    diurnal_pattern,
+    generate_arrivals,
+    spike_pattern,
+)
+
+from conftest import synthetic_point
+
+
+def ladder_table(**hyst):
+    front = [
+        synthetic_point(0.10, 0.14, 0.76, "fast"),
+        synthetic_point(0.25, 0.35, 0.82, "medium"),
+        synthetic_point(0.45, 0.63, 0.85, "accurate"),
+    ]
+    return derive_policies(
+        front, slo_p95_s=1.0, hysteresis=HysteresisSpec(**hyst)
+    )
+
+
+MEANS = [0.10, 0.25, 0.45]
+
+
+def deterministic_sampler(idx, rng):
+    return MEANS[idx]
+
+
+# -- workload generators -------------------------------------------------------
+
+
+def test_constant_rate_mean_count():
+    arr = generate_arrivals(constant_rate(10.0), 100.0, seed=0)
+    # Poisson(1000): mean 1000, sd ~32
+    assert 870 <= len(arr) <= 1130
+    assert all(0 <= t <= 100.0 for t in arr)
+    assert arr == sorted(arr)
+
+
+def test_arrivals_reproducible_by_seed():
+    f = spike_pattern(2.0)
+    assert generate_arrivals(f, 60, seed=4) == generate_arrivals(f, 60, seed=4)
+    assert generate_arrivals(f, 60, seed=4) != generate_arrivals(f, 60, seed=5)
+
+
+def test_spike_pattern_shape():
+    f = spike_pattern(1.5, factor=4.0, duration_s=180.0)
+    assert math.isclose(f(10.0), 1.5)          # before spike
+    assert math.isclose(f(90.0), 6.0)          # middle third
+    assert math.isclose(f(170.0), 1.5)         # after
+
+
+def test_bursty_pattern_bounded():
+    f = bursty_pattern(1.5, seed=0, burst_factor_range=(2.0, 5.0))
+    rates = [f(t / 10) for t in range(1800)]
+    assert min(rates) >= 1.5 - 1e-9
+    assert max(rates) <= 1.5 * 5.0 + 1e-9
+    assert max(rates) > 1.5  # bursts actually occur
+
+
+def test_diurnal_pattern_positive():
+    f = diurnal_pattern(1.5)
+    assert all(f(t) > 0 for t in range(0, 200, 5))
+
+
+# -- simulator invariants -------------------------------------------------------
+
+
+def test_all_requests_complete_and_fifo():
+    arr = generate_arrivals(constant_rate(3.0), 60.0, seed=1)
+    sim = ServingSimulator(deterministic_sampler, static_index=0, seed=0)
+    out = sim.run(arr, 60.0)
+    assert len(out.completed) == len(arr)
+    starts = [r.start_s for r in sorted(out.completed, key=lambda r: r.arrival_s)]
+    assert starts == sorted(starts)  # FIFO, no preemption
+    for r in out.completed:
+        assert r.completion_s >= r.start_s >= r.arrival_s
+
+
+def test_low_load_deterministic_service_no_wait():
+    """lambda * s = 0.1: waits should be ~0 and latency == service time."""
+    arr = [float(i) for i in range(30)]  # 1 QPS deterministic spacing
+    sim = ServingSimulator(deterministic_sampler, static_index=0, seed=0)
+    out = sim.run(arr, 40.0)
+    for r in out.completed:
+        assert r.wait_s == pytest.approx(0.0, abs=1e-9)
+        assert r.latency_s == pytest.approx(0.10, abs=1e-9)
+
+
+def test_overload_builds_queue():
+    """Static accurate config at 5 QPS (rho = 2.25): latency must blow up."""
+    arr = generate_arrivals(constant_rate(5.0), 60.0, seed=2)
+    sim = ServingSimulator(deterministic_sampler, static_index=2, seed=0)
+    out = sim.run(arr, 60.0)
+    assert out.slo_compliance(1.0) < 0.5
+    assert out.p95_latency() > 5.0
+
+
+def test_static_vs_elastico_under_spike():
+    """The paper's core claim (Fig. 5): Elastico beats static-accurate on
+    compliance and static-fast on accuracy."""
+    arr = generate_arrivals(spike_pattern(2.0, factor=4.0), 180.0, seed=1)
+    accs = [0.76, 0.82, 0.85]
+
+    def run(ctrl, static=0):
+        sim = ServingSimulator(
+            deterministic_sampler, controller=ctrl, static_index=static, seed=0
+        )
+        out = sim.run(arr, 180.0)
+        acc = statistics.mean(accs[r.config_index] for r in out.completed)
+        return out.slo_compliance(1.0), acc
+
+    comp_e, acc_e = run(ElasticoController(ladder_table()))
+    comp_f, acc_f = run(None, static=0)
+    comp_a, acc_a = run(None, static=2)
+
+    assert comp_e > comp_a + 0.3       # >> static-accurate compliance
+    assert acc_e > acc_f + 0.005       # > static-fast accuracy
+    assert comp_e > 0.85               # paper: 90-98% band
+
+
+def test_switch_latency_counts():
+    arr = generate_arrivals(spike_pattern(3.0, factor=4.0), 120.0, seed=3)
+    ctrl = ElasticoController(ladder_table())
+    sim = ServingSimulator(deterministic_sampler, controller=ctrl, seed=0)
+    out = sim.run(arr, 120.0)
+    assert len(out.switch_events) >= 1
+    # timeline covers the full horizon and uses valid indices
+    for t, idx in out.config_timeline:
+        assert 0 <= idx < 3
+
+
+def test_queue_depth_samples_nonnegative():
+    arr = generate_arrivals(constant_rate(8.0), 30.0, seed=0)
+    sim = ServingSimulator(deterministic_sampler, static_index=1, seed=0)
+    out = sim.run(arr, 30.0)
+    assert all(d >= 0 for _, d in out.queue_depth_samples)
+
+
+def test_result_metrics_consistency():
+    arr = generate_arrivals(constant_rate(2.0), 30.0, seed=0)
+    sim = ServingSimulator(deterministic_sampler, static_index=0, seed=0)
+    out = sim.run(arr, 30.0)
+    lats = out.latencies()
+    assert len(lats) == len(out.completed)
+    assert 0.0 <= out.slo_compliance(1.0) <= 1.0
+    assert out.slo_compliance(1e9) == 1.0
+    assert out.slo_compliance(1e-9) == 0.0
+
+
+@given(st.integers(0, 2**16), st.floats(1.0, 6.0))
+@settings(max_examples=20, deadline=None)
+def test_conservation_property(seed, qps):
+    """Every arrival is eventually completed exactly once, any load/seed."""
+    arr = generate_arrivals(constant_rate(qps), 20.0, seed=seed)
+    ctrl = ElasticoController(ladder_table())
+    sim = ServingSimulator(deterministic_sampler, controller=ctrl, seed=seed)
+    out = sim.run(arr, 20.0)
+    assert len(out.completed) == len(arr)
+    ids = [r.request_id for r in out.completed]
+    assert len(set(ids)) == len(ids)

@@ -1,0 +1,163 @@
+"""ConfigSpace: structure, geometry, adjacency, LHS (paper §II-A, §IV-C)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.space import (
+    ConfigSpace,
+    Parameter,
+    detection_paper_space,
+    rag_paper_space,
+)
+
+
+def small_space():
+    return ConfigSpace(
+        [
+            Parameter("a", (1, 2, 3), kind="ordinal"),
+            Parameter("b", ("x", "y"), kind="categorical"),
+            Parameter("c", (0.1, 0.2, 0.3, 0.4), kind="ordinal"),
+        ]
+    )
+
+
+# -- strategies ---------------------------------------------------------------
+
+spaces = st.sampled_from([small_space(), rag_paper_space(), detection_paper_space()])
+
+
+@st.composite
+def space_and_config(draw):
+    space = draw(spaces)
+    idx = tuple(draw(st.integers(0, p.cardinality - 1)) for p in space.parameters)
+    return space, space.from_indices(idx)
+
+
+# -- basics -------------------------------------------------------------------
+
+
+def test_cardinality_paper_spaces():
+    assert rag_paper_space().cardinality == 6 * 5 * 4 * 3
+    assert detection_paper_space().cardinality == 3 * 4 * 7 * 5
+
+
+def test_enumerate_is_exhaustive_and_unique():
+    space = small_space()
+    all_cfgs = list(space.enumerate())
+    assert len(all_cfgs) == space.cardinality == 24
+    assert len(set(all_cfgs)) == len(all_cfgs)
+
+
+def test_dict_roundtrip():
+    space = small_space()
+    cfg = (2, "y", 0.3)
+    assert space.from_dict(space.as_dict(cfg)) == cfg
+
+
+def test_validate_rejects_bad_configs():
+    space = small_space()
+    with pytest.raises(ValueError):
+        space.validate((1, "x"))  # wrong arity
+    with pytest.raises(KeyError):
+        space.validate((1, "z", 0.1))  # bad value
+
+
+def test_duplicate_parameter_names_rejected():
+    with pytest.raises(ValueError):
+        ConfigSpace([Parameter("a", (1,)), Parameter("a", (2,))])
+
+
+def test_parameter_validation():
+    with pytest.raises(ValueError):
+        Parameter("empty", ())
+    with pytest.raises(ValueError):
+        Parameter("dup", (1, 1))
+    with pytest.raises(ValueError):
+        Parameter("kind", (1, 2), kind="weird")
+
+
+# -- geometry -----------------------------------------------------------------
+
+
+@given(space_and_config())
+@settings(max_examples=60, deadline=None)
+def test_normalize_in_unit_cube(sc):
+    space, cfg = sc
+    x = space.normalize(cfg)
+    assert len(x) == space.num_parameters
+    assert all(0.0 <= v <= 1.0 for v in x)
+
+
+@given(space_and_config(), space_and_config())
+@settings(max_examples=60, deadline=None)
+def test_distance_symmetric_nonnegative(sc1, sc2):
+    space1, a = sc1
+    space2, b = sc2
+    if space1 is not space2:
+        return
+    d = space1.distance(a, b)
+    assert d >= 0.0
+    assert math.isclose(d, space1.distance(b, a))
+    assert (d == 0.0) == (space1.normalize(a) == space1.normalize(b))
+
+
+@given(space_and_config())
+@settings(max_examples=60, deadline=None)
+def test_neighbors_differ_in_exactly_one_axis(sc):
+    """Paper §IV-C adjacency: neighbors differ in exactly one parameter."""
+    space, cfg = sc
+    idx = space.indices(cfg)
+    for nb in space.neighbors(cfg):
+        nidx = space.indices(nb)
+        diffs = [i for i, (x, y) in enumerate(zip(idx, nidx)) if x != y]
+        assert len(diffs) == 1
+        ax = diffs[0]
+        if space.parameters[ax].kind == "ordinal":
+            assert abs(idx[ax] - nidx[ax]) == 1
+
+
+@given(space_and_config())
+@settings(max_examples=40, deadline=None)
+def test_adjacency_is_symmetric(sc):
+    space, cfg = sc
+    for nb in space.neighbors(cfg):
+        assert cfg in space.neighbors(nb)
+
+
+def test_step_on_axis_bounds():
+    space = small_space()
+    lo = space.from_indices((0, 0, 0))
+    assert space.step_on_axis(lo, 0, -1) is None
+    up = space.step_on_axis(lo, 0, +1)
+    assert space.indices(up)[0] == 1
+
+
+# -- LHS ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 5, 20, 100])
+def test_lhs_distinct_valid_samples(n):
+    space = rag_paper_space()
+    samples = space.lhs_sample(n, seed=3)
+    assert len(samples) == min(n, space.cardinality)
+    assert len(set(samples)) == len(samples)
+    for s in samples:
+        space.validate(s)
+
+
+def test_lhs_deterministic_per_seed():
+    space = detection_paper_space()
+    assert space.lhs_sample(16, seed=7) == space.lhs_sample(16, seed=7)
+    assert space.lhs_sample(16, seed=7) != space.lhs_sample(16, seed=8)
+
+
+def test_lhs_stratification_covers_axis():
+    """With n >= cardinality of an axis, every value of that axis appears."""
+    space = small_space()
+    samples = space.lhs_sample(24, seed=0)
+    for ax, p in enumerate(space.parameters):
+        seen = {space.indices(s)[ax] for s in samples}
+        assert seen == set(range(p.cardinality))

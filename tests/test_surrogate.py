@@ -1,0 +1,66 @@
+"""Calibrated surrogate workflows (paper-scale COMPASS-V substrate)."""
+
+import statistics
+
+import pytest
+
+from repro.core.space import detection_paper_space, rag_paper_space
+
+
+def test_spaces_match_paper_grids(rag_surrogate, detection_surrogate):
+    assert rag_surrogate.space.cardinality == rag_paper_space().cardinality
+    assert detection_surrogate.space.cardinality == detection_paper_space().cardinality
+
+
+def test_scores_in_unit_interval(rag_surrogate):
+    for c in list(rag_surrogate.space.enumerate())[::37]:
+        for s in rag_surrogate.evaluate_samples(c, range(20)):
+            assert 0.0 <= s <= 1.0
+
+
+def test_samples_deterministic(rag_surrogate):
+    c = next(rag_surrogate.space.enumerate())
+    a = rag_surrogate.evaluate_samples(c, range(50))
+    b = rag_surrogate.evaluate_samples(c, range(50))
+    assert a == b
+
+
+def test_sample_mean_converges_to_accuracy(rag_surrogate):
+    """Per-sample Bernoulli-ish outcomes must be unbiased for Acc(c)."""
+    for c in list(rag_surrogate.space.enumerate())[::61]:
+        true = rag_surrogate.accuracy(c)
+        est = statistics.mean(rag_surrogate.evaluate_samples(c, range(400)))
+        assert abs(est - true) < 0.08, (c, true, est)
+
+
+def test_bigger_generator_more_accurate_and_slower(rag_surrogate):
+    """The paper's premise: larger models -> higher accuracy + latency."""
+    space = rag_surrogate.space
+    gen_axis = space.axis("generator")
+    base = space.from_dict(
+        {"generator": "llama3-1b", "retriever_k": 10, "rerank_k": 3, "reranker": "bge-v2"}
+    )
+    big = space.from_dict(
+        {"generator": "llama3-8b", "retriever_k": 10, "rerank_k": 3, "reranker": "bge-v2"}
+    )
+    assert rag_surrogate.accuracy(big) > rag_surrogate.accuracy(base)
+    assert rag_surrogate.mean_latency_s(big) > rag_surrogate.mean_latency_s(base)
+
+
+def test_detection_verifier_helps_accuracy(detection_surrogate):
+    space = detection_surrogate.space
+    none = space.from_dict(
+        {"detector": "yolov8s", "verifier": "none", "confidence": 0.3, "nms": 0.5}
+    )
+    big = space.from_dict(
+        {"detector": "yolov8s", "verifier": "yolov8x", "confidence": 0.3, "nms": 0.5}
+    )
+    assert detection_surrogate.accuracy(big) > detection_surrogate.accuracy(none)
+    assert detection_surrogate.mean_latency_s(big) > detection_surrogate.mean_latency_s(none)
+
+
+def test_latencies_positive(rag_surrogate, detection_surrogate):
+    for sur in (rag_surrogate, detection_surrogate):
+        for c in list(sur.space.enumerate())[::53]:
+            assert sur.mean_latency_s(c) > 0
+            assert sur.latency_cv(c) > 0

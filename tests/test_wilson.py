@@ -1,0 +1,148 @@
+"""Wilson intervals + progressive evaluation (paper §IV-B)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.evaluate import ProgressiveEvaluator, make_budget_schedule
+from repro.core.wilson import classify, wilson_interval, z_value
+
+
+# -- z values -----------------------------------------------------------------
+
+
+def test_z_values_match_tables():
+    assert math.isclose(z_value(0.95), 1.959963984540054)
+    # Acklam approximation path for non-tabled levels
+    assert abs(z_value(0.954499736104) - 2.0) < 1e-4
+
+
+# -- interval properties ------------------------------------------------------
+
+
+@given(
+    st.integers(1, 500),
+    st.floats(0.0, 1.0, allow_nan=False),
+    st.sampled_from([0.8, 0.9, 0.95, 0.99]),
+)
+@settings(max_examples=200, deadline=None)
+def test_wilson_interval_invariants(n, frac, conf):
+    s = frac * n
+    ci = wilson_interval(s, n, conf)
+    assert 0.0 <= ci.lower <= ci.center <= ci.upper <= 1.0
+    # interval contains the point estimate's shrunk center, and p_hat is
+    # inside [lower, upper] (Wilson is centered on a shrunk estimate but
+    # always covers p_hat)
+    p_hat = s / n
+    assert ci.lower - 1e-12 <= p_hat <= ci.upper + 1e-12 or n < 3
+
+
+@given(st.floats(0.05, 0.95), st.sampled_from([0.9, 0.95]))
+@settings(max_examples=50, deadline=None)
+def test_wilson_width_shrinks_with_n(p, conf):
+    widths = [wilson_interval(p * n, n, conf).width for n in (10, 40, 160, 640)]
+    assert all(a > b for a, b in zip(widths, widths[1:]))
+
+
+def test_wilson_zero_trials():
+    ci = wilson_interval(0, 0)
+    assert (ci.lower, ci.upper) == (0.0, 1.0)
+
+
+def test_wilson_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        wilson_interval(11, 10)
+
+
+def test_classify_three_way():
+    assert classify(98, 100, 0.75) == "feasible"
+    assert classify(10, 100, 0.75) == "infeasible"
+    assert classify(76, 100, 0.75) == "uncertain"
+
+
+# -- progressive evaluation ---------------------------------------------------
+
+
+class CountingEvaluator:
+    """Deterministic scorer: every sample returns ``value``."""
+
+    def __init__(self, value):
+        self.value = value
+        self.calls = 0
+
+    def __call__(self, config, idx):
+        self.calls += len(list(idx))
+        return [self.value] * len(list(idx))
+
+
+def test_early_stop_clearly_feasible():
+    ev = CountingEvaluator(1.0)
+    pe = ProgressiveEvaluator(evaluator=ev, budget_schedule=(10, 25, 50, 100))
+    res = pe.evaluate(("c",), tau=0.5)
+    assert res.classification == "feasible"
+    assert res.samples_used == 10  # stopped at the first budget level
+    assert ev.calls == 10
+
+
+def test_early_stop_clearly_infeasible():
+    ev = CountingEvaluator(0.0)
+    pe = ProgressiveEvaluator(evaluator=ev, budget_schedule=(10, 25, 50, 100))
+    res = pe.evaluate(("c",), tau=0.5)
+    assert res.classification == "infeasible"
+    assert res.samples_used == 10
+
+
+def test_borderline_consumes_full_budget():
+    ev = CountingEvaluator(0.75)
+    pe = ProgressiveEvaluator(evaluator=ev, budget_schedule=(10, 25, 50, 100))
+    res = pe.evaluate(("c",), tau=0.75)
+    assert res.samples_used == 100  # never confident at tau == true value
+    # budget exhaustion resolves by point estimate
+    assert res.classification == "feasible"
+
+
+def test_asymmetric_infeasible_confidence_uses_more_samples():
+    ev1 = CountingEvaluator(0.62)
+    pe1 = ProgressiveEvaluator(evaluator=ev1, budget_schedule=(10, 25, 50, 100))
+    r1 = pe1.evaluate(("c",), tau=0.75)
+    ev2 = CountingEvaluator(0.62)
+    pe2 = ProgressiveEvaluator(
+        evaluator=ev2, budget_schedule=(10, 25, 50, 100), infeasible_confidence=0.999
+    )
+    r2 = pe2.evaluate(("c",), tau=0.75)
+    assert r1.classification == r2.classification == "infeasible"
+    assert r2.samples_used >= r1.samples_used
+
+
+def test_rejects_bad_schedules_and_scores():
+    with pytest.raises(ValueError):
+        ProgressiveEvaluator(evaluator=CountingEvaluator(1.0), budget_schedule=())
+    with pytest.raises(ValueError):
+        ProgressiveEvaluator(evaluator=CountingEvaluator(1.0), budget_schedule=(10, 10))
+    pe = ProgressiveEvaluator(evaluator=CountingEvaluator(1.5), budget_schedule=(5,))
+    with pytest.raises(ValueError):
+        pe.evaluate(("c",), tau=0.5)
+
+
+def test_sample_order_respected():
+    seen = []
+
+    def ev(config, idx):
+        seen.extend(idx)
+        return [1.0] * len(list(idx))
+
+    order = list(range(99, -1, -1))
+    pe = ProgressiveEvaluator(evaluator=ev, budget_schedule=(10,), sample_order=order)
+    pe.evaluate(("c",), tau=0.5)
+    assert seen == order[:10]
+
+
+@given(st.integers(11, 5000))
+@settings(max_examples=50, deadline=None)
+def test_make_budget_schedule_invariants(max_budget):
+    sched = make_budget_schedule(max_budget)
+    assert sched[-1] == max_budget
+    assert all(a < b for a, b in zip(sched, sched[1:]))
+    assert sched[0] >= 1
