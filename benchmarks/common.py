@@ -81,13 +81,14 @@ def make_sampler(surrogate, ladder):
 
 
 def simulate(surrogate, plan, arrivals, duration_s, *, controller=None, static=0,
-             seed=0):
+             seed=0, num_servers=1):
     ladder = plan.table.policies
     sim = ServingSimulator(
         make_sampler(surrogate, ladder),
         controller=controller,
         static_index=static,
         seed=seed,
+        num_servers=num_servers,
     )
     out = sim.run(arrivals, duration_s)
     accs = [ladder[r.config_index].point.accuracy for r in out.completed]

@@ -1,0 +1,119 @@
+"""Multi-server scaling: SLO compliance of c ∈ {1, 2, 4} worker pools.
+
+Identical arrival traces are replayed against M/G/c simulator pools of
+increasing size, each driven by an Elastico table derived for that c
+(``derive_policies(..., num_servers=c)``).  Two beyond-paper load shapes
+stress the pools:
+
+- **sustained-overload**: rate steps to 2.5x one server's fastest-rung
+  capacity — pools with c <= 2 are unstable, c = 4 drains it;
+- **flash-crowd**: 10x ramp-hold-decay around a moderate base.
+
+The derived headline tracks multi-worker throughput and the compliance gap
+between c = 4 and c = 1 under sustained overload (which must be positive:
+that is the acceptance criterion of the worker-pool refactor).
+"""
+
+from __future__ import annotations
+
+from repro.core.aqm import HysteresisSpec, derive_policies
+from repro.core.elastico import ElasticoController
+from repro.core.pareto import LatencyProfile, ParetoPoint
+from repro.serving.simulator import ServingSimulator, lognormal_sampler_from_profile
+from repro.serving.workload import (
+    flash_crowd_pattern,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+from .common import Timer, save_json
+
+# synthetic three-rung ladder, the shape of the paper's Table I (seconds)
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+SLO_S = 1.0
+DURATION_S = 120.0
+POOL_SIZES = (1, 2, 4)
+
+
+def _front():
+    return [
+        ParetoPoint(config=("rung", i), accuracy=a,
+                    profile=LatencyProfile(mean=m, p95=p))
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def _traces(seed: int = 1):
+    fastest_capacity_qps = 1.0 / MEANS[0]
+    overload = sustained_overload_pattern(
+        fastest_capacity_qps, overload_factor=2.5, warmup_s=20.0
+    )
+    flash = flash_crowd_pattern(3.0, peak_factor=10.0, crowd_start_s=40.0,
+                                ramp_s=5.0, hold_s=20.0)
+    return {
+        "sustained-overload": generate_arrivals(overload, DURATION_S, seed=seed),
+        "flash-crowd": generate_arrivals(flash, DURATION_S, seed=seed),
+    }
+
+
+def run() -> dict:
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    traces = _traces()
+    rows = []
+    total_completed = 0
+    with Timer() as t:
+        for pattern, arrivals in traces.items():
+            for c in POOL_SIZES:
+                table = derive_policies(
+                    _front(),
+                    slo_p95_s=SLO_S,
+                    hysteresis=HysteresisSpec(downscale_cooldown_s=5.0),
+                    num_servers=c,
+                )
+                sim = ServingSimulator(
+                    sampler,
+                    controller=ElasticoController(table),
+                    seed=0,
+                    num_servers=c,
+                )
+                out = sim.run(arrivals, DURATION_S)
+                total_completed += len(out.completed)
+                util = out.per_server_utilization()
+                rows.append(
+                    {
+                        "pattern": pattern,
+                        "num_servers": c,
+                        "offered": len(arrivals),
+                        "completed": len(out.completed),
+                        "throughput_qps": len(out.completed) / DURATION_S,
+                        "compliance": out.slo_compliance(SLO_S),
+                        "p95_latency_s": out.p95_latency(),
+                        "mean_wait_s": out.mean_wait(),
+                        "mean_accuracy": out.mean_accuracy(ACCS),
+                        "mean_utilization": sum(util) / len(util),
+                        "per_server_utilization": util,
+                        "switches": len(out.switch_events),
+                    }
+                )
+    save_json("multi_server_bench.json", rows)
+
+    by_key = {(r["pattern"], r["num_servers"]): r for r in rows}
+    ov1 = by_key[("sustained-overload", 1)]["compliance"]
+    ov4 = by_key[("sustained-overload", 4)]["compliance"]
+    tput4 = by_key[("sustained-overload", 4)]["throughput_qps"]
+    fl4 = by_key[("flash-crowd", 4)]["compliance"]
+    return {
+        "name": "multi_server",
+        "us_per_call": t.elapsed / max(total_completed, 1) * 1e6,
+        "derived": (
+            f"overload_compliance c1={ov1:.3f} c4={ov4:.3f} "
+            f"(+{(ov4 - ov1) * 100:.1f}pts) c4_tput={tput4:.1f}qps "
+            f"flash_c4={fl4:.3f}"
+        ),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

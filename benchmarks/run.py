@@ -21,6 +21,7 @@ from . import (
     fig6_latency_cdf,
     fig7_timeseries,
     kernels_bench,
+    multi_server_bench,
     roofline_table,
     serving_ladders_bench,
     table1_baselines,
@@ -37,6 +38,7 @@ BENCHES = {
     "kernels_bench": kernels_bench.run,
     "predictive_ablation": predictive_ablation.run,
     "serving_ladders": serving_ladders_bench.run,
+    "multi_server": multi_server_bench.run,
     "cost_objective": cost_objective.run,
     "roofline_table": roofline_table.run,
 }

@@ -22,8 +22,9 @@ from repro.core.compass_v import CompassV
 from repro.core.elastico import ElasticoController
 from repro.core.planner import Planner
 from repro.serving.engine import ServingEngine, replay_workload
-from repro.serving.executor import WorkflowExecutor
-from repro.serving.workload import bursty_pattern, generate_arrivals
+from repro.serving.executor import WorkerPool, WorkflowExecutor
+from repro.serving.queue import RequestQueue
+from repro.serving.workload import Request, bursty_pattern, generate_arrivals
 from repro.workflows.rag import RagWorkflow
 
 
@@ -31,6 +32,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduce training/eval sizes")
     ap.add_argument("--duration", type=float, default=30.0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker-pool size c (1 = paper-faithful M/G/1)")
     args = ap.parse_args()
 
     print("=== 1. preparing the live RAG workflow (training generators) ===")
@@ -57,11 +60,13 @@ def main() -> None:
 
     print("=== 3. Planner: wall-clock profiling on this host ===")
     plan = Planner(
-        profiler=wf.profile_latency, profile_samples=6 if args.fast else 10
+        profiler=wf.profile_latency,
+        profile_samples=6 if args.fast else 10,
+        num_servers=args.workers,
     ).plan(res.feasible, slo_p95_s=0.5)
     print(plan.describe())
 
-    print("=== 4. threaded serving with Elastico ===")
+    print(f"=== 4. threaded serving with Elastico (c = {args.workers}) ===")
     ladder = plan.table.policies
     configs = [p.point.config for p in ladder]
     accuracy = [p.point.accuracy for p in ladder]
@@ -69,18 +74,33 @@ def main() -> None:
     def wf_fn(config, payload):
         return wf.executor_fn(config, payload)
 
-    # Scale load to REAL engine capacity.  The Planner profiles the pipeline
+    # Scale load to REAL pool capacity.  The Planner profiles the pipeline
     # in isolation; under the threaded engine each request also pays queue /
-    # GIL / control-loop overhead, so calibrate against a measured engine
-    # round: run a short warm-up burst and use its observed service rate.
+    # GIL / control-loop overhead, and c workers do NOT scale c-fold for
+    # GIL-bound stages — so calibrate against a measured *concurrent* warm-up
+    # burst through the same WorkerPool machinery the engine uses and target
+    # ~50% of the throughput it actually achieved.
     warm = WorkflowExecutor(configs=configs, workflow_fn=wf_fn)
+    warm_queue = RequestQueue()
+    warm_pool = WorkerPool(warm, warm_queue, c=args.workers)
+    n_warm = max(30, args.workers)
     t0 = time.time()
-    for i in range(30):
-        warm.execute(i, 0.0, i)
-    engine_service_s = (time.time() - t0) / 30
-    base_qps = 0.5 / max(engine_service_s, ladder[0].point.profile.mean)
-    print(f"    calibrated engine service ~{engine_service_s * 1e3:.1f}ms "
-          f"-> base load {base_qps:.1f} QPS")
+    warm_pool.start()
+    for i in range(n_warm):
+        warm_queue.put(Request(request_id=i, arrival_s=0.0))
+    deadline = time.time() + 60.0
+    while len(warm.records) < n_warm and time.time() < deadline:
+        time.sleep(0.002)
+    warm_pool.stop()
+    if len(warm.records) < n_warm:
+        sys.exit(
+            f"warm-up stalled: {len(warm.records)}/{n_warm} completed "
+            "(a workflow error in a worker thread?)"
+        )
+    pool_qps = n_warm / (time.time() - t0)
+    base_qps = 0.5 * min(pool_qps, args.workers / ladder[0].point.profile.mean)
+    print(f"    calibrated pool throughput ~{pool_qps:.1f} QPS "
+          f"(c={args.workers}) -> base load {base_qps:.1f} QPS")
     arrivals = generate_arrivals(
         bursty_pattern(base_qps, duration_s=args.duration, seed=0),
         args.duration,
@@ -94,7 +114,8 @@ def main() -> None:
         executor = WorkflowExecutor(configs=configs, workflow_fn=wf_fn)
         if static:
             executor.set_active(static)
-        engine = ServingEngine(executor, controller=ctrl, control_tick_s=0.02)
+        engine = ServingEngine(executor, controller=ctrl, control_tick_s=0.02,
+                               num_workers=args.workers)
         engine.start()
         replay_workload(engine, arrivals)
         report = engine.drain_and_stop()

@@ -1,12 +1,21 @@
 """AQM: analytical queuing-theory model for switching policies (paper §V).
 
-The inference server is modeled as an M/G/1 FIFO queue.  Pareto-front
-configurations are ordered by increasing service time (Eq. 4).  For a P95
-latency SLO ``L``:
+The inference server bank is modeled as an M/G/c FIFO queue with ``c >= 1``
+identical servers (workers); ``c = 1`` is the paper's M/G/1 and the default.
+Pareto-front configurations are ordered by increasing service time (Eq. 4).
+For a P95 latency SLO ``L``:
 
-  queuing slack      Delta_k = L - s95_k                      (Eq. 7)
-  upscale threshold  N_k(up) = floor(Delta_k / s-bar_k)       (Eq. 10)
-  downscale thresh.  N_k(dn) = floor((Delta_{k+1} - h_s) / s-bar_{k+1})  (Eq. 13)
+  queuing slack      Delta_k = L - s95_k                          (Eq. 7)
+  upscale threshold  N_k(up) = floor(c * Delta_k / s-bar_k)       (Eq. 10)
+  downscale thresh.  N_k(dn) = floor(c * (Delta_{k+1} - h_s) / s-bar_{k+1})
+                                                                  (Eq. 13)
+
+The ``c`` factor generalizes Eq. 8: with every server busy, departures occur
+at aggregate rate c / s-bar_k, so a buffered depth of N implies an expected
+wait of E[W] = N * s-bar_k / c.  For c = 1 all thresholds collapse exactly
+to the paper's M/G/1 values.  The Erlang-C formula (:func:`erlang_c`,
+:func:`erlang_c_mean_wait`) supplies the stationary M/M/c waiting-time
+prediction used for capacity reporting and validation of the simulator.
 
 Configurations with Delta_k <= 0 cannot satisfy the SLO and are excluded.
 Asymmetric temporal hysteresis (§V-F): upscale cooldown ~0 (react to spikes
@@ -58,13 +67,20 @@ class HysteresisSpec:
 
 @dataclass(frozen=True)
 class AQMPolicyTable:
-    """Complete switching policy for a Pareto front under one latency SLO."""
+    """Complete switching policy for a Pareto front under one latency SLO.
+
+    ``num_servers`` is the server count c the thresholds were derived for;
+    the controller's observed queue depth must be the *buffered* depth
+    (requests waiting for service, excluding the up-to-c in service) for the
+    thresholds to mean what Eq. 10/13 say.
+    """
 
     slo_p95_s: float                 # L
     slack_buffer_s: float            # h_s
     policies: Tuple[SwitchingPolicy, ...]   # index 0 = fastest
     hysteresis: HysteresisSpec
     excluded: Tuple[ParetoPoint, ...] = ()  # Delta_k <= 0 (cannot meet SLO)
+    num_servers: int = 1             # c
 
     @property
     def ladder_size(self) -> int:
@@ -80,14 +96,22 @@ def derive_policies(
     slo_p95_s: float,
     slack_buffer_s: float = 0.050,
     hysteresis: HysteresisSpec = HysteresisSpec(),
+    num_servers: int = 1,
 ) -> AQMPolicyTable:
     """Build the AQM policy table for a Pareto front (paper §V-C..F).
 
     ``front`` must be ordered by increasing mean service time (the Planner
     guarantees this via :func:`repro.core.pareto.pareto_front`).
+
+    ``num_servers`` is the server count c of the worker pool the policies
+    will drive.  Thresholds scale linearly with c (Eq. 10/13 with aggregate
+    drain rate c / s-bar); ``num_servers=1`` reproduces the paper's M/G/1
+    thresholds exactly.
     """
     if slo_p95_s <= 0:
         raise ValueError("SLO must be positive")
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
     for a, b in zip(front, front[1:]):
         if not b.profile.mean > a.profile.mean:
             raise ValueError("front must be ordered by increasing mean latency")
@@ -99,16 +123,17 @@ def derive_policies(
         slack = slo_p95_s - p.profile.p95
         (admitted if slack > 0 else excluded).append(p)
 
+    c = num_servers
     policies: List[SwitchingPolicy] = []
     n = len(admitted)
     for k, p in enumerate(admitted):
         delta_k = slo_p95_s - p.profile.p95                       # Eq. 7
-        up = int(math.floor(delta_k / p.profile.mean))            # Eq. 10
+        up = int(math.floor(c * delta_k / p.profile.mean))        # Eq. 10
         down: Optional[int] = None
         if k + 1 < n:
             nxt = admitted[k + 1]
             delta_next = slo_p95_s - nxt.profile.p95
-            down = int(math.floor(max(0.0, delta_next - slack_buffer_s) / nxt.profile.mean))  # Eq. 13
+            down = int(math.floor(c * max(0.0, delta_next - slack_buffer_s) / nxt.profile.mean))  # Eq. 13
         policies.append(
             SwitchingPolicy(
                 point=p,
@@ -128,6 +153,7 @@ def derive_policies(
         policies=tuple(policies),
         hysteresis=hysteresis,
         excluded=tuple(excluded),
+        num_servers=num_servers,
     )
 
 
@@ -137,14 +163,67 @@ def ladder_is_monotone(table: AQMPolicyTable) -> bool:
     return all(a > b for a, b in zip(ups, ups[1:]))
 
 
-def expected_wait(queue_depth: int, mean_service_s: float) -> float:
-    """Eq. 8: E[W] = N * s-bar_k (mean as a proxy for the P95; exact for
-    deterministic service)."""
-    return queue_depth * mean_service_s
+def expected_wait(queue_depth: int, mean_service_s: float,
+                  num_servers: int = 1) -> float:
+    """Eq. 8 generalized to c servers: E[W] = N * s-bar_k / c — with every
+    server busy, departures free slots at aggregate rate c / s-bar_k (exact
+    for deterministic service, mean as a proxy for the P95 otherwise)."""
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    return queue_depth * mean_service_s / num_servers
 
 
-def max_sustainable_rate(policy: SwitchingPolicy) -> float:
-    """Utilization bound for config k: the M/G/1 queue is stable only when
-    lambda < 1 / s-bar_k; beyond it the queue grows without bound and the
+def max_sustainable_rate(policy: SwitchingPolicy, num_servers: int = 1) -> float:
+    """Utilization bound for config k: the M/G/c queue is stable only when
+    lambda < c / s-bar_k; beyond it the queue grows without bound and the
     upscale threshold will trip.  Used by the Planner for reporting."""
-    return 1.0 / policy.point.profile.mean
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    return num_servers / policy.point.profile.mean
+
+
+# -- M/M/c stationary analysis (Erlang C) -------------------------------------
+
+
+def erlang_c(num_servers: int, offered_load: float) -> float:
+    """Erlang-C probability that an arrival must wait in an M/M/c queue.
+
+    ``offered_load`` is a = lambda * s-bar (erlangs).  Computed via the
+    numerically stable Erlang-B recursion B(k, a) = a B(k-1, a) / (k + a
+    B(k-1, a)) and the standard B->C conversion.  Returns 1.0 when the
+    system is saturated (a >= c: every arrival waits, queue unstable).
+    """
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    if offered_load < 0:
+        raise ValueError("offered load must be non-negative")
+    a = offered_load
+    c = num_servers
+    if a == 0.0:
+        return 0.0
+    if a >= c:
+        return 1.0
+    b = 1.0  # Erlang B with 0 servers
+    for k in range(1, c + 1):
+        b = a * b / (k + a * b)
+    rho = a / c
+    return b / (1.0 - rho + rho * b)
+
+
+def erlang_c_mean_wait(num_servers: int, arrival_rate_qps: float,
+                       mean_service_s: float) -> float:
+    """Stationary mean queueing delay E[W] of an M/M/c queue.
+
+    E[W] = C(c, a) * s-bar / (c - a) with a = lambda * s-bar.  Returns
+    ``inf`` for a saturated system.  For c = 1 this is the familiar M/M/1
+    result rho * s-bar / (1 - rho).
+    """
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    if arrival_rate_qps < 0 or mean_service_s <= 0:
+        raise ValueError("rate must be >= 0 and mean service > 0")
+    a = arrival_rate_qps * mean_service_s
+    if a >= num_servers:
+        return float("inf")
+    pw = erlang_c(num_servers, a)
+    return pw * mean_service_s / (num_servers - a)

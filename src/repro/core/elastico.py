@@ -39,6 +39,15 @@ class ElasticoController:
     Pure decision logic — time is injected (``now_s``) so the controller runs
     identically under the discrete-event simulator and the real-time engine.
 
+    ``observe`` expects the *buffered* queue depth: requests waiting for
+    service, excluding the up-to-``table.num_servers`` requests in service.
+    That is the depth the AQM thresholds are stated in (Eq. 10/13) for any
+    server count c; counting in-flight requests would make N_up = 0 rungs
+    unreachable and would double-count the pool's own concurrency.  The
+    controller itself is not thread-safe — under a multi-worker engine the
+    caller must serialize ``observe`` (the engine holds a lock), which also
+    guarantees every decision sees one consistent depth sample.
+
     ``aggressive_descent`` is a beyond-paper option: instead of stepping one
     ladder rung per decision, jump directly to the slowest configuration whose
     upscale threshold tolerates the current depth.  The paper's Elastico steps
@@ -73,6 +82,11 @@ class ElasticoController:
     @property
     def current_policy(self) -> SwitchingPolicy:
         return self.table.policy(self.current_index)
+
+    @property
+    def num_servers(self) -> int:
+        """Server count c the driving policy table was derived for."""
+        return self.table.num_servers
 
     # -- control --------------------------------------------------------------
 

@@ -67,6 +67,7 @@ class DeploymentPlan:
     def describe(self) -> str:
         lines = [
             f"SLO p95 = {self.table.slo_p95_s * 1e3:.0f} ms, "
+            f"c = {self.table.num_servers} server(s), "
             f"ladder of {self.table.ladder_size} configs "
             f"({len(self.dominated)} dominated, {len(self.table.excluded)} infeasible for SLO)"
         ]
@@ -90,6 +91,9 @@ class Planner:
     profile_samples: number of representative requests per configuration.
     slack_buffer_s: h_s in Eq. 13.
     hysteresis: asymmetric cooldown spec (§V-F).
+    num_servers: worker-pool size c the deployment will run with; switching
+        thresholds are derived for the M/G/c drain rate (c = 1 reproduces
+        the paper's single-server plan exactly).
     """
 
     profiler: Callable[[Config, int], Sequence[float]]
@@ -97,6 +101,7 @@ class Planner:
     slack_buffer_s: float = 0.050
     min_accuracy_gap: float = 0.01
     hysteresis: HysteresisSpec = field(default_factory=HysteresisSpec)
+    num_servers: int = 1
 
     def plan(
         self,
@@ -123,6 +128,7 @@ class Planner:
             slo_p95_s=slo_p95_s,
             slack_buffer_s=self.slack_buffer_s,
             hysteresis=self.hysteresis,
+            num_servers=self.num_servers,
         )
         return DeploymentPlan(
             front=tuple(front),

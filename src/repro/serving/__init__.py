@@ -1,7 +1,32 @@
-"""Inference serving runtime: queue, monitor, executor, engine, simulator."""
+"""Inference serving runtime: queue, monitor, worker pool, engine, simulator.
+
+Worker-pool architecture (M/G/c)
+--------------------------------
+
+Every layer of the runtime is parameterized by a server count ``c >= 1``:
+
+- :class:`ServingSimulator` (``num_servers``) — deterministic discrete-event
+  M/G/c: a bank of c server slots drains one FIFO queue, dispatching to the
+  lowest-numbered free server; per-server utilization is reported in
+  :class:`SimulationResult`.
+- :class:`WorkerPool` (``c``) / :class:`ServingEngine` (``num_workers``) —
+  the real-time path: c worker threads drain one shared
+  :class:`RequestQueue`, all executing through one thread-safe
+  :class:`WorkflowExecutor` so the Elastico switch flips the configuration
+  for every worker at once.  ``max_queue_depth`` adds admission control
+  (bounded buffer with drop accounting in ``EngineReport.dropped``).
+- The switching thresholds come from
+  :func:`repro.core.aqm.derive_policies(..., num_servers=c)`, which scales
+  the paper's Eq. 10/13 by the pool's aggregate drain rate c / s-bar.
+
+``c = 1`` is the paper-faithful default throughout and reproduces the
+original single-server (M/G/1) behavior exactly — same seeds, same results.
+Elastico always observes the *buffered* queue depth (waiting requests,
+excluding the up-to-c in service), the depth the thresholds are stated in.
+"""
 
 from .engine import EngineReport, ServingEngine, replay_workload
-from .executor import ExecutionRecord, WorkflowExecutor
+from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
 from .monitor import LoadMonitor, LoadSnapshot
 from .queue import RequestQueue
 from .simulator import (
@@ -9,6 +34,7 @@ from .simulator import (
     ServingSimulator,
     SimulationResult,
     deterministic_sampler,
+    exponential_sampler,
     lognormal_sampler_from_profile,
 )
 from .workload import (
@@ -16,8 +42,10 @@ from .workload import (
     bursty_pattern,
     constant_rate,
     diurnal_pattern,
+    flash_crowd_pattern,
     generate_arrivals,
     spike_pattern,
+    sustained_overload_pattern,
 )
 
 __all__ = [
@@ -25,6 +53,7 @@ __all__ = [
     "ServingEngine",
     "replay_workload",
     "ExecutionRecord",
+    "WorkerPool",
     "WorkflowExecutor",
     "LoadMonitor",
     "LoadSnapshot",
@@ -33,11 +62,14 @@ __all__ = [
     "ServingSimulator",
     "SimulationResult",
     "deterministic_sampler",
+    "exponential_sampler",
     "lognormal_sampler_from_profile",
     "Request",
     "bursty_pattern",
     "constant_rate",
     "diurnal_pattern",
+    "flash_crowd_pattern",
     "generate_arrivals",
     "spike_pattern",
+    "sustained_overload_pattern",
 ]

@@ -1,13 +1,23 @@
-"""Real-time serving engine: queue + monitor + Elastico + executor (§III-B).
+"""Real-time serving engine: queue + monitor + Elastico + worker pool (§III-B).
 
-The engine wires the four runtime components of the paper's serving
-architecture and runs them against wall-clock time on this host:
+The engine wires the runtime components of the paper's serving architecture
+and runs them against wall-clock time on this host:
 
-  ingress thread  ->  RequestQueue  ->  worker thread (WorkflowExecutor)
+  ingress thread  ->  RequestQueue  ->  WorkerPool (c x WorkflowExecutor)
                           |                   |
                       LoadMonitor  <----------+
                           |
                   control thread (ElasticoController) -> executor.set_active
+
+``num_workers=1`` (the default) is the paper-faithful M/G/1 server; larger
+pools drain the same shared queue concurrently (M/G/c) with the switching
+thresholds derived for that c (pass ``num_servers`` to ``derive_policies``).
+Controller decisions are serialized behind a lock so concurrent workers
+never interleave observations, and every decision keys off the *buffered*
+queue depth — requests waiting for service, excluding the up-to-c in flight.
+
+``max_queue_depth`` enables admission control (beyond-paper): arrivals that
+find the buffer full are dropped and surface in ``EngineReport.dropped``.
 
 A deterministic-virtual-time variant is provided by
 :mod:`repro.serving.simulator`; this module is the "it actually serves"
@@ -22,7 +32,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence
 
 from ..core.elastico import ElasticoController
-from .executor import ExecutionRecord, WorkflowExecutor
+from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
 from .monitor import LoadMonitor
 from .queue import RequestQueue
 from .workload import Request
@@ -35,11 +45,21 @@ class EngineReport:
     config_timeline: List
     total_requests: int
     dropped: int = 0
+    num_workers: int = 1
+    served_per_worker: List[int] = field(default_factory=list)
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.records:
             return 1.0
         return sum(1 for r in self.records if r.latency_s <= slo_s) / len(self.records)
+
+    def goodput(self, slo_s: float) -> float:
+        """Fraction of *offered* load served within the SLO — unlike
+        ``slo_compliance`` this charges dropped requests against the engine."""
+        if self.total_requests == 0:
+            return 1.0
+        ok = sum(1 for r in self.records if r.latency_s <= slo_s)
+        return ok / self.total_requests
 
     def mean_accuracy(self, accuracies: Sequence[float]) -> float:
         if not self.records:
@@ -48,47 +68,80 @@ class EngineReport:
 
 
 class ServingEngine:
-    """Threaded serving engine with dynamic configuration switching."""
+    """Threaded serving engine with dynamic configuration switching.
+
+    ``num_workers`` sizes the worker pool (c of the M/G/c model);
+    ``max_queue_depth`` bounds the shared buffer for admission control
+    (None = unbounded, the paper's no-drop default).
+    """
 
     def __init__(
         self,
         executor: WorkflowExecutor,
         controller: Optional[ElasticoController] = None,
         *,
+        num_workers: int = 1,
+        max_queue_depth: Optional[int] = None,
         control_tick_s: float = 0.05,
         clock: Callable[[], float] = time.monotonic,
     ) -> None:
-        self.queue = RequestQueue()
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        self.queue = RequestQueue(max_depth=max_queue_depth)
         self.monitor = LoadMonitor(clock=clock)
         self.executor = executor
         self.controller = controller
+        self.pool = WorkerPool(
+            executor, self.queue, c=num_workers, on_observe=self._observe
+        )
         self.control_tick_s = control_tick_s
         self._clock = clock
         self._stop = threading.Event()
-        self._threads: List[threading.Thread] = []
+        self._ctrl_thread: Optional[threading.Thread] = None
         self._timeline: List = []
         self._epoch: Optional[float] = None
+        # one lock serializes controller observations from all workers + the
+        # control loop: ElasticoController is pure decision logic and relies
+        # on the caller for thread safety.
+        self._observe_lock = threading.Lock()
+        self._submitted = 0
+        self._dropped = 0
+        self._ingress_lock = threading.Lock()
+
+    @property
+    def num_workers(self) -> int:
+        return self.pool.c
 
     # -- lifecycle -----------------------------------------------------------
 
     def start(self) -> None:
-        if self._threads:
+        if self._ctrl_thread is not None:
             raise RuntimeError("engine already started")
         self._epoch = self._clock()
         self.executor.set_clock(self._now_rel)
+        self.monitor.set_clock(self._now_rel)  # one time axis for all stamps
         if self.controller is not None:
             self.controller.reset()
             self.executor.set_active(self.controller.current_index)
             self._timeline.append((0.0, self.controller.current_index))
-        worker = threading.Thread(target=self._worker_loop, name="compass-worker", daemon=True)
-        ctrl = threading.Thread(target=self._control_loop, name="compass-elastico", daemon=True)
-        self._threads = [worker, ctrl]
-        for t in self._threads:
-            t.start()
+        self.pool.start()
+        self._ctrl_thread = threading.Thread(
+            target=self._control_loop, name="compass-elastico", daemon=True
+        )
+        self._ctrl_thread.start()
 
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request) -> bool:
+        """Offer a request to the engine; returns False if admission control
+        rejected it (bounded queue full)."""
         self.monitor.record_arrival()
-        self.queue.put(request)
+        accepted = self.queue.put(request)
+        with self._ingress_lock:
+            self._submitted += 1
+            if not accepted:
+                self._dropped += 1
+        if not accepted:
+            self.monitor.record_drop()
+        return accepted
 
     def drain_and_stop(self, *, timeout_s: float = 120.0) -> EngineReport:
         """Close ingress, wait until the queue empties, stop threads."""
@@ -98,14 +151,20 @@ class ServingEngine:
             time.sleep(0.01)
         self.queue.close()
         self._stop.set()
-        for t in self._threads:
-            t.join(timeout=5.0)
-        self._threads = []
+        self.pool.stop()
+        if self._ctrl_thread is not None:
+            self._ctrl_thread.join(timeout=5.0)
+            self._ctrl_thread = None
+        with self._ingress_lock:
+            submitted, dropped = self._submitted, self._dropped
         return EngineReport(
             records=list(self.executor.records),
             switch_events=list(self.controller.events) if self.controller else [],
             config_timeline=list(self._timeline),
-            total_requests=self.queue.total_enqueued,
+            total_requests=submitted,
+            dropped=dropped,
+            num_workers=self.pool.c,
+            served_per_worker=self.pool.served_per_worker(),
         )
 
     # -- loops ---------------------------------------------------------------
@@ -113,15 +172,6 @@ class ServingEngine:
     def _now_rel(self) -> float:
         assert self._epoch is not None
         return self._clock() - self._epoch
-
-    def _worker_loop(self) -> None:
-        while not self._stop.is_set():
-            req = self.queue.get(timeout=0.05)
-            if req is None:
-                continue
-            self._observe()          # arrival-to-service boundary decision
-            self.executor.execute(req.request_id, req.arrival_s, req.payload)
-            self._observe()
 
     def _control_loop(self) -> None:
         while not self._stop.is_set():
@@ -131,13 +181,14 @@ class ServingEngine:
     def _observe(self) -> None:
         if self.controller is None:
             return
-        depth = self.queue.depth()  # buffered requests only (see simulator)
-        now = self._now_rel()
-        self.monitor.snapshot(self.queue.depth(), self.executor.in_flight(), now)
-        ev = self.controller.observe(depth, now)
-        if ev is not None:
-            self.executor.set_active(ev.to_index)
-            self._timeline.append((now, ev.to_index))
+        with self._observe_lock:
+            depth = self.queue.depth()  # buffered requests only (see simulator)
+            now = self._now_rel()
+            self.monitor.snapshot(depth, self.executor.in_flight(), now)
+            ev = self.controller.observe(depth, now)
+            if ev is not None:
+                self.executor.set_active(ev.to_index)
+                self._timeline.append((now, ev.to_index))
 
 
 def replay_workload(

@@ -1,9 +1,15 @@
-"""Workflow executor: processes requests with the active configuration.
+"""Workflow executor + worker pool: process requests with the active config.
 
 The executor owns the mapping config -> executable workflow.  All Pareto
 configurations are kept *resident* (the paper pre-loads all configs in GPU
 memory; here every config's parameters/compiled functions stay live), so a
 switch only flips an index — the paper's <10 ms "pipeline rerouting".
+
+:class:`WorkerPool` generalizes the runtime from the paper's single worker
+(M/G/1) to ``c`` worker threads draining one shared :class:`RequestQueue`
+(M/G/c).  ``c = 1`` reproduces the seed's single-worker engine behavior.
+All record collection goes through the executor's lock, so a pool of any
+size yields one consistent, thread-safe record list.
 """
 
 from __future__ import annotations
@@ -14,6 +20,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from ..core.space import Config
+from .queue import RequestQueue
 
 WorkflowFn = Callable[[Config, Any], Any]
 """(config, payload) -> result.  One full compound-workflow execution."""
@@ -27,6 +34,7 @@ class ExecutionRecord:
     completion_s: float
     config_index: int
     result: Any = None
+    worker_id: int = 0
 
     @property
     def latency_s(self) -> float:
@@ -34,12 +42,14 @@ class ExecutionRecord:
 
 
 class WorkflowExecutor:
-    """Single-worker executor (the M/G/1 server).
+    """Configuration-resident executor shared by every worker of the pool.
 
     ``configs`` is the Pareto ladder (index 0 = fastest); ``workflow_fn`` runs
     one request under a given configuration.  ``set_active`` is thread-safe
-    and takes effect for the *next* request — the in-flight request always
-    completes under the configuration it started with (no drops, §III-B).
+    and takes effect for the *next* request — in-flight requests always
+    complete under the configuration they started with (no drops, §III-B).
+    ``execute`` may be called concurrently from any number of workers;
+    record collection and in-flight accounting are lock-protected.
     """
 
     def __init__(self, configs: Sequence[Config], workflow_fn: WorkflowFn,
@@ -81,7 +91,8 @@ class WorkflowExecutor:
         """
         self._clock = clock
 
-    def execute(self, request_id: int, arrival_s: float, payload: Any) -> ExecutionRecord:
+    def execute(self, request_id: int, arrival_s: float, payload: Any,
+                worker_id: int = 0) -> ExecutionRecord:
         with self._lock:
             idx = self._active
             self._in_flight += 1
@@ -99,7 +110,91 @@ class WorkflowExecutor:
             completion_s=end,
             config_index=idx,
             result=result,
+            worker_id=worker_id,
         )
         with self._lock:
             self.records.append(rec)
         return rec
+
+
+class WorkerPool:
+    """``c`` worker threads draining one shared request queue (M/G/c).
+
+    Each worker loops: pop a request, fire the observe hook (the
+    arrival-to-service boundary is where Elastico decides), execute under
+    the currently active configuration, fire the hook again.  The hook is
+    supplied by the engine and must be safe to call concurrently (the
+    engine serializes controller access internally).
+
+    ``c = 1`` is the paper-faithful single-worker server; the pool then
+    behaves exactly like the seed's single ``compass-worker`` thread.
+    """
+
+    def __init__(
+        self,
+        executor: WorkflowExecutor,
+        queue: RequestQueue,
+        *,
+        c: int = 1,
+        on_observe: Optional[Callable[[], None]] = None,
+        poll_timeout_s: float = 0.05,
+        name: str = "compass-worker",
+    ) -> None:
+        if c < 1:
+            raise ValueError("worker pool needs c >= 1 workers")
+        self.executor = executor
+        self.queue = queue
+        self.c = c
+        self._on_observe = on_observe
+        self._poll_timeout_s = poll_timeout_s
+        self._name = name
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._served_per_worker = [0] * c
+
+    @property
+    def num_workers(self) -> int:
+        return self.c
+
+    def served_per_worker(self) -> List[int]:
+        """Requests completed by each worker (a load-balance observability
+        hook; reads are benign-racy while the pool is running)."""
+        return list(self._served_per_worker)
+
+    def start(self) -> None:
+        if self._threads:
+            raise RuntimeError("worker pool already started")
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(
+                target=self._worker_loop,
+                args=(w,),
+                name=f"{self._name}-{w}" if self.c > 1 else self._name,
+                daemon=True,
+            )
+            for w in range(self.c)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def in_flight(self) -> int:
+        return self.executor.in_flight()
+
+    def stop(self, *, join_timeout_s: float = 5.0) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=join_timeout_s)
+        self._threads = []
+
+    def _worker_loop(self, worker_id: int) -> None:
+        while not self._stop.is_set():
+            req = self.queue.get(timeout=self._poll_timeout_s)
+            if req is None:
+                continue
+            if self._on_observe is not None:
+                self._on_observe()   # arrival-to-service boundary decision
+            self.executor.execute(req.request_id, req.arrival_s, req.payload,
+                                  worker_id=worker_id)
+            self._served_per_worker[worker_id] += 1
+            if self._on_observe is not None:
+                self._on_observe()

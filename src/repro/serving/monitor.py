@@ -1,8 +1,12 @@
 """Load monitor: queue depth + arrival-rate tracking (paper §III-B).
 
-Elastico's decisions key off queue depth; the arrival-rate EWMA is exposed for
-observability and for the predictive-adaptation extension point mentioned in
-the paper's future work.
+Elastico's decisions key off the *buffered* queue depth (requests waiting
+for service, excluding the up-to-c in service across the worker pool); the
+engine passes that depth and the pool-wide in-flight count to ``snapshot``
+under its observe lock, so snapshots are consistent even with many workers
+observing concurrently.  The arrival-rate EWMA is exposed for observability
+and for the predictive-adaptation extension point mentioned in the paper's
+future work; ``record_drop`` tracks admission-control rejections.
 """
 
 from __future__ import annotations
@@ -37,7 +41,18 @@ class LoadMonitor:
         self._rate_qps = 0.0
         self._last_update_s: Optional[float] = None
         self._arrivals = 0
+        self._drops = 0
         self._history: List[LoadSnapshot] = []
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Align the monitor with the engine's epoch-relative clock.
+
+        ``record_arrival`` (ingress) and ``snapshot`` (control loop) must
+        stamp times on the same axis or the EWMA's decay term sees a huge
+        negative dt, clamps to zero, and the arrival rate never decays.
+        The engine calls this at ``start()`` with its relative clock."""
+        with self._lock:
+            self._clock = clock
 
     def record_arrival(self, now_s: Optional[float] = None) -> None:
         now = self._clock() if now_s is None else now_s
@@ -61,10 +76,20 @@ class LoadMonitor:
             decay = 0.5 ** (dt / self._halflife_s)
             return self._rate_qps * decay
 
+    def record_drop(self) -> None:
+        """Count an admission-control rejection (bounded queue full)."""
+        with self._lock:
+            self._drops += 1
+
     @property
     def total_arrivals(self) -> int:
         with self._lock:
             return self._arrivals
+
+    @property
+    def total_drops(self) -> int:
+        with self._lock:
+            return self._drops
 
     def snapshot(self, queue_depth: int, in_flight: int,
                  now_s: Optional[float] = None) -> LoadSnapshot:

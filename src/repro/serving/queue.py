@@ -1,8 +1,11 @@
 """Central request queue for the inference serving system (paper §III-B).
 
-A thread-safe FIFO buffer.  The queue never drops requests: during a
-configuration switch the executor keeps draining with the old configuration
-until the new one is ready.
+A thread-safe FIFO buffer shared by all workers of the pool.  By default the
+queue is unbounded and never drops requests: during a configuration switch
+the executor keeps draining with the old configuration until the new one is
+ready.  Passing ``max_depth`` enables admission control (beyond-paper): a
+``put`` against a full buffer is rejected and counted instead of enqueued,
+bounding worst-case queueing delay under sustained overload.
 """
 
 from __future__ import annotations
@@ -16,20 +19,32 @@ from .workload import Request
 
 
 class RequestQueue:
-    def __init__(self) -> None:
+    def __init__(self, max_depth: Optional[int] = None) -> None:
+        if max_depth is not None and max_depth < 1:
+            raise ValueError("max_depth must be >= 1 (or None for unbounded)")
         self._items: Deque[Request] = deque()
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._closed = False
+        self._max_depth = max_depth
         self._total_enqueued = 0
+        self._total_dropped = 0
 
-    def put(self, request: Request) -> None:
+    def put(self, request: Request) -> bool:
+        """Enqueue; returns False (and counts a drop) if the buffer is full.
+
+        Raises RuntimeError once the queue is closed to ingress.
+        """
         with self._lock:
             if self._closed:
                 raise RuntimeError("queue closed")
+            if self._max_depth is not None and len(self._items) >= self._max_depth:
+                self._total_dropped += 1
+                return False
             self._items.append(request)
             self._total_enqueued += 1
             self._not_empty.notify()
+            return True
 
     def get(self, timeout: Optional[float] = None) -> Optional[Request]:
         """Pop the oldest request (FIFO); None on timeout or closed+empty."""
@@ -46,9 +61,18 @@ class RequestQueue:
             return len(self._items)
 
     @property
+    def max_depth(self) -> Optional[int]:
+        return self._max_depth
+
+    @property
     def total_enqueued(self) -> int:
         with self._lock:
             return self._total_enqueued
+
+    @property
+    def total_dropped(self) -> int:
+        with self._lock:
+            return self._total_dropped
 
     def close(self) -> None:
         with self._lock:

@@ -1,14 +1,21 @@
 """Discrete-event simulation of the Compass serving system (paper §VI-C).
 
-Single-server FIFO queue (the M/G/1 of §V-A) with:
-  - non-homogeneous Poisson arrivals (spike / bursty / diurnal patterns),
+A bank of ``num_servers`` identical servers draining one FIFO queue (the
+M/G/c generalization of the paper's M/G/1, §V-A; ``num_servers=1`` is the
+paper-faithful default and reproduces the old single-server event loop
+bit-for-bit) with:
+  - non-homogeneous Poisson arrivals (spike / bursty / diurnal / flash-crowd
+    / sustained-overload patterns),
   - per-configuration stochastic service times (pluggable samplers, e.g.
     lognormal fitted to a profile's mean/p95 — LLM-like tails),
-  - the Elastico controller observing queue depth at every event and at
-    periodic control ticks,
-  - configuration switches that take effect for subsequent requests while the
-    in-flight request finishes under the old configuration (no drops, §III-B).
+  - the Elastico controller observing *buffered* queue depth (excluding the
+    up-to-c requests in service) at every event and at periodic control
+    ticks,
+  - configuration switches that take effect for subsequent requests while
+    in-flight requests finish under the old configuration (no drops, §III-B).
 
+Requests are dispatched to the lowest-numbered free server, so per-server
+utilization (``SimulationResult.per_server_busy_s``) is deterministic too.
 Deterministic given seeds, which is what lets EXPERIMENTS.md reproduce the
 paper's Figures 5-7 bit-for-bit across runs.
 """
@@ -64,6 +71,20 @@ def deterministic_sampler(mean_s: Sequence[float]) -> ServiceSampler:
     return sample
 
 
+def exponential_sampler(mean_s: Sequence[float]) -> ServiceSampler:
+    """Memoryless service times — the 'M' service of M/M/c.  Used to validate
+    the simulator's multi-server wait against the Erlang-C prediction
+    (:func:`repro.core.aqm.erlang_c_mean_wait`)."""
+    means = [float(m) for m in mean_s]
+    if any(m <= 0 for m in means):
+        raise ValueError("mean service times must be positive")
+
+    def sample(k: int, rng: random.Random) -> float:
+        return rng.expovariate(1.0 / means[k])
+
+    return sample
+
+
 @dataclass
 class CompletedRequest:
     request_id: int
@@ -71,6 +92,7 @@ class CompletedRequest:
     start_s: float
     completion_s: float
     config_index: int
+    server_id: int = 0
 
     @property
     def latency_s(self) -> float:
@@ -88,6 +110,23 @@ class SimulationResult:
     config_timeline: List[Tuple[float, int]]  # (time, active index)
     queue_depth_samples: List[Tuple[float, int]]
     duration_s: float
+    num_servers: int = 1
+    per_server_busy_s: List[float] = field(default_factory=lambda: [0.0])
+
+    def per_server_utilization(self) -> List[float]:
+        """Busy fraction of each server over the horizon (index = server id).
+
+        The simulator completes every arrival (no drops), so under overload
+        the backlog drains *past* ``duration_s`` and values exceed 1.0 —
+        a utilization above 1 reads as "this server owes that multiple of
+        the horizon in work", which is the overload signal itself."""
+        horizon = max(self.duration_s, 1e-12)
+        return [b / horizon for b in self.per_server_busy_s]
+
+    def mean_wait(self) -> float:
+        if not self.completed:
+            return 0.0
+        return sum(r.wait_s for r in self.completed) / len(self.completed)
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.completed:
@@ -117,12 +156,15 @@ class SimulationResult:
 
 @dataclass
 class ServingSimulator:
-    """Event-driven M/G/1 + Elastico simulator.
+    """Event-driven M/G/c + Elastico simulator.
 
     ``controller=None`` simulates a static baseline pinned to
     ``static_index`` — the paper's Static-Fast / Medium / Accurate baselines.
     ``switch_latency_s`` models the (small) pipeline-rerouting cost; the
     paper measures <10 ms since all configs stay resident in memory.
+    ``num_servers`` is the server count c; the default 1 reproduces the
+    paper's single-server results exactly (same seeds -> same completions,
+    the pool draws service times in the same order).
     """
 
     service_sampler: ServiceSampler
@@ -131,8 +173,11 @@ class ServingSimulator:
     control_tick_s: float = 0.25
     switch_latency_s: float = 0.010
     seed: int = 0
+    num_servers: int = 1
 
     def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
+        if self.num_servers < 1:
+            raise ValueError("num_servers must be >= 1")
         rng = random.Random(self.seed)
         ctrl = self.controller
         if ctrl is not None:
@@ -154,8 +199,8 @@ class ServingSimulator:
 
         waiting: List[int] = []            # FIFO queue of request ids
         arrival_time: Dict[int, float] = {i: a for i, a in enumerate(arrivals)}
-        busy_until = 0.0
-        in_service: Optional[int] = None
+        free_servers: List[int] = list(range(self.num_servers))  # min-heap
+        busy_s: List[float] = [0.0] * self.num_servers
         completed: List[CompletedRequest] = []
         timeline: List[Tuple[float, int]] = [(0.0, active)]
         depth_samples: List[Tuple[float, int]] = []
@@ -163,9 +208,10 @@ class ServingSimulator:
         def queue_depth() -> int:
             # Elastico keys off the *buffered* queue depth (paper §III-B "a
             # load monitor that tracks current queue depth"): requests waiting
-            # for service, excluding the one in service.  Counting the
-            # in-flight request would make N_up = 0 rungs (the most accurate
-            # configs under tight SLOs, Eq. 10) unreachable at any utilization.
+            # for service, excluding the up-to-c in service.  Counting the
+            # in-flight requests would make N_up = 0 rungs (the most accurate
+            # configs under tight SLOs, Eq. 10) unreachable at any utilization
+            # and would double-count the pool's own concurrency.
             return len(waiting)
 
         def observe(now: float) -> None:
@@ -181,24 +227,26 @@ class ServingSimulator:
                 timeline.append((now, active))
 
         def start_next(now: float) -> None:
-            nonlocal in_service, busy_until, order
-            if in_service is not None or not waiting:
-                return
-            rid = waiting.pop(0)
-            start = max(now, switch_ready_s) if now < switch_ready_s else now
-            svc = self.service_sampler(active, rng)
-            comp = start + svc
-            in_service = rid
-            busy_until = comp
-            completed.append(CompletedRequest(
-                request_id=rid,
-                arrival_s=arrival_time[rid],
-                start_s=start,
-                completion_s=comp,
-                config_index=active,
-            ))
-            heapq.heappush(events, (comp, order, "completion", rid))
-            order += 1
+            # dispatch as many buffered requests as there are free servers;
+            # lowest-numbered server first keeps the schedule deterministic.
+            nonlocal order
+            while free_servers and waiting:
+                server = heapq.heappop(free_servers)
+                rid = waiting.pop(0)
+                start = max(now, switch_ready_s) if now < switch_ready_s else now
+                svc = self.service_sampler(active, rng)
+                comp = start + svc
+                busy_s[server] += comp - start
+                completed.append(CompletedRequest(
+                    request_id=rid,
+                    arrival_s=arrival_time[rid],
+                    start_s=start,
+                    completion_s=comp,
+                    config_index=active,
+                    server_id=server,
+                ))
+                heapq.heappush(events, (comp, order, "completion", server))
+                order += 1
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -209,7 +257,7 @@ class ServingSimulator:
                 start_next(now)
                 observe(now)
             elif kind == "completion":
-                in_service = None
+                heapq.heappush(free_servers, int(payload))  # type: ignore[arg-type]
                 start_next(now)
                 observe(now)
             else:  # control tick
@@ -223,4 +271,6 @@ class ServingSimulator:
             config_timeline=timeline,
             queue_depth_samples=depth_samples,
             duration_s=duration_s,
+            num_servers=self.num_servers,
+            per_server_busy_s=busy_s,
         )

@@ -8,6 +8,18 @@ rate patterns):
 - **Bursty**: random short 2-5x bursts lasting 5-15 s throughout the run.
 
 Base rate 1.5 QPS, 180 s duration — the paper's setup, kept as defaults.
+
+Beyond-paper patterns sized for multi-server (M/G/c) runs:
+
+- **Flash crowd**: a near-instant ramp to ``peak_factor`` x base (default
+  10x), a short hold, and a symmetric decay — the load shape a viral link
+  produces.  Even a fast single server saturates at the peak; pools with
+  c >= 2 ride it out.
+- **Sustained overload**: after a warmup at a fraction of one server's
+  capacity, the rate steps to ``overload_factor`` x the *single-server*
+  capacity for the rest of the run.  With overload_factor between 1 and c
+  the trace overloads small pools while staying stable for larger ones,
+  which is exactly the regime the multi-server benchmark compares.
 """
 
 from __future__ import annotations
@@ -65,6 +77,61 @@ def diurnal_pattern(base_qps: float = 1.5, *, period_s: float = 120.0,
 
     def rate(t: float) -> float:
         return base_qps * (1.0 + amplitude * math.sin(2.0 * math.pi * t / period_s))
+
+    return rate
+
+
+def flash_crowd_pattern(base_qps: float = 1.5, *, peak_factor: float = 10.0,
+                        crowd_start_s: float = 60.0, ramp_s: float = 5.0,
+                        hold_s: float = 20.0) -> RateFn:
+    """Flash crowd: base load, then a steep linear ramp (``ramp_s``) to
+    ``peak_factor`` x base, a ``hold_s`` plateau, and a symmetric ramp back
+    down.  Sized so a single server saturates at the peak while a pool of a
+    few workers keeps the queue bounded."""
+    if peak_factor < 1.0:
+        raise ValueError("peak_factor must be >= 1")
+    if ramp_s < 0 or hold_s < 0:
+        raise ValueError("ramp and hold must be non-negative")
+    up0, up1 = crowd_start_s, crowd_start_s + ramp_s
+    dn0 = up1 + hold_s
+    dn1 = dn0 + ramp_s
+    peak = base_qps * peak_factor
+
+    def rate(t: float) -> float:
+        if t < up0 or t >= dn1:
+            return base_qps
+        if t < up1:                        # ramp up
+            frac = (t - up0) / max(ramp_s, 1e-12)
+            return base_qps + (peak - base_qps) * frac
+        if t < dn0:                        # hold at the peak
+            return peak
+        frac = (t - dn0) / max(ramp_s, 1e-12)   # ramp down
+        return peak - (peak - base_qps) * frac
+
+    return rate
+
+
+def sustained_overload_pattern(capacity_qps: float, *,
+                               overload_factor: float = 2.5,
+                               warmup_s: float = 30.0,
+                               warmup_fraction: float = 0.5) -> RateFn:
+    """Sustained overload relative to *one* server's capacity.
+
+    ``capacity_qps`` is 1 / s-bar of the serving configuration (the M/G/1
+    stability limit).  The rate starts at ``warmup_fraction`` x capacity,
+    then steps to ``overload_factor`` x capacity and stays there: any pool
+    with c <= overload_factor servers is unstable for the rest of the run,
+    any pool with c > overload_factor drains it.
+    """
+    if capacity_qps <= 0:
+        raise ValueError("capacity must be positive")
+    if overload_factor <= 0 or warmup_fraction <= 0:
+        raise ValueError("factors must be positive")
+
+    def rate(t: float) -> float:
+        if t < warmup_s:
+            return capacity_qps * warmup_fraction
+        return capacity_qps * overload_factor
 
     return rate
 

@@ -1,0 +1,123 @@
+"""Property-test compat layer: re-export hypothesis when available, else a
+small deterministic fallback.
+
+The test suite's property tests are written against the hypothesis API
+(``given`` / ``settings`` / ``strategies as st``).  Minimal environments
+(e.g. the CI verify gate) don't ship hypothesis, and a module-level
+``from hypothesis import ...`` used to abort collection of seven test
+modules.  Importing from this module instead keeps the property tests
+*running* everywhere: with hypothesis installed you get real shrinking
+and example databases; without it you get seeded random sampling over the
+same strategy space (no shrinking, deterministic per test name).
+
+Only the strategy subset this suite uses is implemented in the fallback:
+``integers``, ``floats``, ``sampled_from``, ``lists`` (min/max size,
+``unique``), ``composite``, and ``Strategy.map``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A draw function wrapped with .map(), mirroring hypothesis."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            # allow_nan etc. are no-ops: bounded uniform never yields NaN/inf
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                out = []
+                attempts = 0
+                while len(out) < n:
+                    x = elements._draw(rng)
+                    if unique and x in out:
+                        attempts += 1
+                        if attempts > 1000:
+                            raise RuntimeError("could not draw a unique list")
+                        continue
+                    out.append(x)
+                return out
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw_value(rng):
+                    def draw(strategy):
+                        return strategy._draw(rng)
+
+                    return fn(draw, *args, **kwargs)
+
+                return _Strategy(draw_value)
+
+            return make
+
+    st = _Strategies()
+
+    def settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._proptest_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would make
+            # pytest see the original signature and demand fixtures for
+            # the drawn arguments.  The wrapper takes no arguments.
+            def wrapper():
+                n = getattr(
+                    wrapper,
+                    "_proptest_max_examples",
+                    getattr(fn, "_proptest_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                # deterministic per test: same examples on every run
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = [s._draw(rng) for s in strategies]
+                    fn(*drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

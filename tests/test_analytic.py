@@ -3,8 +3,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings, st
 
 import repro.configs  # noqa: F401
 from repro.launch.analytic import param_bytes_cached, serving_config_costs, step_costs

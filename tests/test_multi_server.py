@@ -1,0 +1,425 @@
+"""M/G/c worker-pool substrate: Erlang-C thresholds, multi-server simulator,
+threaded WorkerPool engine, admission control, and the new load patterns."""
+
+import hashlib
+import math
+import time
+
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    derive_policies,
+    erlang_c,
+    erlang_c_mean_wait,
+    expected_wait,
+    max_sustainable_rate,
+)
+from repro.core.elastico import ElasticoController
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import WorkerPool, WorkflowExecutor
+from repro.serving.queue import RequestQueue
+from repro.serving.simulator import (
+    ServingSimulator,
+    exponential_sampler,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    Request,
+    constant_rate,
+    flash_crowd_pattern,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def table_for(c, **hyst):
+    return derive_policies(
+        ladder_front(), slo_p95_s=1.0, hysteresis=HysteresisSpec(**hyst),
+        num_servers=c,
+    )
+
+
+def det_sampler(idx, rng):
+    return MEANS[idx]
+
+
+# -- Erlang-C / threshold derivation ------------------------------------------
+
+
+def test_c1_thresholds_collapse_to_mg1():
+    """num_servers=1 must reproduce the paper's M/G/1 table exactly —
+    including against the closed-form Eq. 10/13 values."""
+    base = derive_policies(ladder_front(), slo_p95_s=1.0)
+    c1 = table_for(1)
+    assert base.num_servers == 1
+    for a, b in zip(base.policies, c1.policies):
+        assert a.upscale_threshold == b.upscale_threshold
+        assert a.downscale_threshold == b.downscale_threshold
+        assert a.queuing_slack == b.queuing_slack
+    # closed-form M/G/1 check
+    for k, pol in enumerate(c1.policies):
+        delta = 1.0 - P95S[k]
+        assert pol.upscale_threshold == int(math.floor(delta / MEANS[k]))
+
+
+@given(st.integers(1, 16), st.floats(0.7, 3.0))
+@settings(max_examples=40, deadline=None)
+def test_thresholds_scale_linearly_with_c(c, slo):
+    table = derive_policies(ladder_front(), slo_p95_s=slo, num_servers=c)
+    for k, pol in enumerate(table.policies):
+        delta = slo - pol.point.profile.p95
+        want = max(0, int(math.floor(c * delta / pol.point.profile.mean)))
+        assert pol.upscale_threshold == want
+        if pol.downscale_threshold is not None:
+            nxt = table.policies[k + 1].point
+            delta_n = slo - nxt.profile.p95
+            want_dn = int(math.floor(
+                c * max(0.0, delta_n - table.slack_buffer_s) / nxt.profile.mean
+            ))
+            assert pol.downscale_threshold == want_dn
+
+
+def test_derive_policies_rejects_bad_num_servers():
+    with pytest.raises(ValueError):
+        derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=0)
+
+
+def test_erlang_c_reduces_to_mm1():
+    """c = 1: P(wait) = rho and E[W] = rho * s / (1 - rho)."""
+    for rho in (0.1, 0.5, 0.9):
+        assert erlang_c(1, rho) == pytest.approx(rho, rel=1e-12)
+        s = 0.2
+        lam = rho / s
+        want = rho * s / (1.0 - rho)
+        assert erlang_c_mean_wait(1, lam, s) == pytest.approx(want, rel=1e-12)
+
+
+def test_erlang_c_known_value():
+    """Textbook check: c=2, a=1 erlang -> C = 1/3."""
+    assert erlang_c(2, 1.0) == pytest.approx(1.0 / 3.0, rel=1e-12)
+
+
+def test_erlang_c_saturation_and_monotonicity():
+    assert erlang_c(2, 2.0) == 1.0
+    assert erlang_c_mean_wait(2, 10.0, 0.2) == float("inf")
+    assert erlang_c(4, 0.0) == 0.0
+    # adding servers at fixed offered load strictly reduces waiting
+    waits = [erlang_c_mean_wait(c, 8.0, 0.2) for c in (2, 3, 4, 8)]
+    assert all(a > b for a, b in zip(waits, waits[1:]))
+
+
+def test_expected_wait_and_sustainable_rate_scale_with_c():
+    assert expected_wait(6, 0.5) == pytest.approx(3.0)
+    assert expected_wait(6, 0.5, num_servers=3) == pytest.approx(1.0)
+    pol = table_for(1).policies[0]
+    assert max_sustainable_rate(pol) == pytest.approx(1.0 / MEANS[0])
+    assert max_sustainable_rate(pol, num_servers=4) == pytest.approx(4.0 / MEANS[0])
+
+
+# -- simulator: c = 1 reproduces the seed exactly ------------------------------
+
+
+def _digest(completed):
+    h = hashlib.sha256()
+    for r in completed:
+        h.update(
+            f"{r.request_id},{r.arrival_s:.12e},{r.start_s:.12e},"
+            f"{r.completion_s:.12e},{r.config_index};".encode()
+        )
+    return h.hexdigest()
+
+
+def test_c1_simulator_reproduces_seed_golden():
+    """Golden regression: the exact completion schedule produced by the
+    pre-refactor single-server simulator (seed commit) for this scenario.
+    If this digest moves, c=1 no longer reproduces the paper-faithful
+    M/G/1 runtime bit-for-bit."""
+    from repro.serving.workload import spike_pattern
+
+    table = derive_policies(ladder_front(), slo_p95_s=1.0)
+    arr = generate_arrivals(spike_pattern(2.0, factor=4.0), 180.0, seed=1)
+    sim = ServingSimulator(
+        lognormal_sampler_from_profile(MEANS, P95S),
+        controller=ElasticoController(table),
+        seed=7,
+        num_servers=1,
+    )
+    out = sim.run(arr, 180.0)
+    assert len(out.completed) == 732
+    assert len(out.switch_events) == 14
+    assert _digest(out.completed) == (
+        "dfec2ace7a6aa74c5246f4769e3ed8ec433b3f2ea07e4a6c0d38ba79038ed1f6"
+    )
+
+
+def test_default_num_servers_is_one_and_deterministic():
+    arr = generate_arrivals(constant_rate(4.0), 40.0, seed=3)
+    a = ServingSimulator(det_sampler, static_index=1, seed=5).run(arr, 40.0)
+    b = ServingSimulator(det_sampler, static_index=1, seed=5, num_servers=1).run(arr, 40.0)
+    assert a.num_servers == b.num_servers == 1
+    assert a.completed == b.completed
+    assert a.queue_depth_samples == b.queue_depth_samples
+    assert a.per_server_busy_s == b.per_server_busy_s
+
+
+# -- simulator: multi-server behavior ------------------------------------------
+
+
+@given(st.integers(2, 6), st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_conservation_any_pool_size(c, seed):
+    arr = generate_arrivals(constant_rate(6.0), 20.0, seed=seed)
+    ctrl = ElasticoController(table_for(c))
+    sim = ServingSimulator(det_sampler, controller=ctrl, seed=seed, num_servers=c)
+    out = sim.run(arr, 20.0)
+    assert len(out.completed) == len(arr)
+    ids = [r.request_id for r in out.completed]
+    assert len(set(ids)) == len(ids)
+    assert all(0 <= r.server_id < c for r in out.completed)
+    assert len(out.per_server_busy_s) == c
+    assert all(b >= 0.0 for b in out.per_server_busy_s)
+
+
+def test_pool_reduces_wait_under_load():
+    """At rho ~ 0.9 for one server, a second server must cut the mean wait."""
+    arr = generate_arrivals(constant_rate(9.0), 120.0, seed=4)
+    waits = {}
+    for c in (1, 2, 4):
+        out = ServingSimulator(
+            det_sampler, static_index=0, seed=0, num_servers=c
+        ).run(arr, 120.0)
+        waits[c] = out.mean_wait()
+    assert waits[2] < waits[1]
+    assert waits[4] <= waits[2]
+
+
+def test_mmc_wait_converges_to_erlang_c():
+    """M/M/c validation: simulated mean wait under Poisson load matches the
+    Erlang-C stationary prediction within tolerance (c = 1, 2, 3)."""
+    mean_s = 0.2
+    for c, lam in ((1, 3.5), (2, 7.0), (3, 10.5)):  # rho = 0.7 each
+        arr = generate_arrivals(constant_rate(lam), 2000.0, seed=11 + c)
+        sim = ServingSimulator(
+            exponential_sampler([mean_s]), static_index=0, seed=29 + c,
+            num_servers=c,
+        )
+        out = sim.run(arr, 2000.0)
+        predicted = erlang_c_mean_wait(c, lam, mean_s)
+        assert out.mean_wait() == pytest.approx(predicted, rel=0.15), (
+            f"c={c}: simulated {out.mean_wait():.4f} vs Erlang-C {predicted:.4f}"
+        )
+
+
+def test_per_server_utilization_balanced_under_saturation():
+    # rho = 38 * 0.1 / 4 = 0.95: every server near fully busy
+    arr = generate_arrivals(constant_rate(38.0), 60.0, seed=2)
+    out = ServingSimulator(
+        det_sampler, static_index=0, seed=0, num_servers=4
+    ).run(arr, 60.0)
+    utils = out.per_server_utilization()
+    assert len(utils) == 4
+    assert all(u > 0.8 for u in utils)
+    assert max(utils) - min(utils) < 0.2  # lowest-free-server dispatch balances
+
+
+def test_c4_beats_c1_under_sustained_overload():
+    """Acceptance criterion: under the sustained-overload trace a c=4 pool
+    shows strictly higher SLO compliance than c=1 (same arrivals, each with
+    the Elastico table derived for its own c)."""
+    capacity = 1.0 / MEANS[0]
+    arr = generate_arrivals(
+        sustained_overload_pattern(capacity, overload_factor=2.5, warmup_s=20.0),
+        120.0, seed=1,
+    )
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    comp = {}
+    for c in (1, 4):
+        sim = ServingSimulator(
+            sampler, controller=ElasticoController(table_for(c)),
+            seed=0, num_servers=c,
+        )
+        comp[c] = sim.run(arr, 120.0).slo_compliance(1.0)
+    assert comp[4] > comp[1]
+    assert comp[4] > 0.9
+
+
+# -- new load patterns ---------------------------------------------------------
+
+
+def test_flash_crowd_shape():
+    f = flash_crowd_pattern(2.0, peak_factor=10.0, crowd_start_s=60.0,
+                            ramp_s=5.0, hold_s=20.0)
+    assert f(0.0) == pytest.approx(2.0)
+    assert f(59.9) == pytest.approx(2.0)
+    assert f(62.5) == pytest.approx(11.0)       # mid-ramp
+    assert f(70.0) == pytest.approx(20.0)       # hold
+    assert f(84.9) == pytest.approx(20.0, abs=0.5)
+    assert f(95.0) == pytest.approx(2.0)        # back to base
+    with pytest.raises(ValueError):
+        flash_crowd_pattern(1.0, peak_factor=0.5)
+
+
+def test_sustained_overload_shape():
+    f = sustained_overload_pattern(10.0, overload_factor=2.5, warmup_s=30.0)
+    assert f(10.0) == pytest.approx(5.0)        # warmup at half capacity
+    assert f(30.0) == pytest.approx(25.0)
+    assert f(500.0) == pytest.approx(25.0)
+    with pytest.raises(ValueError):
+        sustained_overload_pattern(0.0)
+
+
+# -- real-time worker pool -----------------------------------------------------
+
+
+SERVICE_S = 0.004
+
+
+def sleep_workflow(config, payload):
+    time.sleep(SERVICE_S)
+    return payload
+
+
+def make_engine(num_workers=1, **kw):
+    executor = WorkflowExecutor(
+        configs=[("cfg", 0), ("cfg", 1)], workflow_fn=sleep_workflow
+    )
+    return ServingEngine(executor, num_workers=num_workers,
+                         control_tick_s=0.01, **kw)
+
+
+def test_worker_pool_c1_serves_all_fifo():
+    engine = make_engine(num_workers=1)
+    engine.start()
+    for i in range(30):
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    report = engine.drain_and_stop()
+    assert report.num_workers == 1
+    assert report.dropped == 0
+    assert sorted(r.request_id for r in report.records) == list(range(30))
+    # single worker: completion order == submission order (FIFO, no overlap)
+    assert [r.request_id for r in report.records] == list(range(30))
+    assert report.served_per_worker == [30]
+
+
+def test_worker_pool_parallelism_speedup():
+    """c=4 drains a backlog of sleep-requests ~4x faster than c=1 (generous
+    2x bound to stay robust on loaded CI hosts)."""
+    n = 80
+
+    def drain_time(c):
+        engine = make_engine(num_workers=c)
+        engine.start()
+        t0 = time.monotonic()
+        for i in range(n):
+            engine.submit(Request(request_id=i, arrival_s=0.0))
+        report = engine.drain_and_stop()
+        elapsed = time.monotonic() - t0
+        assert len(report.records) == n
+        assert report.num_workers == c
+        return elapsed
+
+    t1 = drain_time(1)
+    t4 = drain_time(4)
+    assert t4 < t1 / 2.0, f"c=4 took {t4:.3f}s vs c=1 {t1:.3f}s"
+
+
+def test_worker_pool_spreads_load():
+    engine = make_engine(num_workers=4)
+    engine.start()
+    for i in range(100):
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    report = engine.drain_and_stop()
+    assert len(report.records) == 100
+    assert sum(report.served_per_worker) == 100
+    assert sum(1 for s in report.served_per_worker if s > 0) >= 2
+    workers = {r.worker_id for r in report.records}
+    assert len(workers) >= 2
+
+
+def test_admission_control_counts_drops():
+    engine = make_engine(num_workers=1, max_queue_depth=5)
+    engine.start()
+    accepted = 0
+    for i in range(200):  # flood much faster than one worker drains
+        if engine.submit(Request(request_id=i, arrival_s=0.0)):
+            accepted += 1
+    report = engine.drain_and_stop()
+    assert report.total_requests == 200
+    assert report.dropped > 0
+    assert report.dropped == 200 - accepted
+    assert len(report.records) == accepted
+    assert engine.monitor.total_drops == report.dropped
+    # goodput charges drops, compliance does not
+    assert report.goodput(10.0) <= report.slo_compliance(10.0)
+
+
+def test_bounded_queue_put_semantics():
+    q = RequestQueue(max_depth=2)
+    assert q.put(Request(request_id=0, arrival_s=0.0))
+    assert q.put(Request(request_id=1, arrival_s=0.0))
+    assert not q.put(Request(request_id=2, arrival_s=0.0))
+    assert q.total_enqueued == 2
+    assert q.total_dropped == 1
+    assert q.get().request_id == 0
+    assert q.put(Request(request_id=3, arrival_s=0.0))
+    with pytest.raises(ValueError):
+        RequestQueue(max_depth=0)
+
+
+def test_engine_monitor_shares_time_axis():
+    """record_arrival (ingress) and snapshot/arrival_rate (observe) must
+    stamp on the engine's epoch-relative axis, or the EWMA decay term sees
+    dt = 0 forever and the arrival rate never decays."""
+    t = {"now": 1000.0}  # absolute host clock, far from zero
+
+    def clock():
+        return t["now"]
+
+    executor = WorkflowExecutor(configs=[("cfg", 0)],
+                                workflow_fn=lambda cfg, p: None, clock=clock)
+    engine = ServingEngine(executor, num_workers=1, clock=clock)
+    engine.start()
+    for i in range(20):
+        t["now"] += 0.1
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    rate_at_burst = engine.monitor.arrival_rate()
+    assert rate_at_burst > 1.0  # ~10 QPS stream just ended
+    t["now"] += 60.0            # long quiet period: rate must decay to ~0
+    assert engine.monitor.arrival_rate() < rate_at_burst * 0.01
+    engine.drain_and_stop()
+
+
+def test_worker_pool_standalone():
+    """WorkerPool used directly (without the engine): c workers drain the
+    shared queue and every record lands in the executor."""
+    q = RequestQueue()
+    executor = WorkflowExecutor(configs=[("cfg", 0)],
+                                workflow_fn=lambda cfg, p: p)
+    pool = WorkerPool(executor, q, c=3)
+    pool.start()
+    for i in range(50):
+        q.put(Request(request_id=i, arrival_s=0.0))
+    deadline = time.monotonic() + 10.0
+    while len(executor.records) < 50 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    pool.stop()
+    assert sorted(r.request_id for r in executor.records) == list(range(50))
+    assert pool.num_workers == 3
+    with pytest.raises(ValueError):
+        WorkerPool(executor, q, c=0)

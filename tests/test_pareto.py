@@ -1,8 +1,7 @@
 """Pareto front construction + ladder invariants (paper §V-A, Eq. 4)."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings, st
 
 from repro.core.pareto import (
     LatencyProfile,

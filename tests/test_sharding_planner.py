@@ -2,8 +2,7 @@
 
 import jax
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings, st
 from jax.sharding import PartitionSpec
 
 from repro.sharding.planner import ShardingPlanner, shard_hint

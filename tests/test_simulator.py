@@ -4,8 +4,7 @@ import math
 import statistics
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings, st
 
 from repro.core.aqm import HysteresisSpec, derive_policies
 from repro.core.elastico import ElasticoController
