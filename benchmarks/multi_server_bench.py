@@ -1,7 +1,7 @@
-"""Multi-server scaling: SLO compliance of c ∈ {1, 2, 4} worker pools.
+"""Multi-server scaling: homogeneous pools vs heterogeneous mixes.
 
-Identical arrival traces are replayed against M/G/c simulator pools of
-increasing size, each driven by an Elastico table derived for that c
+Part 1 (PR 1): identical arrival traces replayed against M/G/c simulator
+pools of c ∈ {1, 2, 4}, each driven by an Elastico table derived for that c
 (``derive_policies(..., num_servers=c)``).  Two beyond-paper load shapes
 stress the pools:
 
@@ -9,15 +9,24 @@ stress the pools:
   capacity — pools with c <= 2 are unstable, c = 4 drains it;
 - **flash-crowd**: 10x ramp-hold-decay around a moderate base.
 
-The derived headline tracks multi-worker throughput and the compliance gap
-between c = 4 and c = 1 under sustained overload (which must be positive:
-that is the acceptance criterion of the worker-pool refactor).
+Part 2 (PR 2): heterogeneous worker pools at c = 4.  Every static mix on
+the one-worker-shift ladder (``mix_ladder``) is swept under both traces,
+recording accuracy/compliance per mix, and the *mix-shifting* controller
+(``ElasticoMixController`` over Allen-Cunneen M/G/c thresholds,
+``derive_mix_policies``) is compared against homogeneous switching.  The
+headline checks the PR's acceptance criterion: some heterogeneous mix must
+hold SLO compliance within 2 points of the all-fast pool under sustained
+overload while beating its mean accuracy.
 """
 
 from __future__ import annotations
 
-from repro.core.aqm import HysteresisSpec, derive_policies
-from repro.core.elastico import ElasticoController
+from repro.core.aqm import (
+    HysteresisSpec,
+    derive_mix_policies,
+    derive_policies,
+)
+from repro.core.elastico import ElasticoController, ElasticoMixController
 from repro.core.pareto import LatencyProfile, ParetoPoint
 from repro.serving.simulator import ServingSimulator, lognormal_sampler_from_profile
 from repro.serving.workload import (
@@ -35,6 +44,7 @@ ACCS = [0.76, 0.82, 0.85]
 SLO_S = 1.0
 DURATION_S = 120.0
 POOL_SIZES = (1, 2, 4)
+MIX_C = 4            # pool size for the heterogeneous comparison
 
 
 def _front():
@@ -58,19 +68,40 @@ def _traces(seed: int = 1):
     }
 
 
+def _row(pattern, mode, c, arrivals, out, extra=None):
+    util = out.per_server_utilization()
+    row = {
+        "pattern": pattern,
+        "mode": mode,
+        "num_servers": c,
+        "offered": len(arrivals),
+        "completed": len(out.completed),
+        "throughput_qps": len(out.completed) / DURATION_S,
+        "compliance": out.slo_compliance(SLO_S),
+        "p95_latency_s": out.p95_latency(),
+        "mean_wait_s": out.mean_wait(),
+        "mean_accuracy": out.mean_accuracy(ACCS),
+        "mean_utilization": sum(util) / len(util),
+        "per_server_utilization": util,
+        "switches": len(out.switch_events),
+    }
+    if extra:
+        row.update(extra)
+    return row
+
+
 def run() -> dict:
     sampler = lognormal_sampler_from_profile(MEANS, P95S)
     traces = _traces()
     rows = []
     total_completed = 0
+    hyst = HysteresisSpec(downscale_cooldown_s=5.0)
     with Timer() as t:
+        # -- part 1: homogeneous switching across pool sizes ------------------
         for pattern, arrivals in traces.items():
             for c in POOL_SIZES:
                 table = derive_policies(
-                    _front(),
-                    slo_p95_s=SLO_S,
-                    hysteresis=HysteresisSpec(downscale_cooldown_s=5.0),
-                    num_servers=c,
+                    _front(), slo_p95_s=SLO_S, hysteresis=hyst, num_servers=c,
                 )
                 sim = ServingSimulator(
                     sampler,
@@ -80,38 +111,82 @@ def run() -> dict:
                 )
                 out = sim.run(arrivals, DURATION_S)
                 total_completed += len(out.completed)
-                util = out.per_server_utilization()
-                rows.append(
-                    {
-                        "pattern": pattern,
-                        "num_servers": c,
-                        "offered": len(arrivals),
-                        "completed": len(out.completed),
-                        "throughput_qps": len(out.completed) / DURATION_S,
-                        "compliance": out.slo_compliance(SLO_S),
-                        "p95_latency_s": out.p95_latency(),
-                        "mean_wait_s": out.mean_wait(),
-                        "mean_accuracy": out.mean_accuracy(ACCS),
-                        "mean_utilization": sum(util) / len(util),
-                        "per_server_utilization": util,
-                        "switches": len(out.switch_events),
-                    }
+                rows.append(_row(pattern, "homogeneous-switching", c, arrivals, out))
+
+        # -- part 2: heterogeneous mixes at c = MIX_C -------------------------
+        mix_table = derive_mix_policies(
+            _front(), slo_p95_s=SLO_S, hysteresis=hyst, num_servers=MIX_C,
+        )
+        for pattern, arrivals in traces.items():
+            # mix-shifting controller: one worker repinned per decision
+            sim = ServingSimulator(
+                sampler,
+                controller=ElasticoMixController(mix_table),
+                seed=0,
+                num_servers=MIX_C,
+            )
+            out = sim.run(arrivals, DURATION_S)
+            total_completed += len(out.completed)
+            # assignment_timeline[0] is the initial t=0 pinning, not a repin
+            rows.append(_row(pattern, "mix-shifting", MIX_C, arrivals, out,
+                             {"repin_events": max(0, len(out.assignment_timeline) - 1)}))
+
+            # every static mix on the ladder: accuracy/compliance per mix
+            for mp in mix_table.policies:
+                sim = ServingSimulator(
+                    sampler, assignment=list(mp.assignment),
+                    seed=0, num_servers=MIX_C,
                 )
+                out = sim.run(arrivals, DURATION_S)
+                total_completed += len(out.completed)
+                rows.append(_row(
+                    pattern, "static-mix", MIX_C, arrivals, out,
+                    {
+                        "assignment": list(mp.assignment),
+                        "predicted_accuracy": mp.expected_accuracy,
+                        "drain_rate_qps": mp.drain_rate_qps,
+                        "mix_scv": mp.scv,
+                    },
+                ))
     save_json("multi_server_bench.json", rows)
 
-    by_key = {(r["pattern"], r["num_servers"]): r for r in rows}
-    ov1 = by_key[("sustained-overload", 1)]["compliance"]
-    ov4 = by_key[("sustained-overload", 4)]["compliance"]
-    tput4 = by_key[("sustained-overload", 4)]["throughput_qps"]
-    fl4 = by_key[("flash-crowd", 4)]["compliance"]
+    by_key = {(r["pattern"], r["mode"], r["num_servers"]): r for r in rows
+              if r["mode"] != "static-mix"}
+    ov1 = by_key[("sustained-overload", "homogeneous-switching", 1)]["compliance"]
+    ov4 = by_key[("sustained-overload", "homogeneous-switching", 4)]["compliance"]
+    mix_ov = by_key[("sustained-overload", "mix-shifting", MIX_C)]
+    mix_fl = by_key[("flash-crowd", "mix-shifting", MIX_C)]
+    hom_ov = by_key[("sustained-overload", "homogeneous-switching", MIX_C)]
+
+    # acceptance check: best static heterogeneous mix vs the all-fast pool
+    # under sustained overload.
+    statics = [r for r in rows
+               if r["mode"] == "static-mix" and r["pattern"] == "sustained-overload"]
+    all_fast = next(r for r in statics if set(r["assignment"]) == {0})
+    het = [r for r in statics if len(set(r["assignment"])) > 1]
+    good = [r for r in het
+            if r["compliance"] >= all_fast["compliance"] - 0.02
+            and r["mean_accuracy"] > all_fast["mean_accuracy"]]
+    best = max(good, key=lambda r: r["mean_accuracy"]) if good else None
+
+    derived = (
+        f"overload_compliance c1={ov1:.3f} c4={ov4:.3f} "
+        f"(+{(ov4 - ov1) * 100:.1f}pts) "
+        f"mix_shift c4: ov={mix_ov['compliance']:.3f}/acc={mix_ov['mean_accuracy']:.3f} "
+        f"(hom acc={hom_ov['mean_accuracy']:.3f}) fl={mix_fl['compliance']:.3f} "
+    )
+    if best is not None:
+        derived += (
+            f"best_het_mix={best['assignment']} "
+            f"comp={best['compliance']:.3f} (all-fast {all_fast['compliance']:.3f}) "
+            f"acc={best['mean_accuracy']:.3f} (all-fast {all_fast['mean_accuracy']:.3f})"
+        )
+    else:
+        derived += "best_het_mix=NONE (acceptance criterion FAILED)"
     return {
         "name": "multi_server",
         "us_per_call": t.elapsed / max(total_completed, 1) * 1e6,
-        "derived": (
-            f"overload_compliance c1={ov1:.3f} c4={ov4:.3f} "
-            f"(+{(ov4 - ov1) * 100:.1f}pts) c4_tput={tput4:.1f}qps "
-            f"flash_c4={fl4:.3f}"
-        ),
+        "derived": derived,
     }
 
 

@@ -1,9 +1,12 @@
 """Benchmark driver: one function per paper table/figure.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+        PYTHONPATH=src python -m benchmarks.run --check-docs
 
 Prints ``name,us_per_call,derived`` CSV and writes per-benchmark JSON
-artifacts into experiments/.
+artifacts into experiments/.  ``--check-docs`` runs the documentation
+cross-reference checker (:mod:`repro.tools.docscheck`) instead of any
+benchmark and exits non-zero on stale references.
 """
 
 from __future__ import annotations
@@ -45,6 +48,10 @@ BENCHES = {
 
 
 def main() -> None:
+    if "--check-docs" in sys.argv[1:]:
+        from repro.tools.docscheck import main as docscheck_main
+
+        sys.exit(docscheck_main())
     names = sys.argv[1:] or list(BENCHES)
     print("name,us_per_call,derived")
     failed = []

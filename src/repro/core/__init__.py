@@ -6,20 +6,30 @@
 - :mod:`repro.core.gradient` — IDW finite-difference gradients (Eq. 3).
 - :mod:`repro.core.compass_v` — Algorithm 1 feasible-set search (§IV).
 - :mod:`repro.core.pareto` — accuracy/latency Pareto front (§III-A).
-- :mod:`repro.core.aqm` — M/G/1 switching thresholds (§V).
+- :mod:`repro.core.aqm` — M/G/c switching thresholds, Erlang-C and
+  Allen-Cunneen wait models, heterogeneous mix policies (§V + beyond).
 - :mod:`repro.core.planner` — deployment planning (§III-A).
-- :mod:`repro.core.elastico` — runtime adaptation controller (§III-B, §V-F).
+- :mod:`repro.core.elastico` — runtime adaptation controllers (§III-B, §V-F).
 """
 
 from .aqm import (
     AQMPolicyTable,
     HysteresisSpec,
+    MixPolicy,
+    MixPolicyTable,
     SwitchingPolicy,
+    allen_cunneen_mean_wait,
+    derive_mix_policies,
     derive_policies,
+    erlang_c,
+    erlang_c_mean_wait,
     ladder_is_monotone,
+    mix_ladder,
+    mix_ladder_is_monotone,
+    mix_mean_wait,
 )
 from .compass_v import CompassV, SearchResult, exhaustive_search
-from .elastico import ElasticoController, SwitchEvent
+from .elastico import ElasticoController, ElasticoMixController, SwitchEvent
 from .evaluate import ProgressiveEvaluator, make_budget_schedule
 from .gradient import idw_gradient
 from .pareto import LatencyProfile, ParetoPoint, pareto_front
@@ -30,13 +40,23 @@ from .wilson import wilson_interval
 __all__ = [
     "AQMPolicyTable",
     "HysteresisSpec",
+    "MixPolicy",
+    "MixPolicyTable",
     "SwitchingPolicy",
+    "allen_cunneen_mean_wait",
+    "derive_mix_policies",
     "derive_policies",
+    "erlang_c",
+    "erlang_c_mean_wait",
     "ladder_is_monotone",
+    "mix_ladder",
+    "mix_ladder_is_monotone",
+    "mix_mean_wait",
     "CompassV",
     "SearchResult",
     "exhaustive_search",
     "ElasticoController",
+    "ElasticoMixController",
     "SwitchEvent",
     "ProgressiveEvaluator",
     "make_budget_schedule",

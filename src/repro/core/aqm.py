@@ -15,7 +15,19 @@ at aggregate rate c / s-bar_k, so a buffered depth of N implies an expected
 wait of E[W] = N * s-bar_k / c.  For c = 1 all thresholds collapse exactly
 to the paper's M/G/1 values.  The Erlang-C formula (:func:`erlang_c`,
 :func:`erlang_c_mean_wait`) supplies the stationary M/M/c waiting-time
-prediction used for capacity reporting and validation of the simulator.
+prediction used for capacity reporting and validation of the simulator;
+:func:`allen_cunneen_mean_wait` extends it to general (heavy-tailed) service
+via the squared coefficient of variation measured by the profiler, with
+SCV = 1 (exponential service) reproducing Erlang-C exactly.
+
+Heterogeneous pools (beyond-paper): instead of one globally active
+configuration, each of the c workers can be *pinned* to its own Pareto rung.
+:func:`mix_ladder` enumerates assignment vectors that differ by one worker
+between adjacent states, :func:`derive_mix_policies` derives queue-depth
+thresholds per mix state (Allen-Cunneen-corrected aggregate drain), and
+:func:`mix_mean_wait` predicts the stationary wait of a mix under a given
+arrival rate.  An all-same-config mix with SCV = 1 reproduces the
+homogeneous Eq. 10 thresholds exactly.
 
 Configurations with Delta_k <= 0 cannot satisfy the SLO and are excluded.
 Asymmetric temporal hysteresis (§V-F): upscale cooldown ~0 (react to spikes
@@ -227,3 +239,295 @@ def erlang_c_mean_wait(num_servers: int, arrival_rate_qps: float,
         return float("inf")
     pw = erlang_c(num_servers, a)
     return pw * mean_service_s / (num_servers - a)
+
+
+# -- M/G/c stationary analysis (Allen-Cunneen) --------------------------------
+
+
+def allen_cunneen_mean_wait(num_servers: int, arrival_rate_qps: float,
+                            mean_service_s: float, *,
+                            scv_service: float = 1.0,
+                            scv_arrival: float = 1.0) -> float:
+    """Allen-Cunneen approximation of the mean wait of a G/G/c queue.
+
+      E[W_{G/G/c}] ~= (C_a^2 + C_s^2) / 2 * E[W_{M/M/c}]
+
+    where ``scv_service`` is the squared coefficient of variation of service
+    time (C_s^2 = Var[S] / E[S]^2, :attr:`repro.core.pareto.LatencyProfile.scv`
+    as measured by the Planner's profiler) and ``scv_arrival`` the SCV of
+    inter-arrival times (1.0 for the Poisson arrivals the AQM assumes, giving
+    the M/G/c case).  The approximation is exact for M/M/c (both SCVs 1,
+    where it *equals* :func:`erlang_c_mean_wait`) and for M/G/1 (where it
+    reduces to Pollaczek-Khinchine).  LLM service times are heavy-tailed
+    (SCV > 1), so the exponential model underestimates waits — this factor
+    is what makes heterogeneous mix thresholds honest about the tail.
+    """
+    if scv_service < 0 or scv_arrival < 0:
+        raise ValueError("squared coefficients of variation must be >= 0")
+    base = erlang_c_mean_wait(num_servers, arrival_rate_qps, mean_service_s)
+    if math.isinf(base):
+        return base
+    return 0.5 * (scv_arrival + scv_service) * base
+
+
+# -- heterogeneous pools: per-worker config pinning ---------------------------
+
+
+@dataclass(frozen=True)
+class MixPolicy:
+    """One state of the heterogeneous mix ladder: an assignment vector plus
+    its aggregate queueing characteristics and switching thresholds.
+
+    ``assignment[w]`` is the Pareto-ladder config index pinned to worker
+    ``w``, sorted ascending (fastest rungs first).  Faster workers absorb
+    the larger share of requests simply by completing and re-polling the
+    shared FIFO queue more often — their drain share is mu_w / mu_agg in
+    saturation, which is what the aggregate model weights by.  (The
+    discrete-event simulator additionally breaks dispatch ties toward the
+    lowest-numbered server for determinism; the threaded pool has no such
+    preference, and none is needed.)  ``index`` is this state's rung on the mix
+    ladder: 0 = all workers on the fastest config, the top state = all
+    workers on the most accurate config; adjacent states differ by exactly
+    one worker.
+    """
+
+    assignment: Tuple[int, ...]
+    index: int
+    drain_rate_qps: float       # mu_agg = sum_w 1 / s-bar_{a_w}
+    mean_service_s: float       # s_eff = c / mu_agg (harmonic blend)
+    scv: float                  # C_s^2 of the service mixture seen by requests
+    worst_p95_s: float          # max_w s95_{a_w}: tail of the slowest pinned rung
+    queuing_slack: float        # Delta_m = L - worst_p95
+    expected_accuracy: float    # drain-share-weighted accuracy of the mix
+    upscale_threshold: int      # depth above which to shift one worker faster
+    downscale_threshold: Optional[int]  # depth below which to shift one worker
+                                        # more accurate; None at the top state
+
+    @property
+    def num_servers(self) -> int:
+        return len(self.assignment)
+
+
+@dataclass(frozen=True)
+class MixPolicyTable:
+    """Switching policy over the heterogeneous mix ladder.
+
+    Duck-type compatible with :class:`AQMPolicyTable` (``ladder_size``,
+    ``policy(k)``, ``hysteresis``, ``num_servers``) so the Elastico
+    threshold-walking logic drives either table unchanged; the mix-aware
+    runtime maps a state index back to its assignment vector via
+    ``policy(k).assignment``.
+    """
+
+    slo_p95_s: float
+    slack_buffer_s: float
+    policies: Tuple[MixPolicy, ...]       # index 0 = all-fastest
+    hysteresis: HysteresisSpec
+    num_servers: int
+    excluded: Tuple[ParetoPoint, ...] = ()
+
+    @property
+    def ladder_size(self) -> int:
+        return len(self.policies)
+
+    def policy(self, k: int) -> MixPolicy:
+        return self.policies[k]
+
+    def assignment(self, k: int) -> Tuple[int, ...]:
+        return self.policies[k].assignment
+
+
+def mix_ladder(num_configs: int, num_servers: int) -> List[Tuple[int, ...]]:
+    """Enumerate the mix ladder: assignment vectors from all-fastest to
+    all-most-accurate, shifting exactly one worker per step.
+
+    For n configs and c workers the ladder has (n - 1) * c + 1 states:
+
+      [0,0,..,0] -> [0,..,0,1] -> ... -> [1,1,..,1] -> [1,..,1,2] -> ...
+
+    Each vector is sorted ascending (fastest rungs in the low worker slots).
+    ``num_configs = 1`` degenerates to the single all-zero state and
+    ``num_servers = 1`` to the plain homogeneous ladder.
+    """
+    if num_configs < 1 or num_servers < 1:
+        raise ValueError("need at least one config and one server")
+    states: List[Tuple[int, ...]] = []
+    for k in range(num_configs - 1):
+        for i in range(num_servers):
+            states.append(tuple([k] * (num_servers - i) + [k + 1] * i))
+    states.append(tuple([num_configs - 1] * num_servers))
+    return states
+
+
+def mix_aggregates(front: Sequence[ParetoPoint], assignment: Sequence[int],
+                   scv: Optional[Sequence[float]] = None,
+                   ) -> Tuple[float, float, float, float, float]:
+    """Aggregate queueing characteristics of one assignment vector.
+
+    Returns ``(drain_rate_qps, mean_service_s, scv_eff, worst_p95_s,
+    expected_accuracy)``.  The pool drains at the sum of per-worker service
+    rates; the *service mixture* a random request sees weights each pinned
+    config by its drain share (in saturation worker w completes a fraction
+    mu_w / mu_agg of all requests), so the mixture mean equals the harmonic
+    blend c / mu_agg exactly and the mixture SCV folds in both each config's
+    own dispersion and the between-config spread of means.
+    """
+    if not assignment:
+        raise ValueError("empty assignment")
+    scvs = [p.profile.scv for p in front] if scv is None else list(scv)
+    if len(scvs) != len(front):
+        raise ValueError("need one SCV per front configuration")
+    for a in assignment:
+        if not 0 <= a < len(front):
+            raise IndexError(f"config index {a} outside the front")
+    if len(set(assignment)) == 1:
+        # uniform state: exact (no accumulated float error), so the all-same
+        # mix collapses to the homogeneous model bit-for-bit.
+        p = front[assignment[0]]
+        mu_agg = len(assignment) / p.profile.mean
+        return (mu_agg, p.profile.mean, scvs[assignment[0]], p.profile.p95,
+                p.accuracy)
+    mu_agg = 0.0
+    for a in assignment:
+        mu_agg += 1.0 / front[a].profile.mean
+    s_eff = len(assignment) / mu_agg
+    # share-weighted mixture moments: E[S] and E[S^2] with
+    # E[S_w^2] = s-bar_w^2 * (1 + C_s,w^2)
+    m1 = 0.0
+    m2 = 0.0
+    acc = 0.0
+    for a in assignment:
+        p = front[a]
+        share = (1.0 / p.profile.mean) / mu_agg
+        m1 += share * p.profile.mean
+        m2 += share * p.profile.mean ** 2 * (1.0 + scvs[a])
+        acc += share * p.accuracy
+    scv_eff = max(0.0, m2 / (m1 * m1) - 1.0)
+    worst_p95 = max(front[a].profile.p95 for a in assignment)
+    return mu_agg, s_eff, scv_eff, worst_p95, acc
+
+
+def derive_mix_policies(
+    front: Sequence[ParetoPoint],
+    *,
+    slo_p95_s: float,
+    slack_buffer_s: float = 0.050,
+    hysteresis: HysteresisSpec = HysteresisSpec(),
+    num_servers: int = 1,
+    scv: Optional[Sequence[float]] = None,
+) -> MixPolicyTable:
+    """Derive queue-depth switching thresholds for the heterogeneous mix
+    ladder of a Pareto front (the beyond-paper analogue of
+    :func:`derive_policies`).
+
+    For mix state m with aggregate drain rate mu_agg(m), slack
+    Delta_m = L - max_w s95 (a buffered request may be served by the slowest
+    pinned rung) and Allen-Cunneen variability factor
+    phi_m = (1 + C_s,eff^2(m)) / 2, a buffered depth of N implies an
+    expected wait of about  E[W | N] ~= phi_m * N / mu_agg(m), so
+
+      N_m(up) = floor(Delta_m * mu_agg(m) / phi_m)
+      N_m(dn) = floor((Delta_{m+1} - h_s) * mu_agg(m+1) / phi_{m+1})
+
+    mirroring Eq. 10/13 with the heterogeneous drain rate in place of
+    c / s-bar and the SCV correction for heavy-tailed service.  For an
+    all-same-config state with SCV = 1 (exponential / unprofiled), phi = 1
+    and mu_agg = c / s-bar, so N_m(up) equals the homogeneous Eq. 10
+    threshold exactly.
+
+    ``scv`` overrides the per-config service-time SCVs (default: taken from
+    each profile via :attr:`repro.core.pareto.LatencyProfile.scv`, i.e.
+    measured by the Planner's profiler, with an exponential fallback of 1.0
+    for synthetic profiles).
+    """
+    if slo_p95_s <= 0:
+        raise ValueError("SLO must be positive")
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    for a, b in zip(front, front[1:]):
+        if not b.profile.mean > a.profile.mean:
+            raise ValueError("front must be ordered by increasing mean latency")
+
+    admitted: List[ParetoPoint] = []
+    excluded: List[ParetoPoint] = []
+    for p in front:
+        ((admitted if slo_p95_s - p.profile.p95 > 0 else excluded).append(p))
+    if not admitted:
+        return MixPolicyTable(
+            slo_p95_s=slo_p95_s, slack_buffer_s=slack_buffer_s, policies=(),
+            hysteresis=hysteresis, num_servers=num_servers,
+            excluded=tuple(excluded),
+        )
+    scvs = [p.profile.scv for p in admitted] if scv is None else list(scv)
+    if len(scvs) != len(admitted):
+        raise ValueError("need one SCV per admitted configuration")
+
+    states = mix_ladder(len(admitted), num_servers)
+
+    def stats(assignment: Tuple[int, ...]):
+        mu, s_eff, scv_eff, p95, acc = mix_aggregates(admitted, assignment, scvs)
+        delta = slo_p95_s - p95
+        phi = max(0.5 * (1.0 + scv_eff), 1e-9)
+        return mu, s_eff, scv_eff, p95, acc, delta, phi
+
+    def drain_threshold(assignment: Tuple[int, ...], budget_s: float,
+                        mu: float, phi: float) -> int:
+        # depth whose drain wait phi * N / mu still fits the budget.  A
+        # uniform state with phi = 1 evaluates the identical floating-point
+        # expression as Eq. 10/13 in derive_policies, so the all-same mix
+        # reproduces the homogeneous thresholds exactly.
+        if phi == 1.0 and len(set(assignment)) == 1:
+            mean = admitted[assignment[0]].profile.mean
+            return int(math.floor(num_servers * budget_s / mean))
+        return int(math.floor(budget_s * mu / phi))
+
+    policies: List[MixPolicy] = []
+    for m, assignment in enumerate(states):
+        mu, s_eff, scv_eff, p95, acc, delta, phi = stats(assignment)
+        up = max(0, drain_threshold(assignment, delta, mu, phi))
+        down: Optional[int] = None
+        if m + 1 < len(states):
+            nxt = states[m + 1]
+            mu_n, _, _, _, _, delta_n, phi_n = stats(nxt)
+            down = max(0, drain_threshold(
+                nxt, max(0.0, delta_n - slack_buffer_s), mu_n, phi_n))
+        policies.append(MixPolicy(
+            assignment=assignment,
+            index=m,
+            drain_rate_qps=mu,
+            mean_service_s=s_eff,
+            scv=scv_eff,
+            worst_p95_s=p95,
+            queuing_slack=delta,
+            expected_accuracy=acc,
+            upscale_threshold=up,
+            downscale_threshold=down,
+        ))
+    return MixPolicyTable(
+        slo_p95_s=slo_p95_s,
+        slack_buffer_s=slack_buffer_s,
+        policies=tuple(policies),
+        hysteresis=hysteresis,
+        num_servers=num_servers,
+        excluded=tuple(excluded),
+    )
+
+
+def mix_mean_wait(mix: MixPolicy, arrival_rate_qps: float) -> float:
+    """Predicted stationary mean wait of a heterogeneous mix under Poisson
+    arrivals at ``arrival_rate_qps`` — Allen-Cunneen M/G/c with the mix's
+    effective mean service time and mixture SCV, treating the pool as c
+    interchangeable servers at the harmonic-blend rate (the standard
+    effective-capacity reduction for nearly-balanced heterogeneous pools)."""
+    return allen_cunneen_mean_wait(
+        mix.num_servers, arrival_rate_qps, mix.mean_service_s,
+        scv_service=mix.scv,
+    )
+
+
+def mix_ladder_is_monotone(table: MixPolicyTable) -> bool:
+    """Eq. 11 analogue for mixes: faster states tolerate deeper queues,
+    N_0(up) >= N_1(up) >= ... (non-strict: adjacent states differ by one
+    worker, so consecutive thresholds can tie after the floor)."""
+    ups = [p.upscale_threshold for p in table.policies]
+    return all(a >= b for a, b in zip(ups, ups[1:]))

@@ -12,6 +12,13 @@ The asymmetric hysteresis prevents oscillation under fluctuating load and
 guarantees convergence to the highest-accuracy configuration under low load.
 During a switch the executor keeps serving with the old configuration until
 the new one is ready, so no requests are dropped (§III-B).
+
+:class:`ElasticoMixController` (beyond-paper) walks the *heterogeneous mix
+ladder* instead: each rung is an assignment vector pinning one configuration
+per worker (:func:`repro.core.aqm.derive_mix_policies`), so a threshold
+crossing shifts exactly one worker to an adjacent Pareto rung rather than
+flipping the whole pool.  The threshold/hysteresis mechanics are identical —
+the mix table is duck-type compatible with the homogeneous one.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
-from .aqm import AQMPolicyTable, SwitchingPolicy
+from .aqm import AQMPolicyTable, MixPolicy, MixPolicyTable, SwitchingPolicy
 
 
 @dataclass(frozen=True)
@@ -171,3 +178,43 @@ class ElasticoController:
         self.last_downscale_s = float("-inf")
         self._low_since_s = None
         self.events.clear()
+
+
+@dataclass
+class ElasticoMixController(ElasticoController):
+    """Queue-depth driven *mix* selector for heterogeneous worker pools.
+
+    Drives a :class:`repro.core.aqm.MixPolicyTable`: the ladder indices the
+    inherited threshold logic walks are mix states (assignment vectors), so
+    each switch event moves exactly one worker to an adjacent Pareto rung —
+    ``[slow,slow,slow,slow] -> [slow,slow,slow,fast] -> ...`` — instead of
+    flipping every worker at once.  The event's ``from_index``/``to_index``
+    are mix-ladder indices; the runtime resolves them to assignment vectors
+    via :meth:`assignment_for` (the engine repins the pool, the simulator
+    repins its server bank).  Thresholds, asymmetric hysteresis, and the
+    ``aggressive_descent`` option behave exactly as in the homogeneous
+    controller.
+
+    Like the base controller this is pure decision logic: not thread-safe,
+    time injected, caller serializes ``observe``.
+    """
+
+    table: MixPolicyTable
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.table, MixPolicyTable):
+            raise TypeError("ElasticoMixController needs a MixPolicyTable "
+                            "(see repro.core.aqm.derive_mix_policies)")
+        super().__post_init__()
+
+    @property
+    def current_mix(self) -> MixPolicy:
+        return self.table.policy(self.current_index)
+
+    @property
+    def current_assignment(self) -> Tuple[int, ...]:
+        """Config index pinned to each worker under the current mix state."""
+        return self.table.assignment(self.current_index)
+
+    def assignment_for(self, index: int) -> Tuple[int, ...]:
+        return self.table.assignment(index)

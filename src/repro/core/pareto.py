@@ -35,6 +35,20 @@ class LatencyProfile:
         if self.p95 + 1e-12 < self.mean * 0.5:
             raise ValueError("implausible profile: p95 far below mean/2")
 
+    @property
+    def scv(self) -> float:
+        """Squared coefficient of variation C_s^2 = (std / mean)^2 of the
+        measured service times — the dispersion input of the Allen-Cunneen
+        M/G/c wait approximation (:func:`repro.core.aqm.allen_cunneen_mean_wait`).
+
+        Profiles built without samples (synthetic ladders, ``samples == 0``)
+        fall back to 1.0, the exponential/M-service assumption, under which
+        Allen-Cunneen collapses exactly to Erlang-C.
+        """
+        if self.samples > 1:
+            return (self.std / self.mean) ** 2
+        return 1.0
+
 
 @dataclass(frozen=True)
 class ParetoPoint:

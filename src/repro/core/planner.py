@@ -15,7 +15,13 @@ import statistics
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .aqm import AQMPolicyTable, HysteresisSpec, derive_policies
+from .aqm import (
+    AQMPolicyTable,
+    HysteresisSpec,
+    MixPolicyTable,
+    derive_mix_policies,
+    derive_policies,
+)
 from .pareto import LatencyProfile, ParetoPoint, pareto_front, thin_front
 from .space import Config
 
@@ -63,6 +69,7 @@ class DeploymentPlan:
     table: AQMPolicyTable
     profiled: Dict[Config, LatencyProfile]
     dominated: Tuple[ParetoPoint, ...]
+    mix_table: Optional[MixPolicyTable] = None
 
     def describe(self) -> str:
         lines = [
@@ -78,6 +85,18 @@ class DeploymentPlan:
                 f"p95={p.profile.p95 * 1e3:.1f}ms N_up={pol.upscale_threshold} "
                 f"N_dn={pol.downscale_threshold}"
             )
+        if self.mix_table is not None:
+            lines.append(
+                f"  mix ladder: {self.mix_table.ladder_size} states "
+                f"(one-worker shifts, Allen-Cunneen M/G/c thresholds)"
+            )
+            for mp in self.mix_table.policies:
+                lines.append(
+                    f"    [{mp.index}] {list(mp.assignment)} "
+                    f"mu={mp.drain_rate_qps:.1f}/s scv={mp.scv:.2f} "
+                    f"acc~{mp.expected_accuracy:.3f} N_up={mp.upscale_threshold} "
+                    f"N_dn={mp.downscale_threshold}"
+                )
         return "\n".join(lines)
 
 
@@ -94,6 +113,12 @@ class Planner:
     num_servers: worker-pool size c the deployment will run with; switching
         thresholds are derived for the M/G/c drain rate (c = 1 reproduces
         the paper's single-server plan exactly).
+    heterogeneous: also derive the per-worker mix ladder
+        (:func:`repro.core.aqm.derive_mix_policies`) into
+        ``DeploymentPlan.mix_table``, feeding the Allen-Cunneen M/G/c model
+        with the service-time SCV the profiler measured per configuration.
+        Defaults to deriving mixes whenever the pool has more than one
+        worker (a c = 1 mix ladder is just the homogeneous ladder).
     """
 
     profiler: Callable[[Config, int], Sequence[float]]
@@ -102,6 +127,7 @@ class Planner:
     min_accuracy_gap: float = 0.01
     hysteresis: HysteresisSpec = field(default_factory=HysteresisSpec)
     num_servers: int = 1
+    heterogeneous: Optional[bool] = None
 
     def plan(
         self,
@@ -130,9 +156,24 @@ class Planner:
             hysteresis=self.hysteresis,
             num_servers=self.num_servers,
         )
+        want_mixes = (
+            self.heterogeneous
+            if self.heterogeneous is not None
+            else self.num_servers > 1
+        )
+        mix_table: Optional[MixPolicyTable] = None
+        if want_mixes:
+            mix_table = derive_mix_policies(
+                front,
+                slo_p95_s=slo_p95_s,
+                slack_buffer_s=self.slack_buffer_s,
+                hysteresis=self.hysteresis,
+                num_servers=self.num_servers,
+            )
         return DeploymentPlan(
             front=tuple(front),
             table=table,
             profiled=profiled,
             dominated=dominated,
+            mix_table=mix_table,
         )

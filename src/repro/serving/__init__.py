@@ -12,17 +12,27 @@ Every layer of the runtime is parameterized by a server count ``c >= 1``:
 - :class:`WorkerPool` (``c``) / :class:`ServingEngine` (``num_workers``) —
   the real-time path: c worker threads drain one shared
   :class:`RequestQueue`, all executing through one thread-safe
-  :class:`WorkflowExecutor` so the Elastico switch flips the configuration
-  for every worker at once.  ``max_queue_depth`` adds admission control
-  (bounded buffer with drop accounting in ``EngineReport.dropped``).
+  :class:`WorkflowExecutor`.  With a homogeneous controller the Elastico
+  switch flips the executor's default configuration for every worker at
+  once; with an :class:`~repro.core.elastico.ElasticoMixController` the
+  pool instead carries a *per-worker assignment vector*
+  (``WorkerPool.set_assignment``) and each switch repins exactly one
+  worker, blending accuracy and latency across the pool.
+  ``max_queue_depth`` adds admission control (bounded buffer with drop
+  accounting in ``EngineReport.dropped``).
 - The switching thresholds come from
-  :func:`repro.core.aqm.derive_policies(..., num_servers=c)`, which scales
-  the paper's Eq. 10/13 by the pool's aggregate drain rate c / s-bar.
+  :func:`repro.core.aqm.derive_policies` (``num_servers=c``), which scales
+  the paper's Eq. 10/13 by the pool's aggregate drain rate c / s-bar;
+  heterogeneous mixes use :func:`repro.core.aqm.derive_mix_policies`, whose
+  Allen-Cunneen M/G/c wait model folds in the service-time SCV measured by
+  the profiler.
 
 ``c = 1`` is the paper-faithful default throughout and reproduces the
-original single-server (M/G/1) behavior exactly — same seeds, same results.
-Elastico always observes the *buffered* queue depth (waiting requests,
-excluding the up-to-c in service), the depth the thresholds are stated in.
+original single-server (M/G/1) behavior exactly — same seeds, same results;
+an all-same-config assignment vector likewise reproduces the homogeneous
+pool bit-for-bit.  Elastico always observes the *buffered* queue depth
+(waiting requests, excluding the up-to-c in service), the depth the
+thresholds are stated in.
 """
 
 from .engine import EngineReport, ServingEngine, replay_workload

@@ -7,17 +7,27 @@ and runs them against wall-clock time on this host:
                           |                   |
                       LoadMonitor  <----------+
                           |
-                  control thread (ElasticoController) -> executor.set_active
+                  control thread (Elastico) -> executor.set_active (homogeneous)
+                                            -> pool.set_assignment (mix)
 
 ``num_workers=1`` (the default) is the paper-faithful M/G/1 server; larger
 pools drain the same shared queue concurrently (M/G/c) with the switching
 thresholds derived for that c (pass ``num_servers`` to ``derive_policies``).
-Controller decisions are serialized behind a lock so concurrent workers
-never interleave observations, and every decision keys off the *buffered*
-queue depth — requests waiting for service, excluding the up-to-c in flight.
+The controller may be either flavor: a homogeneous
+:class:`~repro.core.elastico.ElasticoController`, whose decisions flip the
+executor's default active index for all workers at once, or a heterogeneous
+:class:`~repro.core.elastico.ElasticoMixController`, whose decisions repin
+the pool's per-worker assignment vector one worker at a time
+(``pool.set_assignment``); ``EngineReport.assignment_timeline`` records the
+mix trajectory.  Controller decisions are serialized behind a lock so
+concurrent workers never interleave observations, and every decision keys
+off the *buffered* queue depth — requests waiting for service, excluding
+the up-to-c in flight.
 
 ``max_queue_depth`` enables admission control (beyond-paper): arrivals that
-find the buffer full are dropped and surface in ``EngineReport.dropped``.
+find the buffer full are rejected at ingress and surface in
+``EngineReport.dropped`` (see that field's documentation for exact
+semantics).
 
 A deterministic-virtual-time variant is provided by
 :mod:`repro.serving.simulator`; this module is the "it actually serves"
@@ -31,7 +41,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence
 
-from ..core.elastico import ElasticoController
+from ..core.elastico import ElasticoController, ElasticoMixController
 from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
 from .monitor import LoadMonitor
 from .queue import RequestQueue
@@ -40,6 +50,24 @@ from .workload import Request
 
 @dataclass
 class EngineReport:
+    """Serving run summary.
+
+    ``dropped`` counts admission-control rejections: arrivals that found the
+    bounded buffer (``max_queue_depth``) full and were rejected at ingress —
+    they never enqueued, never executed, and have no
+    :class:`~repro.serving.executor.ExecutionRecord`.  Invariants:
+    ``total_requests == len(records) + dropped`` after a clean
+    ``drain_and_stop``, and ``dropped == 0`` whenever the queue is unbounded
+    (the paper's no-drop default — configuration switches never drop
+    requests, §III-B).  ``slo_compliance`` ignores drops (fraction of
+    *served* requests in SLO); ``goodput`` charges them (fraction of
+    *offered* load served in SLO).
+
+    ``assignment_timeline`` records ``(time_s, assignment_vector)`` repin
+    events when a mix controller drives a heterogeneous pool; empty for
+    homogeneous runs, whose ``config_timeline`` records the global switches.
+    """
+
     records: List[ExecutionRecord]
     switch_events: List
     config_timeline: List
@@ -47,6 +75,7 @@ class EngineReport:
     dropped: int = 0
     num_workers: int = 1
     served_per_worker: List[int] = field(default_factory=list)
+    assignment_timeline: List = field(default_factory=list)
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.records:
@@ -72,7 +101,11 @@ class ServingEngine:
 
     ``num_workers`` sizes the worker pool (c of the M/G/c model);
     ``max_queue_depth`` bounds the shared buffer for admission control
-    (None = unbounded, the paper's no-drop default).
+    (None = unbounded, the paper's no-drop default).  ``controller`` may be
+    a homogeneous :class:`ElasticoController` (switches the global default
+    config) or an :class:`ElasticoMixController` (repins the per-worker
+    assignment vector one worker at a time); pass None for a static run,
+    optionally with a fixed heterogeneous pinning via ``assignment``.
     """
 
     def __init__(
@@ -84,21 +117,32 @@ class ServingEngine:
         max_queue_depth: Optional[int] = None,
         control_tick_s: float = 0.05,
         clock: Callable[[], float] = time.monotonic,
+        assignment: Optional[Sequence[int]] = None,
     ) -> None:
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
+        if assignment is not None and controller is not None:
+            # reject silently-dead configurations: pinned workers never
+            # consult the default active index a homogeneous controller
+            # switches, and a mix controller repins the pool from its own
+            # ladder at start() anyway.
+            raise ValueError(
+                "assignment is for static runs (controller=None); use "
+                "ElasticoMixController for dynamic per-worker pinning")
         self.queue = RequestQueue(max_depth=max_queue_depth)
         self.monitor = LoadMonitor(clock=clock)
         self.executor = executor
         self.controller = controller
         self.pool = WorkerPool(
-            executor, self.queue, c=num_workers, on_observe=self._observe
+            executor, self.queue, c=num_workers, on_observe=self._observe,
+            assignment=assignment,
         )
         self.control_tick_s = control_tick_s
         self._clock = clock
         self._stop = threading.Event()
         self._ctrl_thread: Optional[threading.Thread] = None
         self._timeline: List = []
+        self._assignment_timeline: List = []
         self._epoch: Optional[float] = None
         # one lock serializes controller observations from all workers + the
         # control loop: ElasticoController is pure decision logic and relies
@@ -122,8 +166,15 @@ class ServingEngine:
         self.monitor.set_clock(self._now_rel)  # one time axis for all stamps
         if self.controller is not None:
             self.controller.reset()
-            self.executor.set_active(self.controller.current_index)
+            if isinstance(self.controller, ElasticoMixController):
+                vec = self.controller.current_assignment
+                self.pool.set_assignment(vec)
+                self._assignment_timeline.append((0.0, vec))
+            else:
+                self.executor.set_active(self.controller.current_index)
             self._timeline.append((0.0, self.controller.current_index))
+        elif self.pool.assignment() is not None:
+            self._assignment_timeline.append((0.0, self.pool.assignment()))
         self.pool.start()
         self._ctrl_thread = threading.Thread(
             target=self._control_loop, name="compass-elastico", daemon=True
@@ -165,6 +216,7 @@ class ServingEngine:
             dropped=dropped,
             num_workers=self.pool.c,
             served_per_worker=self.pool.served_per_worker(),
+            assignment_timeline=list(self._assignment_timeline),
         )
 
     # -- loops ---------------------------------------------------------------
@@ -184,10 +236,16 @@ class ServingEngine:
         with self._observe_lock:
             depth = self.queue.depth()  # buffered requests only (see simulator)
             now = self._now_rel()
-            self.monitor.snapshot(depth, self.executor.in_flight(), now)
+            self.monitor.snapshot(depth, self.executor.in_flight(), now,
+                                  assignment=self.pool.assignment())
             ev = self.controller.observe(depth, now)
             if ev is not None:
-                self.executor.set_active(ev.to_index)
+                if isinstance(self.controller, ElasticoMixController):
+                    vec = self.controller.assignment_for(ev.to_index)
+                    self.pool.set_assignment(vec)
+                    self._assignment_timeline.append((now, vec))
+                else:
+                    self.executor.set_active(ev.to_index)
                 self._timeline.append((now, ev.to_index))
 
 

@@ -1,4 +1,4 @@
-"""Workflow executor + worker pool: process requests with the active config.
+"""Workflow executor + worker pool: configuration-resident request execution.
 
 The executor owns the mapping config -> executable workflow.  All Pareto
 configurations are kept *resident* (the paper pre-loads all configs in GPU
@@ -7,7 +7,13 @@ switch only flips an index — the paper's <10 ms "pipeline rerouting".
 
 :class:`WorkerPool` generalizes the runtime from the paper's single worker
 (M/G/1) to ``c`` worker threads draining one shared :class:`RequestQueue`
-(M/G/c).  ``c = 1`` reproduces the seed's single-worker engine behavior.
+(M/G/c), and from one globally active configuration to an optional
+*per-worker assignment vector*: each worker can be pinned to its own Pareto
+rung (``set_assignment``), so the pool serves a heterogeneous mix that
+blends accuracy and latency instead of hard-switching every worker at once.
+With no assignment set (the default) all workers follow the executor's
+single active index, which reproduces the homogeneous engine behavior
+exactly; ``c = 1`` reproduces the seed's single-worker engine.
 All record collection goes through the executor's lock, so a pool of any
 size yields one consistent, thread-safe record list.
 """
@@ -17,7 +23,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.space import Config
 from .queue import RequestQueue
@@ -45,11 +51,17 @@ class WorkflowExecutor:
     """Configuration-resident executor shared by every worker of the pool.
 
     ``configs`` is the Pareto ladder (index 0 = fastest); ``workflow_fn`` runs
-    one request under a given configuration.  ``set_active`` is thread-safe
-    and takes effect for the *next* request — in-flight requests always
-    complete under the configuration they started with (no drops, §III-B).
-    ``execute`` may be called concurrently from any number of workers;
-    record collection and in-flight accounting are lock-protected.
+    one request under a given configuration.  The executor keeps a *default*
+    active index for homogeneous operation, but a caller may override the
+    configuration per call (``execute(..., config_index=w_pin)``) — that is
+    how :class:`WorkerPool` executes each worker under its pinned rung when
+    an assignment vector is set.  ``set_active`` is thread-safe and changes
+    only the default: it takes effect for the *next* un-pinned request —
+    in-flight requests always complete under the configuration they started
+    with (no drops, §III-B), and workers pinned via the pool's assignment
+    vector are unaffected.  ``execute`` may be called concurrently from any
+    number of workers; record collection and in-flight accounting are
+    lock-protected.
     """
 
     def __init__(self, configs: Sequence[Config], workflow_fn: WorkflowFn,
@@ -73,6 +85,10 @@ class WorkflowExecutor:
             return self._active
 
     def set_active(self, index: int) -> None:
+        """Set the *default* configuration for workers without a per-worker
+        pin.  Homogeneous Elastico drives this hook; the heterogeneous path
+        repins workers through :meth:`WorkerPool.set_assignment` instead and
+        leaves the default untouched."""
         if not 0 <= index < len(self._configs):
             raise IndexError(f"config index {index} out of range")
         with self._lock:
@@ -92,9 +108,14 @@ class WorkflowExecutor:
         self._clock = clock
 
     def execute(self, request_id: int, arrival_s: float, payload: Any,
-                worker_id: int = 0) -> ExecutionRecord:
+                worker_id: int = 0,
+                config_index: Optional[int] = None) -> ExecutionRecord:
+        """Run one request.  ``config_index`` overrides the default active
+        configuration (per-worker pinning); None = use the active index."""
+        if config_index is not None and not 0 <= config_index < len(self._configs):
+            raise IndexError(f"config index {config_index} out of range")
         with self._lock:
-            idx = self._active
+            idx = self._active if config_index is None else config_index
             self._in_flight += 1
         try:
             start = self._clock()
@@ -122,9 +143,18 @@ class WorkerPool:
 
     Each worker loops: pop a request, fire the observe hook (the
     arrival-to-service boundary is where Elastico decides), execute under
-    the currently active configuration, fire the hook again.  The hook is
-    supplied by the engine and must be safe to call concurrently (the
-    engine serializes controller access internally).
+    its *pinned* configuration if an assignment vector is set — else under
+    the executor's default active configuration — then fire the hook again.
+    The hook is supplied by the engine and must be safe to call concurrently
+    (the engine serializes controller access internally).
+
+    ``set_assignment([k_0, ..., k_{c-1}])`` pins worker w to Pareto rung
+    k_w, turning the pool heterogeneous: Elastico's mix controller shifts
+    this vector one worker at a time instead of flipping a global index.
+    ``set_assignment(None)`` (the default state) restores homogeneous
+    operation.  The swap is atomic (one tuple replacement under a lock) and
+    takes effect at each worker's *next* request — in-flight requests finish
+    under the configuration they started with (no drops, §III-B).
 
     ``c = 1`` is the paper-faithful single-worker server; the pool then
     behaves exactly like the seed's single ``compass-worker`` thread.
@@ -139,6 +169,7 @@ class WorkerPool:
         on_observe: Optional[Callable[[], None]] = None,
         poll_timeout_s: float = 0.05,
         name: str = "compass-worker",
+        assignment: Optional[Sequence[int]] = None,
     ) -> None:
         if c < 1:
             raise ValueError("worker pool needs c >= 1 workers")
@@ -151,10 +182,42 @@ class WorkerPool:
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._served_per_worker = [0] * c
+        self._assignment_lock = threading.Lock()
+        self._assignment: Optional[Tuple[int, ...]] = None
+        if assignment is not None:
+            self.set_assignment(assignment)
 
     @property
     def num_workers(self) -> int:
         return self.c
+
+    def assignment(self) -> Optional[Tuple[int, ...]]:
+        """Current per-worker config pinning; None = homogeneous (all workers
+        follow the executor's active index)."""
+        with self._assignment_lock:
+            return self._assignment
+
+    def set_assignment(self, assignment: Optional[Sequence[int]]) -> None:
+        """Atomically repin every worker.  ``assignment[w]`` is the config
+        index worker w serves its next request under; None clears pinning."""
+        if assignment is None:
+            with self._assignment_lock:
+                self._assignment = None
+            return
+        vec = tuple(int(a) for a in assignment)
+        if len(vec) != self.c:
+            raise ValueError(
+                f"assignment length {len(vec)} != pool size {self.c}")
+        n = self.executor.num_configs
+        if any(not 0 <= a < n for a in vec):
+            raise IndexError(f"assignment {vec} has config index out of range")
+        with self._assignment_lock:
+            self._assignment = vec
+
+    def config_for_worker(self, worker_id: int) -> Optional[int]:
+        """Pinned config index for a worker, or None when homogeneous."""
+        with self._assignment_lock:
+            return None if self._assignment is None else self._assignment[worker_id]
 
     def served_per_worker(self) -> List[int]:
         """Requests completed by each worker (a load-balance observability
@@ -194,7 +257,8 @@ class WorkerPool:
             if self._on_observe is not None:
                 self._on_observe()   # arrival-to-service boundary decision
             self.executor.execute(req.request_id, req.arrival_s, req.payload,
-                                  worker_id=worker_id)
+                                  worker_id=worker_id,
+                                  config_index=self.config_for_worker(worker_id))
             self._served_per_worker[worker_id] += 1
             if self._on_observe is not None:
                 self._on_observe()

@@ -20,10 +20,16 @@ from typing import Callable, List, Optional, Tuple
 
 @dataclass
 class LoadSnapshot:
+    """One control-loop observation.  ``assignment`` is the per-worker config
+    pinning in effect when the snapshot was taken (None for homogeneous
+    pools) — it lets post-hoc analysis correlate queue depth with the mix
+    the heterogeneous controller had deployed."""
+
     time_s: float
     queue_depth: int
     arrival_rate_qps: float
     in_flight: int
+    assignment: Optional[Tuple[int, ...]] = None
 
 
 class LoadMonitor:
@@ -92,13 +98,15 @@ class LoadMonitor:
             return self._drops
 
     def snapshot(self, queue_depth: int, in_flight: int,
-                 now_s: Optional[float] = None) -> LoadSnapshot:
+                 now_s: Optional[float] = None,
+                 assignment: Optional[Tuple[int, ...]] = None) -> LoadSnapshot:
         now = self._clock() if now_s is None else now_s
         snap = LoadSnapshot(
             time_s=now,
             queue_depth=queue_depth,
             arrival_rate_qps=self.arrival_rate(now),
             in_flight=in_flight,
+            assignment=assignment,
         )
         with self._lock:
             self._history.append(snap)

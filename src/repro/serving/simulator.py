@@ -12,7 +12,11 @@ bit-for-bit) with:
     up-to-c requests in service) at every event and at periodic control
     ticks,
   - configuration switches that take effect for subsequent requests while
-    in-flight requests finish under the old configuration (no drops, §III-B).
+    in-flight requests finish under the old configuration (no drops, §III-B),
+  - optional per-server config pinning (heterogeneous pools): a static
+    ``assignment`` vector or a dynamic
+    :class:`repro.core.elastico.ElasticoMixController` that repins one
+    server per switch event.
 
 Requests are dispatched to the lowest-numbered free server, so per-server
 utilization (``SimulationResult.per_server_busy_s``) is deterministic too.
@@ -28,7 +32,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..core.elastico import ElasticoController
+from ..core.elastico import ElasticoController, ElasticoMixController
 from .workload import RateFn, generate_arrivals
 
 ServiceSampler = Callable[[int, random.Random], float]
@@ -107,11 +111,15 @@ class CompletedRequest:
 class SimulationResult:
     completed: List[CompletedRequest]
     switch_events: List                       # List[SwitchEvent]
-    config_timeline: List[Tuple[float, int]]  # (time, active index)
+    config_timeline: List[Tuple[float, int]]  # (time, active or mix index)
     queue_depth_samples: List[Tuple[float, int]]
     duration_s: float
     num_servers: int = 1
     per_server_busy_s: List[float] = field(default_factory=lambda: [0.0])
+    # (time, per-server config pinning) repin events for heterogeneous runs;
+    # empty when the pool ran homogeneously.
+    assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = field(
+        default_factory=list)
 
     def per_server_utilization(self) -> List[float]:
         """Busy fraction of each server over the horizon (index = server id).
@@ -165,6 +173,16 @@ class ServingSimulator:
     ``num_servers`` is the server count c; the default 1 reproduces the
     paper's single-server results exactly (same seeds -> same completions,
     the pool draws service times in the same order).
+
+    Heterogeneous pools (beyond-paper): ``assignment`` statically pins
+    server i to config ``assignment[i]``, and passing an
+    :class:`ElasticoMixController` as ``controller`` makes the pinning
+    dynamic — each switch event repins exactly one server
+    (``assignment_timeline`` records the trajectory).  An all-same
+    ``assignment`` vector takes the same code path as the homogeneous
+    simulator and reproduces ``static_index`` runs exactly (same seeds ->
+    same completions: service times are drawn per dispatch in the same
+    order).
     """
 
     service_sampler: ServiceSampler
@@ -174,6 +192,7 @@ class ServingSimulator:
     switch_latency_s: float = 0.010
     seed: int = 0
     num_servers: int = 1
+    assignment: Optional[Sequence[int]] = None
 
     def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
         if self.num_servers < 1:
@@ -183,6 +202,34 @@ class ServingSimulator:
         if ctrl is not None:
             ctrl.reset()
         active = ctrl.current_index if ctrl is not None else self.static_index
+        # per-server config pinning: a mix controller drives it dynamically,
+        # a bare `assignment` pins it statically, None = homogeneous (all
+        # servers follow `active`).
+        mix_ctrl = ctrl if isinstance(ctrl, ElasticoMixController) else None
+        if self.assignment is not None and ctrl is not None:
+            # a static pinning under any controller would be silently dead:
+            # a mix controller repins from its own ladder immediately, and a
+            # homogeneous controller's switches would never reach pinned
+            # servers while still being recorded as events.
+            raise ValueError(
+                "assignment is for static runs (controller=None); use "
+                "ElasticoMixController for dynamic per-server pinning")
+        assign: Optional[List[int]] = None
+        if mix_ctrl is not None:
+            assign = list(mix_ctrl.current_assignment)
+        elif self.assignment is not None:
+            assign = [int(a) for a in self.assignment]
+        if assign is not None:
+            if len(assign) != self.num_servers:
+                raise ValueError(
+                    f"assignment length {len(assign)} != num_servers "
+                    f"{self.num_servers}")
+            for a in assign:
+                if a < 0:
+                    raise IndexError(
+                        f"assignment {assign} has negative config index")
+        assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = (
+            [(0.0, tuple(assign))] if assign is not None else [])
         switch_ready_s = 0.0  # time the latest switch completes
 
         # event heap: (time, order, kind, payload)
@@ -215,7 +262,7 @@ class ServingSimulator:
             return len(waiting)
 
         def observe(now: float) -> None:
-            nonlocal active, switch_ready_s
+            nonlocal active, switch_ready_s, assign
             if ctrl is None:
                 return
             ev = ctrl.observe(queue_depth(), now)
@@ -224,17 +271,23 @@ class ServingSimulator:
                 # latency; the executor keeps draining with the old one.
                 switch_ready_s = now + self.switch_latency_s
                 active = ev.to_index
+                if mix_ctrl is not None:
+                    assign = list(mix_ctrl.assignment_for(ev.to_index))
+                    assignment_timeline.append((now, tuple(assign)))
                 timeline.append((now, active))
 
         def start_next(now: float) -> None:
             # dispatch as many buffered requests as there are free servers;
-            # lowest-numbered server first keeps the schedule deterministic.
+            # lowest-numbered server first keeps the schedule deterministic
+            # (and, under a heterogeneous pinning sorted fastest-first, lets
+            # the faster servers absorb the larger share of the load).
             nonlocal order
             while free_servers and waiting:
                 server = heapq.heappop(free_servers)
                 rid = waiting.pop(0)
                 start = max(now, switch_ready_s) if now < switch_ready_s else now
-                svc = self.service_sampler(active, rng)
+                cfg = active if assign is None else assign[server]
+                svc = self.service_sampler(cfg, rng)
                 comp = start + svc
                 busy_s[server] += comp - start
                 completed.append(CompletedRequest(
@@ -242,7 +295,7 @@ class ServingSimulator:
                     arrival_s=arrival_time[rid],
                     start_s=start,
                     completion_s=comp,
-                    config_index=active,
+                    config_index=cfg,
                     server_id=server,
                 ))
                 heapq.heappush(events, (comp, order, "completion", server))
@@ -273,4 +326,5 @@ class ServingSimulator:
             duration_s=duration_s,
             num_servers=self.num_servers,
             per_server_busy_s=busy_s,
+            assignment_timeline=assignment_timeline,
         )

@@ -1,0 +1,7 @@
+"""Developer tooling that ships with the repro (not part of the paper).
+
+- :mod:`repro.tools.docscheck` — README/docs cross-reference checker: fails
+  when documentation names a module, function, file, or CLI flag that no
+  longer exists.  Wired into tier-1 via ``tests/test_docs.py`` and runnable
+  standalone through ``python -m benchmarks.run --check-docs``.
+"""

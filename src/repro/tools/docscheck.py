@@ -1,0 +1,156 @@
+"""Docs cross-reference checker: keep README/docs honest about the code.
+
+Documentation rots silently: a refactor renames ``derive_policies`` or moves
+a file and every prose mention becomes a lie.  This module extracts
+inline-code spans from ``README.md`` and ``docs/*.md`` and verifies each
+reference class against the working tree:
+
+- **dotted names** (``repro.core.aqm.derive_mix_policies``): the longest
+  importable module prefix is imported and the remainder resolved with
+  ``getattr`` — so renamed/removed functions, classes, attributes, and
+  modules all fail;
+- **repo paths** (``src/repro/core/aqm.py``, ``docs/queueing.md``): must
+  exist relative to the repo root;
+- **CLI flags** (``--check-docs``): the literal flag string must appear in
+  some ``*.py`` under ``benchmarks/``, ``examples/``, or ``src/``.
+
+Fenced code blocks are skipped (shell snippets legitimately mention
+transient names); only inline backtick spans are checked.  Anything that
+matches none of the three reference classes is ignored, so prose can use
+backticks for emphasis (``c = 1``, ``N_k(up)``) freely.
+
+Run via ``tests/test_docs.py`` (tier-1) or
+``PYTHONPATH=src python -m benchmarks.run --check-docs``.
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Tuple
+
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+_INLINE_RE = re.compile(r"`([^`\n]+)`")
+_DOTTED_RE = re.compile(r"^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+_PATH_RE = re.compile(r"^[\w.\-/]+\.(py|md|ini|txt|json)$")
+_FLAG_RE = re.compile(r"^--[a-z][a-z0-9-]*$")
+
+
+def repo_root() -> Path:
+    """The repository root, three levels up from this file
+    (src/repro/tools/docscheck.py)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def doc_files(root: Optional[Path] = None) -> List[Path]:
+    root = root or repo_root()
+    out = []
+    readme = root / "README.md"
+    if readme.exists():
+        out.append(readme)
+    docs = root / "docs"
+    if docs.is_dir():
+        out.extend(sorted(docs.glob("*.md")))
+    return out
+
+
+def extract_references(text: str) -> List[str]:
+    """Inline-code spans outside fenced blocks, deduplicated in order."""
+    stripped = _FENCE_RE.sub("", text)
+    seen = []
+    for m in _INLINE_RE.finditer(stripped):
+        tok = m.group(1).strip()
+        if tok and tok not in seen:
+            seen.append(tok)
+    return seen
+
+
+def resolve_dotted(name: str) -> Optional[str]:
+    """Resolve ``repro.a.b.attr`` by importing the longest module prefix and
+    getattr-ing the rest.  Returns an error string or None when it resolves."""
+    parts = name.split(".")
+    module = None
+    split = len(parts)
+    while split > 0:
+        try:
+            module = importlib.import_module(".".join(parts[:split]))
+            break
+        except ImportError:
+            split -= 1
+    if module is None:
+        return f"cannot import any prefix of {name!r}"
+    obj = module
+    for attr in parts[split:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return (f"{name!r}: {'.'.join(parts[:split])} has no attribute "
+                    f"{attr!r}")
+    return None
+
+
+def _flag_exists(flag: str, root: Path) -> bool:
+    for sub in ("benchmarks", "examples", "src"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for py in base.rglob("*.py"):
+            try:
+                if flag in py.read_text(errors="ignore"):
+                    return True
+            except OSError:
+                continue
+    return False
+
+
+def check_text(text: str, *, source: str = "<doc>",
+               root: Optional[Path] = None) -> List[str]:
+    """Check one document's references; returns human-readable problems."""
+    root = root or repo_root()
+    problems: List[str] = []
+    for tok in extract_references(text):
+        if _DOTTED_RE.match(tok):
+            err = resolve_dotted(tok)
+            if err is not None:
+                problems.append(f"{source}: stale code reference {err}")
+        elif _PATH_RE.match(tok) and "/" in tok:
+            rel = tok.lstrip("./")
+            if not (root / rel).exists():
+                problems.append(f"{source}: path `{tok}` does not exist")
+        elif _FLAG_RE.match(tok):
+            if not _flag_exists(tok, root):
+                problems.append(
+                    f"{source}: CLI flag `{tok}` not found in any "
+                    "benchmarks/examples/src python file")
+    return problems
+
+
+def check_docs(root: Optional[Path] = None) -> List[str]:
+    """Check README.md and docs/*.md; returns all problems found."""
+    root = root or repo_root()
+    files = doc_files(root)
+    if not files:
+        return ["no README.md or docs/*.md found to check"]
+    problems: List[str] = []
+    for f in files:
+        problems.extend(
+            check_text(f.read_text(), source=str(f.relative_to(root)),
+                       root=root))
+    return problems
+
+
+def main() -> int:
+    problems = check_docs()
+    for p in problems:
+        print(f"docscheck: {p}")
+    if problems:
+        print(f"docscheck: {len(problems)} stale reference(s)")
+        return 1
+    n = len(doc_files())
+    print(f"docscheck: OK ({n} documents checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

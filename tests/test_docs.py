@@ -1,0 +1,72 @@
+"""Tier-1 docs gate: README/docs must exist and reference only live code.
+
+The checker (repro.tools.docscheck, also exposed as
+`python -m benchmarks.run --check-docs`) resolves every inline-code
+reference in README.md and docs/*.md — dotted repro.* names via
+import+getattr, repo paths via existence, CLI flags via grep — so a rename
+or removal that orphans the documentation fails tier-1."""
+
+from pathlib import Path
+
+import pytest
+
+from repro.tools.docscheck import (
+    check_docs,
+    check_text,
+    doc_files,
+    extract_references,
+    repo_root,
+    resolve_dotted,
+)
+
+ROOT = repo_root()
+
+
+def test_repo_root_is_the_repo():
+    assert (ROOT / "src" / "repro").is_dir()
+    assert (ROOT / "pytest.ini").exists()
+
+
+def test_required_documents_exist():
+    names = {str(p.relative_to(ROOT)) for p in doc_files()}
+    assert "README.md" in names
+    assert "docs/architecture.md" in names
+    assert "docs/queueing.md" in names
+
+
+def test_extract_skips_fenced_blocks():
+    text = (
+        "Use `repro.core.aqm` here.\n"
+        "```bash\npython -m `not.a.ref`\n```\n"
+        "And `docs/queueing.md` inline.\n"
+    )
+    refs = extract_references(text)
+    assert "repro.core.aqm" in refs
+    assert "docs/queueing.md" in refs
+    assert "not.a.ref" not in refs
+
+
+def test_resolve_dotted_live_and_stale():
+    assert resolve_dotted("repro.core.aqm.derive_mix_policies") is None
+    assert resolve_dotted("repro.serving.engine.ServingEngine") is None
+    assert resolve_dotted("repro.core.aqm.no_such_function") is not None
+    assert resolve_dotted("repro.no_such_module.thing") is not None
+
+
+def test_check_text_flags_stale_references():
+    bad = (
+        "See `repro.core.aqm.totally_gone` and `src/repro/nope.py` "
+        "plus `--no-such-flag-anywhere`."
+    )
+    problems = check_text(bad, source="synthetic")
+    assert len(problems) == 3
+
+
+def test_check_text_ignores_plain_prose_backticks():
+    ok = "Set `c = 1` and watch `N_k(up)`; run `pytest -x` as usual."
+    assert check_text(ok, source="synthetic") == []
+
+
+def test_repo_docs_have_no_stale_references():
+    problems = check_docs()
+    assert not problems, "\n".join(problems)

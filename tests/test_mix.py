@@ -1,0 +1,397 @@
+"""Heterogeneous worker pools: Allen-Cunneen M/G/c, mix-policy derivation,
+per-worker config pinning in the simulator/engine, and the mix controller."""
+
+import math
+import time
+
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    allen_cunneen_mean_wait,
+    derive_mix_policies,
+    derive_policies,
+    erlang_c_mean_wait,
+    mix_aggregates,
+    mix_ladder,
+    mix_ladder_is_monotone,
+    mix_mean_wait,
+)
+from repro.core.elastico import ElasticoController, ElasticoMixController
+from repro.core.planner import Planner
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import WorkerPool, WorkflowExecutor
+from repro.serving.queue import RequestQueue
+from repro.serving.simulator import (
+    ServingSimulator,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    Request,
+    constant_rate,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def mix_table_for(c, scv=None, **hyst):
+    return derive_mix_policies(
+        ladder_front(), slo_p95_s=1.0, hysteresis=HysteresisSpec(**hyst),
+        num_servers=c, scv=scv,
+    )
+
+
+# -- Allen-Cunneen -------------------------------------------------------------
+
+
+@given(st.integers(1, 8), st.floats(0.05, 0.95))
+@settings(max_examples=40, deadline=None)
+def test_allen_cunneen_collapses_to_erlang_c_at_scv_one(c, rho):
+    """SCV = 1 (exponential service) must reproduce the M/M/c Erlang-C wait
+    bit-for-bit: Allen-Cunneen's variability factor is exactly 1 there."""
+    s = 0.2
+    lam = rho * c / s
+    assert allen_cunneen_mean_wait(c, lam, s, scv_service=1.0) == \
+        erlang_c_mean_wait(c, lam, s)
+
+
+def test_allen_cunneen_m_g_1_is_pollaczek_khinchine():
+    """c=1, Poisson arrivals: E[W] = rho*s/(1-rho) * (1+C_s^2)/2 — the exact
+    P-K mean wait, for any SCV."""
+    s, rho = 0.2, 0.6
+    lam = rho / s
+    for scv in (0.0, 0.5, 1.0, 2.5, 4.0):
+        want = rho * s / (1.0 - rho) * 0.5 * (1.0 + scv)
+        got = allen_cunneen_mean_wait(1, lam, s, scv_service=scv)
+        assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_allen_cunneen_variability_scaling_and_saturation():
+    base = erlang_c_mean_wait(3, 10.0, 0.2)
+    assert allen_cunneen_mean_wait(3, 10.0, 0.2, scv_service=4.0) == \
+        pytest.approx(2.5 * base, rel=1e-12)
+    assert allen_cunneen_mean_wait(3, 10.0, 0.2, scv_service=0.0) == \
+        pytest.approx(0.5 * base, rel=1e-12)      # deterministic service
+    assert allen_cunneen_mean_wait(2, 100.0, 0.2, scv_service=3.0) == \
+        float("inf")
+    with pytest.raises(ValueError):
+        allen_cunneen_mean_wait(2, 1.0, 0.2, scv_service=-1.0)
+
+
+# -- mix ladder & aggregates ---------------------------------------------------
+
+
+@given(st.integers(1, 4), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_mix_ladder_shape(n, c):
+    states = mix_ladder(n, c)
+    assert len(states) == (n - 1) * c + 1
+    assert states[0] == tuple([0] * c)
+    assert states[-1] == tuple([n - 1] * c)
+    for u, v in zip(states, states[1:]):
+        assert sum(1 for a, b in zip(u, v) if a != b) == 1  # one-worker shift
+        assert sum(v) == sum(u) + 1                          # one rung slower
+        assert tuple(sorted(u)) == u                         # ascending
+
+
+def test_mix_aggregates_homogeneous_and_blend():
+    front = ladder_front()
+    mu, s_eff, scv, p95, acc = mix_aggregates(front, (0, 0, 0, 0))
+    assert mu == pytest.approx(4.0 / MEANS[0])
+    assert s_eff == pytest.approx(MEANS[0])
+    assert scv == pytest.approx(1.0)      # synthetic profiles: exponential
+    assert p95 == P95S[0]
+    assert acc == pytest.approx(ACCS[0])
+
+    mu, s_eff, scv, p95, acc = mix_aggregates(front, (0, 0, 1, 1))
+    assert mu == pytest.approx(2.0 / MEANS[0] + 2.0 / MEANS[1])
+    assert s_eff == pytest.approx(4.0 / mu)
+    assert p95 == P95S[1]                 # worst pinned tail
+    share_fast = 2.0 * (1.0 / MEANS[0]) / mu   # two fast workers' drain share
+    assert acc == pytest.approx(share_fast * ACCS[0] + (1 - share_fast) * ACCS[1])
+    assert scv > 1.0                      # mixture of unequal means: extra spread
+
+
+# -- mix thresholds ------------------------------------------------------------
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_all_same_mix_thresholds_match_homogeneous(c):
+    """Collapse property: every all-same-config mix state has the exact
+    homogeneous Eq. 10 upscale threshold (SCV=1 -> phi=1, mu_agg=c/s)."""
+    hom = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=c)
+    mix = mix_table_for(c)
+    for k, pol in enumerate(hom.policies):
+        state = next(p for p in mix.policies
+                     if set(p.assignment) == {k})
+        assert state.upscale_threshold == pol.upscale_threshold
+
+
+def test_mix_ladder_monotone_thresholds_and_waits():
+    """Adding one fast worker never lowers the tolerable depth and never
+    raises the predicted stationary wait."""
+    table = mix_table_for(4)
+    assert mix_ladder_is_monotone(table)
+    lam = 6.0  # stable even for the all-accurate mix (mu = 8.9/s)
+    waits = [mix_mean_wait(p, lam) for p in table.policies]
+    assert all(a <= b + 1e-12 for a, b in zip(waits, waits[1:]))
+    accs = [p.expected_accuracy for p in table.policies]
+    assert all(a < b for a, b in zip(accs, accs[1:]))  # slower = more accurate
+
+
+def test_mix_ladder_monotone_with_heterogeneous_scv():
+    """Monotonicity survives per-config SCVs measured off-profile (heavier
+    fast-config tails)."""
+    table = mix_table_for(4, scv=[2.0, 1.5, 1.2])
+    assert mix_ladder_is_monotone(table)
+
+
+def test_mix_table_c1_equals_homogeneous_ladder():
+    """One worker: the mix ladder degenerates to the plain Pareto ladder."""
+    hom = derive_policies(ladder_front(), slo_p95_s=1.0)
+    mix = mix_table_for(1)
+    assert mix.ladder_size == hom.ladder_size
+    for mp, hp in zip(mix.policies, hom.policies):
+        assert mp.assignment == (hp.index,)
+        assert mp.upscale_threshold == hp.upscale_threshold
+
+
+def test_derive_mix_policies_validation():
+    with pytest.raises(ValueError):
+        derive_mix_policies(ladder_front(), slo_p95_s=0.0, num_servers=2)
+    with pytest.raises(ValueError):
+        derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=0)
+    with pytest.raises(ValueError):
+        derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=2,
+                            scv=[1.0])  # wrong length
+    # SLO below every p95: empty ladder, everything excluded
+    empty = derive_mix_policies(ladder_front(), slo_p95_s=0.05, num_servers=2)
+    assert empty.ladder_size == 0
+    assert len(empty.excluded) == 3
+
+
+# -- simulator: assignment vectors ---------------------------------------------
+
+
+def test_all_same_assignment_reproduces_homogeneous_golden():
+    """Golden equivalence: a static all-same assignment vector must take the
+    same code path as the homogeneous simulator — identical completions,
+    busy time, and depth samples for every rung (PR 1 behavior preserved)."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=2.5,
+                                   warmup_s=20.0), 120.0, seed=1)
+    for k in range(3):
+        hom = ServingSimulator(sampler, static_index=k, seed=0,
+                               num_servers=4).run(arr, 120.0)
+        het = ServingSimulator(sampler, assignment=[k] * 4, seed=0,
+                               num_servers=4).run(arr, 120.0)
+        assert het.completed == hom.completed
+        assert het.per_server_busy_s == hom.per_server_busy_s
+        assert het.queue_depth_samples == hom.queue_depth_samples
+        assert het.assignment_timeline == [(0.0, (k,) * 4)]
+        assert hom.assignment_timeline == []
+
+
+def test_static_heterogeneous_mix_blends_configs():
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(constant_rate(12.0), 60.0, seed=3)
+    out = ServingSimulator(sampler, assignment=[0, 0, 1, 2], seed=0,
+                           num_servers=4).run(arr, 60.0)
+    assert len(out.completed) == len(arr)
+    served_cfgs = {r.config_index for r in out.completed}
+    assert served_cfgs == {0, 1, 2}
+    # per-server pinning respected: server i always serves assignment[i]
+    pin = [0, 0, 1, 2]
+    for r in out.completed:
+        assert r.config_index == pin[r.server_id]
+    acc = out.mean_accuracy(ACCS)
+    assert ACCS[0] < acc < ACCS[2]
+
+
+def test_simulator_rejects_bad_assignment_length():
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    sim = ServingSimulator(sampler, assignment=[0, 1], num_servers=4)
+    with pytest.raises(ValueError):
+        sim.run([0.1, 0.2], 1.0)
+
+
+def test_simulator_rejects_negative_assignment_index():
+    """Negative indices would silently alias Python's tail indexing inside
+    the sampler and corrupt config_index accounting — must raise up front."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    sim = ServingSimulator(sampler, assignment=[-1, 0, 0, 0], num_servers=4)
+    with pytest.raises(IndexError):
+        sim.run([0.1, 0.2], 1.0)
+
+
+def test_simulator_rejects_assignment_with_controller():
+    """A static pinning under any controller would be silently dead (the
+    controller's switches could never reach pinned servers) — must raise."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    hom = ElasticoController(derive_policies(ladder_front(), slo_p95_s=1.0,
+                                             num_servers=4))
+    sim = ServingSimulator(sampler, controller=hom, assignment=[0, 0, 1, 2],
+                           num_servers=4)
+    with pytest.raises(ValueError, match="static runs"):
+        sim.run([0.1], 1.0)
+    mix = ElasticoMixController(mix_table_for(4))
+    sim = ServingSimulator(sampler, controller=mix, assignment=[0, 0, 1, 2],
+                           num_servers=4)
+    with pytest.raises(ValueError, match="static runs"):
+        sim.run([0.1], 1.0)
+
+
+def test_engine_rejects_assignment_with_controller():
+    executor = WorkflowExecutor(configs=[("cfg", i) for i in range(3)],
+                                workflow_fn=sleep_workflow)
+    hom = ElasticoController(derive_policies(ladder_front(), slo_p95_s=1.0,
+                                             num_servers=2))
+    with pytest.raises(ValueError, match="static runs"):
+        ServingEngine(executor, controller=hom, num_workers=2,
+                      assignment=[0, 1])
+
+
+def test_mix_controller_shifts_one_worker_at_a_time():
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=2.5,
+                                   warmup_s=20.0), 120.0, seed=1)
+    table = mix_table_for(4, downscale_cooldown_s=5.0)
+    out = ServingSimulator(sampler, controller=ElasticoMixController(table),
+                           seed=0, num_servers=4).run(arr, 120.0)
+    assert len(out.completed) == len(arr)
+    tl = out.assignment_timeline
+    assert tl[0] == (0.0, (2, 2, 2, 2))   # starts all-accurate
+    assert len(tl) > 1                    # overload forces repinning
+    for (_, u), (_, v) in zip(tl, tl[1:]):
+        assert sum(1 for a, b in zip(u, v) if a != b) == 1
+    # under sustained overload the mix must stay SLO-compliant while beating
+    # the all-fast accuracy floor
+    assert out.slo_compliance(1.0) > 0.95
+    assert out.mean_accuracy(ACCS) > ACCS[0]
+
+
+def test_mix_controller_requires_mix_table():
+    hom = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=4)
+    with pytest.raises(TypeError):
+        ElasticoMixController(hom)
+
+
+# -- planner integration -------------------------------------------------------
+
+
+def test_planner_derives_mix_table_for_pools(rag_plan):
+    from conftest import make_profiler
+    from repro.workflows.surrogate import RagSurrogate
+
+    res, _ = rag_plan
+    plan = Planner(profiler=make_profiler(RagSurrogate(seed=0)),
+                   num_servers=4).plan(res.feasible, slo_p95_s=1.0)
+    assert plan.mix_table is not None
+    assert plan.mix_table.num_servers == 4
+    expect = (plan.table.ladder_size - 1) * 4 + 1
+    assert plan.mix_table.ladder_size == expect
+    # SCVs come from the measured profiles, not the exponential fallback
+    assert any(abs(p.scv - 1.0) > 1e-6 for p in plan.mix_table.policies)
+    assert "mix ladder" in plan.describe()
+    # default: no mix table for single-server plans
+    single = Planner(profiler=make_profiler(RagSurrogate(seed=0))).plan(
+        res.feasible, slo_p95_s=1.0)
+    assert single.mix_table is None
+
+
+# -- real-time worker pool pinning ---------------------------------------------
+
+
+def sleep_workflow(config, payload):
+    time.sleep(0.002)
+    return payload
+
+
+def test_worker_pool_assignment_pins_configs():
+    q = RequestQueue()
+    executor = WorkflowExecutor(configs=[("cfg", 0), ("cfg", 1), ("cfg", 2)],
+                                workflow_fn=sleep_workflow)
+    pool = WorkerPool(executor, q, c=3, assignment=[0, 1, 2])
+    assert pool.assignment() == (0, 1, 2)
+    pool.start()
+    for i in range(60):
+        q.put(Request(request_id=i, arrival_s=0.0))
+    deadline = time.monotonic() + 10.0
+    while len(executor.records) < 60 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    pool.stop()
+    assert len(executor.records) == 60
+    for r in executor.records:
+        assert r.config_index == [0, 1, 2][r.worker_id]
+
+
+def test_worker_pool_assignment_validation():
+    q = RequestQueue()
+    executor = WorkflowExecutor(configs=[("cfg", 0)],
+                                workflow_fn=sleep_workflow)
+    pool = WorkerPool(executor, q, c=2)
+    assert pool.assignment() is None
+    assert pool.config_for_worker(0) is None
+    with pytest.raises(ValueError):
+        pool.set_assignment([0])          # wrong length
+    with pytest.raises(IndexError):
+        pool.set_assignment([0, 5])       # config out of range
+    pool.set_assignment([0, 0])
+    assert pool.config_for_worker(1) == 0
+    pool.set_assignment(None)
+    assert pool.assignment() is None
+
+
+def test_engine_mix_controller_repins_pool():
+    table = mix_table_for(2, downscale_cooldown_s=60.0)
+    executor = WorkflowExecutor(
+        configs=[("cfg", i) for i in range(3)], workflow_fn=sleep_workflow)
+    engine = ServingEngine(executor, controller=ElasticoMixController(table),
+                           num_workers=2, control_tick_s=0.01)
+    engine.start()
+    assert engine.pool.assignment() == (2, 2)   # starts all-accurate
+    for i in range(150):                         # flood -> forced repinning
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    report = engine.drain_and_stop()
+    assert len(report.records) == 150
+    assert len(report.assignment_timeline) > 1
+    assert report.assignment_timeline[0] == (0.0, (2, 2))
+    for (_, u), (_, v) in zip(report.assignment_timeline,
+                              report.assignment_timeline[1:]):
+        assert sum(1 for a, b in zip(u, v) if a != b) == 1
+    # monitor snapshots carry the live assignment for post-hoc analysis
+    assert any(s.assignment is not None for s in engine.monitor.history())
+
+
+def test_engine_static_assignment():
+    executor = WorkflowExecutor(
+        configs=[("cfg", i) for i in range(3)], workflow_fn=sleep_workflow)
+    engine = ServingEngine(executor, num_workers=2, assignment=[0, 2],
+                           control_tick_s=0.01)
+    engine.start()
+    for i in range(40):
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    report = engine.drain_and_stop()
+    assert len(report.records) == 40
+    pin = [0, 2]
+    for r in report.records:
+        assert r.config_index == pin[r.worker_id]
+    assert report.assignment_timeline == [(0.0, (0, 2))]
