@@ -25,6 +25,20 @@ def load_rows():
     return [json.loads(l) for l in open(DRYRUN)]
 
 
+def run_smoke() -> dict:
+    """Smallest setting: report the table when the dry-run artifact exists,
+    otherwise skip cleanly — a fresh checkout has no
+    experiments/dryrun_results.jsonl, and the smoke gate's job here is only
+    to prove the module still imports and its pipeline still parses."""
+    if not os.path.exists(DRYRUN):
+        return {
+            "name": "roofline_table",
+            "us_per_call": 0.0,
+            "derived": "SKIPPED (no dryrun artifact; run repro.launch.dryrun)",
+        }
+    return run()
+
+
 def run() -> dict:
     rows = load_rows()
     table = []

@@ -1,12 +1,18 @@
 """Benchmark driver: one function per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
         PYTHONPATH=src python -m benchmarks.run --check-docs
 
 Prints ``name,us_per_call,derived`` CSV and writes per-benchmark JSON
 artifacts into experiments/.  ``--check-docs`` runs the documentation
 cross-reference checker (:mod:`repro.tools.docscheck`) instead of any
 benchmark and exits non-zero on stale references.
+
+``--smoke`` runs each selected benchmark at its smallest setting: a module
+that defines ``run_smoke()`` (reduced durations / sweep sizes, same code
+paths) runs that; modules without one run their normal ``run()`` — the
+fallback keeps the smoke sweep total, so a bit-rotted benchmark fails fast
+either way.  CI uses this as a cheap all-benchmarks gate.
 """
 
 from __future__ import annotations
@@ -30,34 +36,50 @@ from . import (
     table1_baselines,
 )
 
-BENCHES = {
-    "fig1_pareto": fig1_pareto.run,
-    "fig3_convergence": fig3_convergence.run,
-    "fig4_efficiency": fig4_efficiency.run,
-    "table1_baselines": table1_baselines.run,
-    "fig5_slo_compliance": fig5_slo_compliance.run,
-    "fig6_latency_cdf": fig6_latency_cdf.run,
-    "fig7_timeseries": fig7_timeseries.run,
-    "kernels_bench": kernels_bench.run,
-    "predictive_ablation": predictive_ablation.run,
-    "serving_ladders": serving_ladders_bench.run,
-    "multi_server": multi_server_bench.run,
-    "cost_objective": cost_objective.run,
-    "roofline_table": roofline_table.run,
+MODULES = {
+    "fig1_pareto": fig1_pareto,
+    "fig3_convergence": fig3_convergence,
+    "fig4_efficiency": fig4_efficiency,
+    "table1_baselines": table1_baselines,
+    "fig5_slo_compliance": fig5_slo_compliance,
+    "fig6_latency_cdf": fig6_latency_cdf,
+    "fig7_timeseries": fig7_timeseries,
+    "kernels_bench": kernels_bench,
+    "predictive_ablation": predictive_ablation,
+    "serving_ladders": serving_ladders_bench,
+    "multi_server": multi_server_bench,
+    "cost_objective": cost_objective,
+    "roofline_table": roofline_table,
 }
+
+BENCHES = {name: mod.run for name, mod in MODULES.items()}
 
 
 def main() -> None:
-    if "--check-docs" in sys.argv[1:]:
+    args = sys.argv[1:]
+    known_flags = {"--smoke", "--check-docs"}
+    unknown = [a for a in args if a.startswith("--") and a not in known_flags]
+    if unknown:
+        # a typo'd gate flag must fail loudly, not fall through to a
+        # full-settings run of every benchmark with exit code 0.
+        print(f"unknown flag(s): {' '.join(unknown)}", file=sys.stderr)
+        print("usage: python -m benchmarks.run [--smoke] [name ...] | "
+              "--check-docs", file=sys.stderr)
+        sys.exit(2)
+    if "--check-docs" in args:
         from repro.tools.docscheck import main as docscheck_main
 
         sys.exit(docscheck_main())
-    names = sys.argv[1:] or list(BENCHES)
+    smoke = "--smoke" in args
+    names = [a for a in args if not a.startswith("--")] or list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         try:
-            row = BENCHES[name]()
+            fn = BENCHES[name]
+            if smoke:
+                fn = getattr(MODULES[name], "run_smoke", fn)
+            row = fn()
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         except Exception:
             failed.append(name)

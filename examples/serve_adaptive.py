@@ -1,6 +1,7 @@
 """End-to-end driver: REAL serving with batched requests over trained models.
 
-    PYTHONPATH=src python examples/serve_adaptive.py [--fast]
+    PYTHONPATH=src python examples/serve_adaptive.py [--fast] [--workers c]
+                                                     [--max-batch B] [--linger s]
 
 This is the full Compass loop with nothing simulated:
 
@@ -34,6 +35,13 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--workers", type=int, default=1,
                     help="worker-pool size c (1 = paper-faithful M/G/1)")
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help="per-worker batch cap B (1 = unbatched; >1 drains "
+                         "up to B requests per dequeue and derives "
+                         "batch-aware thresholds)")
+    ap.add_argument("--linger", type=float, default=0.0,
+                    help="batch linger window in seconds (batch_timeout_s): "
+                         "how long a worker holds a short batch open")
     args = ap.parse_args()
 
     print("=== 1. preparing the live RAG workflow (training generators) ===")
@@ -59,10 +67,16 @@ def main() -> None:
         sys.exit("no feasible configurations at tau=0.5")
 
     print("=== 3. Planner: wall-clock profiling on this host ===")
+    # note: without a batch_profiler the Planner assumes the no-amortization
+    # law (the python workflow here runs requests sequentially inside a
+    # batch), so --max-batch keeps thresholds honest rather than optimistic;
+    # a vectorized batch_workflow_fn + measured batch profiles is where the
+    # real jax-level win comes from (see docs/batching.md).
     plan = Planner(
         profiler=wf.profile_latency,
         profile_samples=6 if args.fast else 10,
         num_servers=args.workers,
+        max_batch_size=args.max_batch,
     ).plan(res.feasible, slo_p95_s=0.5)
     print(plan.describe())
 
@@ -115,7 +129,9 @@ def main() -> None:
         if static:
             executor.set_active(static)
         engine = ServingEngine(executor, controller=ctrl, control_tick_s=0.02,
-                               num_workers=args.workers)
+                               num_workers=args.workers,
+                               max_batch_size=args.max_batch,
+                               batch_timeout_s=args.linger)
         engine.start()
         replay_workload(engine, arrivals)
         report = engine.drain_and_stop()
@@ -123,9 +139,12 @@ def main() -> None:
         acc = report.mean_accuracy(accuracy)
         results[name] = (comp, acc, len(report.records))
         sw = len(ctrl.events) if ctrl else 0
+        batch_note = (f" mean_batch={report.mean_batch_size:.2f}"
+                      if args.max_batch > 1 else "")
         print(
             f"    {name:16s} served={len(report.records):4d} "
             f"compliance={comp * 100:5.1f}% accuracy={acc:.3f} switches={sw}"
+            f"{batch_note}"
         )
 
     comp_e, acc_e, _ = results["elastico"]

@@ -29,6 +29,18 @@ thresholds per mix state (Allen-Cunneen-corrected aggregate drain), and
 arrival rate.  An all-same-config mix with SCV = 1 reproduces the
 homogeneous Eq. 10 thresholds exactly.
 
+In-worker batching (beyond-paper): workers may drain up to ``B`` requests
+per dequeue and serve them as one batch whose service time follows the
+measured law S(b) = alpha + beta * b
+(:class:`repro.core.pareto.BatchProfile`).  Deeper queues then *increase*
+the effective drain rate — a backlog of N lets each worker form batches of
+b(N) = min(B, ceil(N / c)) — so :func:`batch_expected_wait` generalizes
+Eq. 8 and the thresholds of :func:`derive_policies` /
+:func:`derive_mix_policies` shift outward when ``max_batch_size > 1``.
+:func:`batch_mean_wait` is the stationary companion (batch-service M/G/c);
+at B = 1 every batch-aware formula collapses to its unbatched counterpart
+bit-for-bit.
+
 Configurations with Delta_k <= 0 cannot satisfy the SLO and are excluded.
 Asymmetric temporal hysteresis (§V-F): upscale cooldown ~0 (react to spikes
 immediately), downscale cooldown ~seconds (require sustained low load).
@@ -40,7 +52,7 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
-from .pareto import ParetoPoint
+from .pareto import BatchProfile, ParetoPoint
 
 
 @dataclass(frozen=True)
@@ -93,6 +105,7 @@ class AQMPolicyTable:
     hysteresis: HysteresisSpec
     excluded: Tuple[ParetoPoint, ...] = ()  # Delta_k <= 0 (cannot meet SLO)
     num_servers: int = 1             # c
+    max_batch_size: int = 1          # B the thresholds were derived for
 
     @property
     def ladder_size(self) -> int:
@@ -102,6 +115,31 @@ class AQMPolicyTable:
         return self.policies[k]
 
 
+def _batch_drain_threshold(budget_s: float, batch: BatchProfile,
+                           num_servers: int, max_batch_size: int) -> int:
+    """Largest buffered depth N such that *every* depth n <= N drains within
+    ``budget_s`` under the batch-aware wait (:func:`batch_expected_wait`).
+
+    The wait n * S(b(n)) / (c * b(n)) with b(n) = min(B, ceil(n / c)) is
+    piecewise linear: segment b covers c*(b-1) < n <= c*b, and within it
+    the wait rises linearly to S(b) at the segment end.  The scan walks the
+    segments upward; the first segment that is not safe all the way to its
+    end bounds the threshold.  Deeper segments can drain faster again
+    (batch formation needs backlog), but an upscale threshold must
+    guarantee the whole region at or below it — otherwise Elastico would
+    hold at a shallow depth whose modeled wait already blows the slack.
+    At B = 1 this is exactly Eq. 10's floor(c * Delta / s-bar).
+    """
+    if budget_s <= 0:
+        return 0
+    c = num_servers
+    for b in range(1, max_batch_size + 1):
+        n_b = int(math.floor(budget_s * c * b / batch.service_time(b)))
+        if b == max_batch_size or n_b < c * b:
+            return max(0, n_b)
+    return 0
+
+
 def derive_policies(
     front: Sequence[ParetoPoint],
     *,
@@ -109,6 +147,8 @@ def derive_policies(
     slack_buffer_s: float = 0.050,
     hysteresis: HysteresisSpec = HysteresisSpec(),
     num_servers: int = 1,
+    max_batch_size: int = 1,
+    batch_profiles: Optional[Sequence[Optional[BatchProfile]]] = None,
 ) -> AQMPolicyTable:
     """Build the AQM policy table for a Pareto front (paper §V-C..F).
 
@@ -119,11 +159,25 @@ def derive_policies(
     will drive.  Thresholds scale linearly with c (Eq. 10/13 with aggregate
     drain rate c / s-bar); ``num_servers=1`` reproduces the paper's M/G/1
     thresholds exactly.
+
+    ``max_batch_size`` is the per-worker batch cap B of the serving runtime.
+    With B > 1 the drain estimate becomes batch-aware
+    (:func:`batch_expected_wait`): a deeper queue lets workers form larger
+    batches and drain *faster* per request, so every threshold shifts
+    outward relative to the unbatched Eq. 10/13 values.  ``batch_profiles``
+    optionally overrides the per-config batch-service law (default: each
+    profile's measured :attr:`repro.core.pareto.LatencyProfile.batch_profile`,
+    falling back to the no-amortization law ``S(b) = s-bar * b`` — under
+    which batching changes no threshold).  ``max_batch_size=1`` evaluates
+    the identical floating-point expressions as the unbatched derivation and
+    reproduces it bit-for-bit.
     """
     if slo_p95_s <= 0:
         raise ValueError("SLO must be positive")
     if num_servers < 1:
         raise ValueError("num_servers must be >= 1")
+    if max_batch_size < 1:
+        raise ValueError("max_batch_size must be >= 1")
     for a, b in zip(front, front[1:]):
         if not b.profile.mean > a.profile.mean:
             raise ValueError("front must be ordered by increasing mean latency")
@@ -135,17 +189,36 @@ def derive_policies(
         slack = slo_p95_s - p.profile.p95
         (admitted if slack > 0 else excluded).append(p)
 
+    if batch_profiles is not None and len(batch_profiles) != len(front):
+        raise ValueError("need one batch profile (or None) per front config")
+    laws: dict = {}
+    for i, p in enumerate(front):
+        override = batch_profiles[i] if batch_profiles is not None else None
+        laws[id(p)] = (override if override is not None
+                       else p.profile.effective_batch_profile())
+
+    def batch_for(p: ParetoPoint) -> BatchProfile:
+        return laws[id(p)]
+
     c = num_servers
     policies: List[SwitchingPolicy] = []
     n = len(admitted)
     for k, p in enumerate(admitted):
         delta_k = slo_p95_s - p.profile.p95                       # Eq. 7
-        up = int(math.floor(c * delta_k / p.profile.mean))        # Eq. 10
+        if max_batch_size == 1:
+            up = int(math.floor(c * delta_k / p.profile.mean))    # Eq. 10
+        else:
+            up = _batch_drain_threshold(delta_k, batch_for(p), c, max_batch_size)
         down: Optional[int] = None
         if k + 1 < n:
             nxt = admitted[k + 1]
             delta_next = slo_p95_s - nxt.profile.p95
-            down = int(math.floor(c * max(0.0, delta_next - slack_buffer_s) / nxt.profile.mean))  # Eq. 13
+            budget = max(0.0, delta_next - slack_buffer_s)
+            if max_batch_size == 1:
+                down = int(math.floor(c * budget / nxt.profile.mean))  # Eq. 13
+            else:
+                down = _batch_drain_threshold(budget, batch_for(nxt), c,
+                                              max_batch_size)
         policies.append(
             SwitchingPolicy(
                 point=p,
@@ -166,6 +239,7 @@ def derive_policies(
         hysteresis=hysteresis,
         excluded=tuple(excluded),
         num_servers=num_servers,
+        max_batch_size=max_batch_size,
     )
 
 
@@ -185,13 +259,123 @@ def expected_wait(queue_depth: int, mean_service_s: float,
     return queue_depth * mean_service_s / num_servers
 
 
-def max_sustainable_rate(policy: SwitchingPolicy, num_servers: int = 1) -> float:
+def max_sustainable_rate(policy: SwitchingPolicy, num_servers: int = 1,
+                         max_batch_size: int = 1,
+                         batch_profile: Optional[BatchProfile] = None) -> float:
     """Utilization bound for config k: the M/G/c queue is stable only when
     lambda < c / s-bar_k; beyond it the queue grows without bound and the
-    upscale threshold will trip.  Used by the Planner for reporting."""
+    upscale threshold will trip.  Used by the Planner for reporting.
+
+    With in-worker batching (``max_batch_size = B > 1``) each worker drains
+    B requests per S(B) seconds at full batch, so the bound rises to
+    ``c * B / S(B)`` — roughly ``S(1)/beta``-fold when alpha dominates.
+    ``batch_profile`` overrides the service law, mirroring the
+    ``batch_profiles`` argument of :func:`derive_policies` (pass the same
+    override you derived the table with, or the reported capacity will
+    reflect the profile-attached/fallback law instead)."""
     if num_servers < 1:
         raise ValueError("num_servers must be >= 1")
-    return num_servers / policy.point.profile.mean
+    if max_batch_size < 1:
+        raise ValueError("max_batch_size must be >= 1")
+    if max_batch_size == 1:
+        return num_servers / policy.point.profile.mean
+    batch = (batch_profile if batch_profile is not None
+             else policy.point.profile.effective_batch_profile())
+    return num_servers * max_batch_size / batch.service_time(max_batch_size)
+
+
+# -- in-worker batching: batch-aware drain and stationary waits ----------------
+
+
+def batch_expected_wait(queue_depth: int, batch: BatchProfile,
+                        num_servers: int = 1,
+                        max_batch_size: int = 1) -> float:
+    """Eq. 8 generalized to batched service: at buffered depth N each of the
+    c workers forms batches of b(N) = min(B, ceil(N / c)) from the backlog,
+    so the queue drains at aggregate rate c * b(N) / S(b(N)) and
+
+        E[W | N] ~= N * S(b(N)) / (c * b(N)).
+
+    Deeper queues unlock larger batches, so the *per-request* drain time
+    falls with depth until the cap B — the effect that shifts batch-aware
+    switch-up thresholds outward.  ``max_batch_size = 1`` reproduces
+    :func:`expected_wait` exactly (S(1) = s-bar for a profile-derived law).
+    """
+    if queue_depth < 0:
+        raise ValueError("negative queue depth")
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    if max_batch_size < 1:
+        raise ValueError("max_batch_size must be >= 1")
+    if queue_depth == 0:
+        return 0.0
+    b = min(max_batch_size,
+            max(1, int(math.ceil(queue_depth / num_servers))))
+    return queue_depth * batch.service_time(b) / (num_servers * b)
+
+
+def batch_mean_wait(num_servers: int, arrival_rate_qps: float,
+                    batch: BatchProfile, *,
+                    max_batch_size: int = 1,
+                    batch_timeout_s: float = 0.0,
+                    scv_service: float = 1.0,
+                    scv_arrival: float = 1.0) -> float:
+    """Stationary mean wait of a batch-service M/G/c queue.
+
+    The pool is modeled at its *equilibrium batch size* b_eq: the smallest
+    b <= B at which the offered load is stable, ``lambda * S(b) / (c * b)
+    < 1`` (light load serves singletons; overload pushes the system to the
+    batch size that restores stability — full batches at worst).  Batches
+    are then treated as the queue's customers — arrival rate ``lambda /
+    b_eq``, service time ``S(b_eq)`` — and the batch-level wait is the
+    Allen-Cunneen M/G/c approximation at those parameters, plus a
+    batch-forming delay bounded by the linger window:
+
+        E[W] ~= AC(c, lambda / b_eq, S(b_eq)) + min(t_linger, (B - 1) / (2 lambda))
+
+    (a lingering worker holds a partial batch until it fills toward the cap
+    B or the timeout ``batch_timeout_s`` expires, whichever first; a request
+    lands uniformly within its forming batch, so it waits on average half
+    the fill time).  With ``batch_timeout_s = 0`` the runtime dispatches
+    greedily — batches form only from backlog — and the forming term is
+    zero.  Returns ``inf`` when even full batches cannot absorb the load
+    (lambda >= c * B / S(B)).
+
+    Collapse: ``max_batch_size = 1`` evaluates
+    :func:`allen_cunneen_mean_wait` at (c, lambda, S(1)) exactly — the
+    unbatched M/G/c model, which itself equals Erlang-C at SCV = 1.
+    """
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    if max_batch_size < 1:
+        raise ValueError("max_batch_size must be >= 1")
+    if batch_timeout_s < 0:
+        raise ValueError("batch_timeout_s must be >= 0")
+    if arrival_rate_qps < 0:
+        raise ValueError("arrival rate must be >= 0")
+    if max_batch_size == 1:
+        return allen_cunneen_mean_wait(
+            num_servers, arrival_rate_qps, batch.service_time(1),
+            scv_service=scv_service, scv_arrival=scv_arrival)
+    if arrival_rate_qps == 0.0:
+        return 0.0
+    b_star = None
+    for b in range(1, max_batch_size + 1):
+        if arrival_rate_qps * batch.service_time(b) < num_servers * b:
+            b_star = b
+            break
+    if b_star is None:
+        return float("inf")
+    base = allen_cunneen_mean_wait(
+        num_servers, arrival_rate_qps / b_star, batch.service_time(b_star),
+        scv_service=scv_service, scv_arrival=scv_arrival)
+    if math.isinf(base):
+        return base
+    forming = 0.0
+    if batch_timeout_s > 0.0:
+        forming = min(batch_timeout_s,
+                      (max_batch_size - 1) / (2.0 * arrival_rate_qps))
+    return base + forming
 
 
 # -- M/M/c stationary analysis (Erlang C) -------------------------------------
@@ -270,6 +454,27 @@ def allen_cunneen_mean_wait(num_servers: int, arrival_rate_qps: float,
     return 0.5 * (scv_arrival + scv_service) * base
 
 
+def _mix_batch_drain_threshold(budget_s: float, assignment: Sequence[int],
+                               batch_laws: Sequence[BatchProfile], phi: float,
+                               num_servers: int, max_batch_size: int) -> int:
+    """Heterogeneous analogue of :func:`_batch_drain_threshold`: largest
+    depth N such that every depth n <= N keeps the batch-aware drain wait
+    phi * n / mu_agg(b(n)) within ``budget_s``, where
+    mu_agg(b) = sum_w b / S_w(b) is the pool's aggregate drain rate when
+    every worker forms batches of b from the backlog.  Same upward segment
+    scan (and the same downward-closure guarantee) as the homogeneous
+    helper."""
+    if budget_s <= 0:
+        return 0
+    c = num_servers
+    for b in range(1, max_batch_size + 1):
+        mu_b = sum(b / batch_laws[a].service_time(b) for a in assignment)
+        n_b = int(math.floor(budget_s * mu_b / phi))
+        if b == max_batch_size or n_b < c * b:
+            return max(0, n_b)
+    return 0
+
+
 # -- heterogeneous pools: per-worker config pinning ---------------------------
 
 
@@ -325,6 +530,7 @@ class MixPolicyTable:
     hysteresis: HysteresisSpec
     num_servers: int
     excluded: Tuple[ParetoPoint, ...] = ()
+    max_batch_size: int = 1               # B the thresholds were derived for
 
     @property
     def ladder_size(self) -> int:
@@ -415,6 +621,8 @@ def derive_mix_policies(
     hysteresis: HysteresisSpec = HysteresisSpec(),
     num_servers: int = 1,
     scv: Optional[Sequence[float]] = None,
+    max_batch_size: int = 1,
+    batch_profiles: Optional[Sequence[Optional[BatchProfile]]] = None,
 ) -> MixPolicyTable:
     """Derive queue-depth switching thresholds for the heterogeneous mix
     ladder of a Pareto front (the beyond-paper analogue of
@@ -439,24 +647,44 @@ def derive_mix_policies(
     each profile via :attr:`repro.core.pareto.LatencyProfile.scv`, i.e.
     measured by the Planner's profiler, with an exponential fallback of 1.0
     for synthetic profiles).
+
+    ``max_batch_size`` makes the drain estimate batch-aware, as in
+    :func:`derive_policies`: at depth N each worker w forms batches of
+    b(N) = min(B, ceil(N / c)) and drains at rate b / S_w(b), so
+    mu_agg grows with depth and every threshold shifts outward.
+    ``batch_profiles`` overrides the per-config batch law (default: each
+    admitted profile's :attr:`repro.core.pareto.LatencyProfile.batch_profile`
+    or the no-amortization fallback).  ``max_batch_size=1`` reproduces the
+    unbatched mix thresholds bit-for-bit.
     """
     if slo_p95_s <= 0:
         raise ValueError("SLO must be positive")
     if num_servers < 1:
         raise ValueError("num_servers must be >= 1")
+    if max_batch_size < 1:
+        raise ValueError("max_batch_size must be >= 1")
     for a, b in zip(front, front[1:]):
         if not b.profile.mean > a.profile.mean:
             raise ValueError("front must be ordered by increasing mean latency")
+    if batch_profiles is not None and len(batch_profiles) != len(front):
+        raise ValueError("need one batch profile (or None) per front config")
 
     admitted: List[ParetoPoint] = []
     excluded: List[ParetoPoint] = []
-    for p in front:
-        ((admitted if slo_p95_s - p.profile.p95 > 0 else excluded).append(p))
+    admitted_batch: List[BatchProfile] = []
+    for i, p in enumerate(front):
+        if slo_p95_s - p.profile.p95 > 0:
+            admitted.append(p)
+            override = batch_profiles[i] if batch_profiles is not None else None
+            admitted_batch.append(override if override is not None
+                                  else p.profile.effective_batch_profile())
+        else:
+            excluded.append(p)
     if not admitted:
         return MixPolicyTable(
             slo_p95_s=slo_p95_s, slack_buffer_s=slack_buffer_s, policies=(),
             hysteresis=hysteresis, num_servers=num_servers,
-            excluded=tuple(excluded),
+            excluded=tuple(excluded), max_batch_size=max_batch_size,
         )
     scvs = [p.profile.scv for p in admitted] if scv is None else list(scv)
     if len(scvs) != len(admitted):
@@ -476,6 +704,10 @@ def derive_mix_policies(
         # uniform state with phi = 1 evaluates the identical floating-point
         # expression as Eq. 10/13 in derive_policies, so the all-same mix
         # reproduces the homogeneous thresholds exactly.
+        if max_batch_size > 1:
+            return _mix_batch_drain_threshold(
+                budget_s, assignment, admitted_batch, phi,
+                num_servers, max_batch_size)
         if phi == 1.0 and len(set(assignment)) == 1:
             mean = admitted[assignment[0]].profile.mean
             return int(math.floor(num_servers * budget_s / mean))
@@ -510,6 +742,7 @@ def derive_mix_policies(
         hysteresis=hysteresis,
         num_servers=num_servers,
         excluded=tuple(excluded),
+        max_batch_size=max_batch_size,
     )
 
 

@@ -19,6 +19,16 @@ per worker (:func:`repro.core.aqm.derive_mix_policies`), so a threshold
 crossing shifts exactly one worker to an adjacent Pareto rung rather than
 flipping the whole pool.  The threshold/hysteresis mechanics are identical —
 the mix table is duck-type compatible with the homogeneous one.
+
+Both controllers are oblivious to *how* their thresholds were derived: a
+table built with ``max_batch_size > 1`` bakes the batch-aware drain model
+(deeper queues drain faster per request, so switch-up thresholds sit
+further out — :func:`repro.core.aqm.batch_expected_wait`) into the same
+integer thresholds, and the walking logic here is unchanged.  The table's
+``max_batch_size`` field records which runtime the thresholds are honest
+for; drive a batching pool with an unbatched table and Elastico will
+switch down the accuracy ladder earlier than the pool's true drain rate
+requires.
 """
 
 from __future__ import annotations

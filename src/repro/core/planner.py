@@ -10,6 +10,7 @@ re-runs when the deployment target changes.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import statistics
 from dataclasses import dataclass, field
@@ -22,7 +23,14 @@ from .aqm import (
     derive_mix_policies,
     derive_policies,
 )
-from .pareto import LatencyProfile, ParetoPoint, pareto_front, thin_front
+from .pareto import (
+    BatchProfile,
+    LatencyProfile,
+    ParetoPoint,
+    fit_batch_profile,
+    pareto_front,
+    thin_front,
+)
 from .space import Config
 
 
@@ -72,9 +80,11 @@ class DeploymentPlan:
     mix_table: Optional[MixPolicyTable] = None
 
     def describe(self) -> str:
+        batch = (f", in-worker batching B = {self.table.max_batch_size}"
+                 if self.table.max_batch_size > 1 else "")
         lines = [
             f"SLO p95 = {self.table.slo_p95_s * 1e3:.0f} ms, "
-            f"c = {self.table.num_servers} server(s), "
+            f"c = {self.table.num_servers} server(s){batch}, "
             f"ladder of {self.table.ladder_size} configs "
             f"({len(self.dominated)} dominated, {len(self.table.excluded)} infeasible for SLO)"
         ]
@@ -119,6 +129,20 @@ class Planner:
         with the service-time SCV the profiler measured per configuration.
         Defaults to deriving mixes whenever the pool has more than one
         worker (a c = 1 mix ladder is just the homogeneous ladder).
+    max_batch_size: per-worker batch cap B the deployment will serve with;
+        B > 1 makes every derived threshold batch-aware
+        (:func:`repro.core.aqm.batch_expected_wait`).  1 (the default)
+        reproduces the unbatched plan bit-for-bit.
+    batch_profiler: measures the batch-service law on hardware H —
+        ``(config, batch_size, num_samples) -> per-batch total service
+        times`` (seconds).  When given (and B > 1), the Planner measures
+        each kept configuration at batch sizes 1, 2, 4, ... up to B, fits
+        ``alpha + beta * b`` by least squares
+        (:func:`repro.core.pareto.fit_batch_profile`), and attaches the
+        law to the configuration's profile
+        (:attr:`repro.core.pareto.LatencyProfile.batch_profile`).  Without
+        it, unmeasured configs fall back to the no-amortization law and
+        batching changes no threshold.
     """
 
     profiler: Callable[[Config, int], Sequence[float]]
@@ -128,6 +152,28 @@ class Planner:
     hysteresis: HysteresisSpec = field(default_factory=HysteresisSpec)
     num_servers: int = 1
     heterogeneous: Optional[bool] = None
+    max_batch_size: int = 1
+    batch_profiler: Optional[Callable[[Config, int, int], Sequence[float]]] = None
+    batch_profile_samples: int = 8
+
+    def _measure_batch_profile(self, config: Config) -> BatchProfile:
+        """Fit the alpha + beta * b law from measured batch service times at
+        doubling batch sizes 1, 2, 4, ... capped at ``max_batch_size``."""
+        assert self.batch_profiler is not None
+        sizes: List[int] = []
+        b = 1
+        while b < self.max_batch_size:
+            sizes.append(b)
+            b *= 2
+        sizes.append(self.max_batch_size)
+        obs_sizes: List[int] = []
+        obs_times: List[float] = []
+        for b in sizes:
+            samples = self.batch_profiler(config, b, self.batch_profile_samples)
+            for t in samples:
+                obs_sizes.append(b)
+                obs_times.append(float(t))
+        return fit_batch_profile(obs_sizes, obs_times)
 
     def plan(
         self,
@@ -149,12 +195,27 @@ class Planner:
         front_keys = {(p.config) for p in front}
         dominated = tuple(p for p in points if p.config not in front_keys)
 
+        # batch laws are consumed only by threshold derivation, so they are
+        # measured only for the kept rungs — after Pareto/thinning has
+        # discarded the dominated configs (each measurement is a run of real
+        # batch executions on hardware H; don't pay for losers).
+        if self.batch_profiler is not None and self.max_batch_size > 1:
+            measured: List[ParetoPoint] = []
+            for p in front:
+                prof = dataclasses.replace(
+                    p.profile,
+                    batch_profile=self._measure_batch_profile(p.config))
+                profiled[p.config] = prof
+                measured.append(dataclasses.replace(p, profile=prof))
+            front = measured
+
         table = derive_policies(
             front,
             slo_p95_s=slo_p95_s,
             slack_buffer_s=self.slack_buffer_s,
             hysteresis=self.hysteresis,
             num_servers=self.num_servers,
+            max_batch_size=self.max_batch_size,
         )
         want_mixes = (
             self.heterogeneous
@@ -169,6 +230,7 @@ class Planner:
                 slack_buffer_s=self.slack_buffer_s,
                 hysteresis=self.hysteresis,
                 num_servers=self.num_servers,
+                max_batch_size=self.max_batch_size,
             )
         return DeploymentPlan(
             front=tuple(front),

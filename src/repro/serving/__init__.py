@@ -27,12 +27,22 @@ Every layer of the runtime is parameterized by a server count ``c >= 1``:
   Allen-Cunneen M/G/c wait model folds in the service-time SCV measured by
   the profiler.
 
+In-worker batching (``max_batch_size``, ``batch_timeout_s`` on both
+:class:`ServingEngine`/:class:`WorkerPool` and :class:`ServingSimulator`)
+lets each worker drain up to B requests per dequeue — lingering up to the
+batch timeout for a short batch to fill — and execute them as one batch
+(:meth:`WorkflowExecutor.execute_batch`), amortizing per-dispatch overhead
+by the measured ``alpha + beta * b`` law
+(:class:`repro.core.pareto.BatchProfile`); thresholds derived with
+``max_batch_size > 1`` account for the depth-dependent drain rate
+(:func:`repro.core.aqm.batch_expected_wait`).
+
 ``c = 1`` is the paper-faithful default throughout and reproduces the
 original single-server (M/G/1) behavior exactly — same seeds, same results;
 an all-same-config assignment vector likewise reproduces the homogeneous
-pool bit-for-bit.  Elastico always observes the *buffered* queue depth
-(waiting requests, excluding the up-to-c in service), the depth the
-thresholds are stated in.
+pool bit-for-bit, and ``max_batch_size = 1`` the unbatched runtime.
+Elastico always observes the *buffered* queue depth (waiting requests,
+excluding the up-to-c in service), the depth the thresholds are stated in.
 """
 
 from .engine import EngineReport, ServingEngine, replay_workload

@@ -29,6 +29,16 @@ find the buffer full are rejected at ingress and surface in
 ``EngineReport.dropped`` (see that field's documentation for exact
 semantics).
 
+``max_batch_size``/``batch_timeout_s`` enable in-worker batching
+(beyond-paper): each worker drains up to ``max_batch_size`` requests per
+dequeue — lingering up to ``batch_timeout_s`` for a short batch to fill —
+and executes the run as one batch (see
+:meth:`repro.serving.executor.WorkflowExecutor.execute_batch`).  The drain
+logic accounts for batches a lingering worker has claimed but not yet
+executed (``WorkerPool.pending``), and ``EngineReport.mean_batch_size``
+reports the realized amortization.  ``max_batch_size=1`` (default) takes
+the exact pre-batching code path.
+
 A deterministic-virtual-time variant is provided by
 :mod:`repro.serving.simulator`; this module is the "it actually serves"
 path used by the examples and smoke tests.
@@ -76,6 +86,9 @@ class EngineReport:
     num_workers: int = 1
     served_per_worker: List[int] = field(default_factory=list)
     assignment_timeline: List = field(default_factory=list)
+    # realized requests-per-dispatch across the pool; 1.0 for unbatched runs
+    mean_batch_size: float = 1.0
+    max_batch_size: int = 1
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.records:
@@ -101,7 +114,9 @@ class ServingEngine:
 
     ``num_workers`` sizes the worker pool (c of the M/G/c model);
     ``max_queue_depth`` bounds the shared buffer for admission control
-    (None = unbounded, the paper's no-drop default).  ``controller`` may be
+    (None = unbounded, the paper's no-drop default); ``max_batch_size`` /
+    ``batch_timeout_s`` enable in-worker batching (1 / 0.0 = unbatched,
+    the paper-faithful default).  ``controller`` may be
     a homogeneous :class:`ElasticoController` (switches the global default
     config) or an :class:`ElasticoMixController` (repins the per-worker
     assignment vector one worker at a time); pass None for a static run,
@@ -118,6 +133,8 @@ class ServingEngine:
         control_tick_s: float = 0.05,
         clock: Callable[[], float] = time.monotonic,
         assignment: Optional[Sequence[int]] = None,
+        max_batch_size: int = 1,
+        batch_timeout_s: float = 0.0,
     ) -> None:
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
@@ -136,6 +153,7 @@ class ServingEngine:
         self.pool = WorkerPool(
             executor, self.queue, c=num_workers, on_observe=self._observe,
             assignment=assignment,
+            max_batch_size=max_batch_size, batch_timeout_s=batch_timeout_s,
         )
         self.control_tick_s = control_tick_s
         self._clock = clock
@@ -195,10 +213,15 @@ class ServingEngine:
         return accepted
 
     def drain_and_stop(self, *, timeout_s: float = 120.0) -> EngineReport:
-        """Close ingress, wait until the queue empties, stop threads."""
+        """Close ingress, wait until the queue empties, stop threads.
+
+        The drain condition uses ``queue.buffered()`` (waiting + claimed by
+        a lingering forming batch) plus ``pool.pending()`` (a dequeued batch
+        not yet executing), so a worker mid-linger cannot race the shutdown
+        into dropping its partial batch."""
         deadline = self._clock() + timeout_s
-        while (self.queue.depth() > 0 or self.executor.in_flight() > 0) \
-                and self._clock() < deadline:
+        while (self.queue.buffered() > 0 or self.executor.in_flight() > 0
+               or self.pool.pending() > 0) and self._clock() < deadline:
             time.sleep(0.01)
         self.queue.close()
         self._stop.set()
@@ -217,6 +240,8 @@ class ServingEngine:
             num_workers=self.pool.c,
             served_per_worker=self.pool.served_per_worker(),
             assignment_timeline=list(self._assignment_timeline),
+            mean_batch_size=self.pool.mean_batch_size(),
+            max_batch_size=self.pool.max_batch_size,
         )
 
     # -- loops ---------------------------------------------------------------
@@ -234,10 +259,17 @@ class ServingEngine:
         if self.controller is None:
             return
         with self._observe_lock:
-            depth = self.queue.depth()  # buffered requests only (see simulator)
+            # buffered requests only (see simulator): waiting in the queue
+            # plus any lingering worker's forming batch — the simulator keeps
+            # forming batches in its waiting list, so both runtimes show the
+            # controller the same depth for the same state.
+            depth = self.queue.buffered()
             now = self._now_rel()
+            batch = (self.pool.mean_batch_size()
+                     if self.pool.max_batch_size > 1 else None)
             self.monitor.snapshot(depth, self.executor.in_flight(), now,
-                                  assignment=self.pool.assignment())
+                                  assignment=self.pool.assignment(),
+                                  batch_size=batch)
             ev = self.controller.observe(depth, now)
             if ev is not None:
                 if isinstance(self.controller, ElasticoMixController):

@@ -14,6 +14,15 @@ blends accuracy and latency instead of hard-switching every worker at once.
 With no assignment set (the default) all workers follow the executor's
 single active index, which reproduces the homogeneous engine behavior
 exactly; ``c = 1`` reproduces the seed's single-worker engine.
+
+In-worker batching (beyond-paper): with ``max_batch_size = B > 1`` each
+worker drains up to B requests per dequeue (lingering up to
+``batch_timeout_s`` for the batch to fill) and executes them as ONE batch
+through :meth:`WorkflowExecutor.execute_batch` — vectorized over the
+workflow's model calls when a ``batch_workflow_fn`` is supplied (jax-level
+batching: stack the payloads, run the stacked forward once), else a
+sequential fallback that still amortizes queue/dispatch overhead.  The
+default ``max_batch_size = 1`` takes the exact single-request code path.
 All record collection goes through the executor's lock, so a pool of any
 size yields one consistent, thread-safe record list.
 """
@@ -27,9 +36,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.space import Config
 from .queue import RequestQueue
+from .workload import Request
 
 WorkflowFn = Callable[[Config, Any], Any]
 """(config, payload) -> result.  One full compound-workflow execution."""
+
+BatchWorkflowFn = Callable[[Config, List[Any]], Sequence[Any]]
+"""(config, payloads) -> results.  One *vectorized* compound-workflow
+execution over a whole batch (e.g. jax vmap / stacked batch dimension);
+must return exactly one result per payload, in order."""
 
 
 @dataclass
@@ -41,6 +56,7 @@ class ExecutionRecord:
     config_index: int
     result: Any = None
     worker_id: int = 0
+    batch_size: int = 1   # size of the batch this request was served in
 
     @property
     def latency_s(self) -> float:
@@ -65,11 +81,13 @@ class WorkflowExecutor:
     """
 
     def __init__(self, configs: Sequence[Config], workflow_fn: WorkflowFn,
-                 *, clock: Callable[[], float] = time.monotonic) -> None:
+                 *, clock: Callable[[], float] = time.monotonic,
+                 batch_workflow_fn: Optional[BatchWorkflowFn] = None) -> None:
         if not configs:
             raise ValueError("executor needs at least one configuration")
         self._configs = list(configs)
         self._workflow_fn = workflow_fn
+        self._batch_workflow_fn = batch_workflow_fn
         self._clock = clock
         self._active = len(configs) - 1
         self._lock = threading.Lock()
@@ -137,6 +155,68 @@ class WorkflowExecutor:
             self.records.append(rec)
         return rec
 
+    def execute_batch(self, requests: Sequence[Request], worker_id: int = 0,
+                      config_index: Optional[int] = None
+                      ) -> List[ExecutionRecord]:
+        """Run a batch of requests as ONE workflow dispatch.
+
+        All requests share a single configuration resolution, one start
+        timestamp, and one completion timestamp (the batch completes as a
+        unit — static in-worker batching), so every member's latency pays
+        the whole batch's service time while the pool's drain rate rises by
+        the amortization factor.  Uses the vectorized ``batch_workflow_fn``
+        when the executor has one (jax-level batching over the workflow's
+        model calls); otherwise falls back to running ``workflow_fn`` per
+        payload inside the single dispatch, which amortizes only the
+        queue/dispatch overhead.  A batch of one is delegated to
+        :meth:`execute`, keeping the unbatched code path byte-identical.
+        """
+        if not requests:
+            raise ValueError("empty batch")
+        if len(requests) == 1:
+            r = requests[0]
+            return [self.execute(r.request_id, r.arrival_s, r.payload,
+                                 worker_id=worker_id,
+                                 config_index=config_index)]
+        if config_index is not None and not 0 <= config_index < len(self._configs):
+            raise IndexError(f"config index {config_index} out of range")
+        with self._lock:
+            idx = self._active if config_index is None else config_index
+            self._in_flight += len(requests)
+        payloads = [r.payload for r in requests]
+        try:
+            start = self._clock()
+            if self._batch_workflow_fn is not None:
+                results = list(self._batch_workflow_fn(self._configs[idx],
+                                                       payloads))
+                if len(results) != len(payloads):
+                    raise ValueError(
+                        f"batch_workflow_fn returned {len(results)} results "
+                        f"for {len(payloads)} payloads")
+            else:
+                results = [self._workflow_fn(self._configs[idx], p)
+                           for p in payloads]
+            end = self._clock()
+        finally:
+            with self._lock:
+                self._in_flight -= len(requests)
+        recs = [
+            ExecutionRecord(
+                request_id=r.request_id,
+                arrival_s=r.arrival_s,
+                start_s=start,
+                completion_s=end,
+                config_index=idx,
+                result=res,
+                worker_id=worker_id,
+                batch_size=len(requests),
+            )
+            for r, res in zip(requests, results)
+        ]
+        with self._lock:
+            self.records.extend(recs)
+        return recs
+
 
 class WorkerPool:
     """``c`` worker threads draining one shared request queue (M/G/c).
@@ -156,8 +236,17 @@ class WorkerPool:
     takes effect at each worker's *next* request — in-flight requests finish
     under the configuration they started with (no drops, §III-B).
 
+    ``max_batch_size = B > 1`` turns on in-worker batching: each dequeue
+    drains up to B requests (``RequestQueue.get_batch``), lingering up to
+    ``batch_timeout_s`` for a short batch to fill, and executes the run as
+    one batch under the worker's configuration.  Requests claimed but not
+    yet executed are visible via :meth:`pending` so the engine's drain
+    logic cannot race a lingering worker.
+
     ``c = 1`` is the paper-faithful single-worker server; the pool then
-    behaves exactly like the seed's single ``compass-worker`` thread.
+    behaves exactly like the seed's single ``compass-worker`` thread (and
+    the default ``max_batch_size = 1`` never lingers — a batch of one is
+    full at the first pop).
     """
 
     def __init__(
@@ -170,18 +259,28 @@ class WorkerPool:
         poll_timeout_s: float = 0.05,
         name: str = "compass-worker",
         assignment: Optional[Sequence[int]] = None,
+        max_batch_size: int = 1,
+        batch_timeout_s: float = 0.0,
     ) -> None:
         if c < 1:
             raise ValueError("worker pool needs c >= 1 workers")
+        if max_batch_size < 1:
+            raise ValueError("max_batch_size must be >= 1")
+        if batch_timeout_s < 0:
+            raise ValueError("batch_timeout_s must be >= 0")
         self.executor = executor
         self.queue = queue
         self.c = c
+        self.max_batch_size = max_batch_size
+        self.batch_timeout_s = batch_timeout_s
         self._on_observe = on_observe
         self._poll_timeout_s = poll_timeout_s
         self._name = name
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._served_per_worker = [0] * c
+        self._dispatches_per_worker = [0] * c
+        self._pending_per_worker = [0] * c
         self._assignment_lock = threading.Lock()
         self._assignment: Optional[Tuple[int, ...]] = None
         if assignment is not None:
@@ -224,6 +323,28 @@ class WorkerPool:
         hook; reads are benign-racy while the pool is running)."""
         return list(self._served_per_worker)
 
+    def dispatches_per_worker(self) -> List[int]:
+        """Batch dispatches executed by each worker; with batching on, the
+        ratio served/dispatches is the realized mean batch size."""
+        return list(self._dispatches_per_worker)
+
+    def mean_batch_size(self) -> float:
+        """Realized mean batch size so far (requests per dispatch); 1.0 for
+        an unbatched pool, and before any dispatch."""
+        dispatches = sum(self._dispatches_per_worker)
+        if dispatches == 0:
+            return 1.0
+        return sum(self._served_per_worker) / dispatches
+
+    def pending(self) -> int:
+        """Requests a worker has dequeued but not yet handed to the executor
+        (the window between ``get_batch`` returning and ``execute`` /
+        ``execute_batch`` registering them in-flight).  Forming batches
+        still inside a lingering ``get_batch`` are counted by
+        ``RequestQueue.claimed()`` instead; the engine's drain loop waits on
+        both, so no shutdown race can drop a claimed batch."""
+        return sum(self._pending_per_worker)
+
     def start(self) -> None:
         if self._threads:
             raise RuntimeError("worker pool already started")
@@ -251,14 +372,28 @@ class WorkerPool:
 
     def _worker_loop(self, worker_id: int) -> None:
         while not self._stop.is_set():
-            req = self.queue.get(timeout=self._poll_timeout_s)
-            if req is None:
+            reqs = self.queue.get_batch(self.max_batch_size,
+                                        timeout=self._poll_timeout_s,
+                                        linger_s=self.batch_timeout_s)
+            if not reqs:
                 continue
-            if self._on_observe is not None:
-                self._on_observe()   # arrival-to-service boundary decision
-            self.executor.execute(req.request_id, req.arrival_s, req.payload,
-                                  worker_id=worker_id,
-                                  config_index=self.config_for_worker(worker_id))
-            self._served_per_worker[worker_id] += 1
+            self._pending_per_worker[worker_id] = len(reqs)
+            try:
+                if self._on_observe is not None:
+                    self._on_observe()   # arrival-to-service boundary decision
+                cfg = self.config_for_worker(worker_id)
+                if len(reqs) == 1:
+                    # unbatched fast path: identical to the pre-batching pool
+                    req = reqs[0]
+                    self.executor.execute(req.request_id, req.arrival_s,
+                                          req.payload, worker_id=worker_id,
+                                          config_index=cfg)
+                else:
+                    self.executor.execute_batch(reqs, worker_id=worker_id,
+                                                config_index=cfg)
+            finally:
+                self._pending_per_worker[worker_id] = 0
+            self._served_per_worker[worker_id] += len(reqs)
+            self._dispatches_per_worker[worker_id] += 1
             if self._on_observe is not None:
                 self._on_observe()

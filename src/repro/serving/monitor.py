@@ -2,9 +2,10 @@
 
 Elastico's decisions key off the *buffered* queue depth (requests waiting
 for service, excluding the up-to-c in service across the worker pool); the
-engine passes that depth and the pool-wide in-flight count to ``snapshot``
-under its observe lock, so snapshots are consistent even with many workers
-observing concurrently.  The arrival-rate EWMA is exposed for observability
+engine passes that depth, the pool-wide in-flight count, and — when
+in-worker batching is enabled — the pool's realized mean batch size to
+``snapshot`` under its observe lock, so snapshots are consistent even with
+many workers observing concurrently.  The arrival-rate EWMA is exposed for observability
 and for the predictive-adaptation extension point mentioned in the paper's
 future work; ``record_drop`` tracks admission-control rejections.
 """
@@ -23,13 +24,18 @@ class LoadSnapshot:
     """One control-loop observation.  ``assignment`` is the per-worker config
     pinning in effect when the snapshot was taken (None for homogeneous
     pools) — it lets post-hoc analysis correlate queue depth with the mix
-    the heterogeneous controller had deployed."""
+    the heterogeneous controller had deployed.  ``batch_size`` is the
+    pool's realized mean batch size (requests per worker dispatch) up to
+    the snapshot — None when the runtime doesn't batch, 1.0 when batching
+    is enabled but batches never form, rising toward ``max_batch_size``
+    as backlog lets workers fill their batches."""
 
     time_s: float
     queue_depth: int
     arrival_rate_qps: float
     in_flight: int
     assignment: Optional[Tuple[int, ...]] = None
+    batch_size: Optional[float] = None
 
 
 class LoadMonitor:
@@ -99,7 +105,8 @@ class LoadMonitor:
 
     def snapshot(self, queue_depth: int, in_flight: int,
                  now_s: Optional[float] = None,
-                 assignment: Optional[Tuple[int, ...]] = None) -> LoadSnapshot:
+                 assignment: Optional[Tuple[int, ...]] = None,
+                 batch_size: Optional[float] = None) -> LoadSnapshot:
         now = self._clock() if now_s is None else now_s
         snap = LoadSnapshot(
             time_s=now,
@@ -107,6 +114,7 @@ class LoadMonitor:
             arrival_rate_qps=self.arrival_rate(now),
             in_flight=in_flight,
             assignment=assignment,
+            batch_size=batch_size,
         )
         with self._lock:
             self._history.append(snap)

@@ -1,19 +1,26 @@
 """Central request queue for the inference serving system (paper §III-B).
 
-A thread-safe FIFO buffer shared by all workers of the pool.  By default the
-queue is unbounded and never drops requests: during a configuration switch
-the executor keeps draining with the old configuration until the new one is
-ready.  Passing ``max_depth`` enables admission control (beyond-paper): a
-``put`` against a full buffer is rejected and counted instead of enqueued,
-bounding worst-case queueing delay under sustained overload.
+One thread-safe FIFO buffer shared by every worker of the M/G/c pool —
+there is no per-worker queue, so whichever of the c workers frees first
+pops the oldest request (or, with in-worker batching, the oldest *run* of
+requests via :meth:`RequestQueue.get_batch`, optionally lingering up to a
+batch timeout for the batch to fill).  By default the queue is unbounded
+and never drops requests: during a configuration switch — whether the
+global index flip of the homogeneous controller or a one-worker repin of
+the mix controller — workers keep draining under the configurations they
+hold until the new pinning takes effect.  Passing ``max_depth`` enables
+admission control (beyond-paper): a ``put`` against a full buffer is
+rejected and counted instead of enqueued, bounding worst-case queueing
+delay under sustained overload.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Optional
+from typing import Deque, List, Optional
 
 from .workload import Request
 
@@ -29,6 +36,12 @@ class RequestQueue:
         self._max_depth = max_depth
         self._total_enqueued = 0
         self._total_dropped = 0
+        # requests popped by an in-progress get_batch that has not returned
+        # yet (a lingering worker's forming batch).  They are out of _items
+        # but not yet in service: buffered() counts them so the controller
+        # and the engine's drain logic see the same depth the simulator's
+        # event loop reports for a forming batch.
+        self._claimed = 0
 
     def put(self, request: Request) -> bool:
         """Enqueue; returns False (and counts a drop) if the buffer is full.
@@ -38,7 +51,12 @@ class RequestQueue:
         with self._lock:
             if self._closed:
                 raise RuntimeError("queue closed")
-            if self._max_depth is not None and len(self._items) >= self._max_depth:
+            # admission bounds the *buffered* count (waiting + claimed by a
+            # lingering forming batch): claimed requests still occupy the
+            # delay budget max_depth promises to bound, so vacating a deque
+            # slot into a forming batch must not admit another request.
+            if self._max_depth is not None and \
+                    len(self._items) + self._claimed >= self._max_depth:
                 self._total_dropped += 1
                 return False
             self._items.append(request)
@@ -55,6 +73,60 @@ class RequestQueue:
                 if not self._not_empty.wait(timeout=timeout):
                     return None
             return self._items.popleft()
+
+    def get_batch(self, max_size: int, timeout: Optional[float] = None,
+                  linger_s: float = 0.0) -> List[Request]:
+        """Pop up to ``max_size`` oldest requests as one batch (FIFO order).
+
+        Blocks like :meth:`get` for the *first* request (up to ``timeout``;
+        returns ``[]`` on timeout or closed+empty).  Once one request is
+        held, the batch fills greedily from whatever is already buffered;
+        if it is still short of ``max_size`` and ``linger_s > 0``, the
+        caller lingers — waiting up to ``linger_s`` (wall-clock) for more
+        arrivals — and returns the partial batch when the window expires or
+        the queue closes.  ``max_size=1`` is exactly :meth:`get` (the batch
+        is full at the first request, so the linger window never opens).
+        """
+        if max_size < 1:
+            raise ValueError("max_size must be >= 1")
+        with self._not_empty:
+            while not self._items:
+                if self._closed:
+                    return []
+                if not self._not_empty.wait(timeout=timeout):
+                    return []
+            batch = [self._items.popleft()]
+            while len(batch) < max_size and self._items:
+                batch.append(self._items.popleft())
+            if len(batch) < max_size and linger_s > 0.0:
+                deadline = time.monotonic() + linger_s
+                try:
+                    self._claimed += len(batch)
+                    while len(batch) < max_size and not self._closed:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._not_empty.wait(timeout=remaining)
+                        while len(batch) < max_size and self._items:
+                            batch.append(self._items.popleft())
+                            self._claimed += 1
+                finally:
+                    self._claimed -= len(batch)
+            return batch
+
+    def claimed(self) -> int:
+        """Requests held in a lingering ``get_batch``'s forming batch."""
+        with self._lock:
+            return self._claimed
+
+    def buffered(self) -> int:
+        """Requests buffered but not in service: waiting in the queue plus
+        claimed by a lingering batch.  This is the depth the AQM thresholds
+        are stated in — it matches the simulator, whose forming batches stay
+        in its waiting list.  Equals :meth:`depth` whenever no worker is
+        mid-linger (in particular always for unbatched pools)."""
+        with self._lock:
+            return len(self._items) + self._claimed
 
     def depth(self) -> int:
         with self._lock:

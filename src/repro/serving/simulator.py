@@ -16,12 +16,30 @@ bit-for-bit) with:
   - optional per-server config pinning (heterogeneous pools): a static
     ``assignment`` vector or a dynamic
     :class:`repro.core.elastico.ElasticoMixController` that repins one
-    server per switch event.
+    server per switch event,
+  - optional in-worker batching (``max_batch_size``, ``batch_timeout_s``):
+    a free server drains up to B buffered requests as one batch; a short
+    batch *lingers* up to the batch timeout for arrivals to fill it — the
+    same dequeue-up-to-B / linger-window rules the threaded
+    :class:`repro.serving.executor.WorkerPool` implements.  One detail is
+    necessarily a deterministic idealization: the threaded pool lets every
+    free worker linger concurrently and arrivals land with whichever
+    lingering/blocked worker the condition variable wakes (a thread race),
+    while the simulator holds ONE forming batch at a time (the lowest free
+    server's) that absorbs all arrivals — a fixed resolution of that race,
+    so agreement with the threaded runtime is at the level of batch caps,
+    linger windows, and buffered-depth accounting, not per-thread
+    interleavings.  Batch service time scales the per-request draw by the
+    measured amortization law S(b) / S(1)
+    (:class:`repro.core.pareto.BatchProfile`; without profiles the
+    fallback S(b) = b * S(1) makes batching service-neutral).
 
 Requests are dispatched to the lowest-numbered free server, so per-server
 utilization (``SimulationResult.per_server_busy_s``) is deterministic too.
 Deterministic given seeds, which is what lets EXPERIMENTS.md reproduce the
-paper's Figures 5-7 bit-for-bit across runs.
+paper's Figures 5-7 bit-for-bit across runs; ``max_batch_size=1`` (the
+default) draws service times in the exact pre-batching order and
+reproduces the unbatched schedule bit-for-bit.
 """
 
 from __future__ import annotations
@@ -33,6 +51,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.elastico import ElasticoController, ElasticoMixController
+from ..core.pareto import BatchProfile
 from .workload import RateFn, generate_arrivals
 
 ServiceSampler = Callable[[int, random.Random], float]
@@ -97,6 +116,7 @@ class CompletedRequest:
     completion_s: float
     config_index: int
     server_id: int = 0
+    batch_size: int = 1   # size of the batch this request was served in
 
     @property
     def latency_s(self) -> float:
@@ -120,6 +140,13 @@ class SimulationResult:
     # empty when the pool ran homogeneously.
     assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = field(
         default_factory=list)
+    num_batches: int = 0        # dispatches; == len(completed) when unbatched
+
+    def mean_batch_size(self) -> float:
+        """Realized requests per dispatch; 1.0 for unbatched runs."""
+        if self.num_batches == 0:
+            return 1.0
+        return len(self.completed) / self.num_batches
 
     def per_server_utilization(self) -> List[float]:
         """Busy fraction of each server over the horizon (index = server id).
@@ -183,6 +210,24 @@ class ServingSimulator:
     simulator and reproduces ``static_index`` runs exactly (same seeds ->
     same completions: service times are drawn per dispatch in the same
     order).
+
+    In-worker batching (beyond-paper): ``max_batch_size = B > 1`` lets a
+    free server take up to B buffered requests as one batch, whose service
+    time is the per-request draw scaled by the config's batch-amortization
+    factor S(b)/S(1) (``batch_profiles``; fallback S(b) = b * S(1)).
+    ``batch_profiles`` must be indexed by the same config-index space as
+    ``service_sampler`` — one entry per config index the controller (or
+    ``static_index`` / ``assignment``) can emit.  Note that controllers
+    emit *admitted-ladder* indices: if ``derive_policies`` excluded
+    SLO-infeasible configs from the front, build the sampler and
+    ``batch_profiles`` from the admitted ladder, not the raw front.  When
+    fewer than B requests are buffered and ``batch_timeout_s > 0``, the
+    forming batch *lingers*: a dispatch event fires at the timeout — or
+    immediately once arrivals fill the batch — mirroring the threaded
+    pool's ``RequestQueue.get_batch`` linger.  Every member of a batch
+    shares the batch's start/completion times.  ``max_batch_size=1``
+    reproduces the unbatched schedule bit-for-bit (identical rng sequence
+    and event order; no linger events are ever scheduled).
     """
 
     service_sampler: ServiceSampler
@@ -193,10 +238,17 @@ class ServingSimulator:
     seed: int = 0
     num_servers: int = 1
     assignment: Optional[Sequence[int]] = None
+    max_batch_size: int = 1
+    batch_timeout_s: float = 0.0
+    batch_profiles: Optional[Sequence[BatchProfile]] = None
 
     def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
         if self.num_servers < 1:
             raise ValueError("num_servers must be >= 1")
+        if self.max_batch_size < 1:
+            raise ValueError("max_batch_size must be >= 1")
+        if self.batch_timeout_s < 0:
+            raise ValueError("batch_timeout_s must be >= 0")
         rng = random.Random(self.seed)
         ctrl = self.controller
         if ctrl is not None:
@@ -251,6 +303,28 @@ class ServingSimulator:
         completed: List[CompletedRequest] = []
         timeline: List[Tuple[float, int]] = [(0.0, active)]
         depth_samples: List[Tuple[float, int]] = []
+        num_batches = 0
+
+        # -- in-worker batching state ------------------------------------------
+        B = self.max_batch_size
+        linger_s = self.batch_timeout_s
+        # one forming batch lingers at a time (the lowest free server's);
+        # the token invalidates a scheduled linger event once its batch is
+        # dispatched early (filled by arrivals) or superseded.
+        linger_pending = False
+        linger_token = 0
+
+        def batch_service_time(cfg: int, b: int) -> float:
+            # one rng draw per dispatch, same order as the unbatched
+            # simulator; b == 1 returns the raw draw so B = 1 runs are
+            # bit-for-bit identical to the pre-batching event loop.
+            draw = self.service_sampler(cfg, rng)
+            if b == 1:
+                return draw
+            if self.batch_profiles is not None:
+                law = self.batch_profiles[cfg]
+                return draw * (law.service_time(b) / law.service_time(1))
+            return draw * b   # unprofiled: batching is service-neutral
 
         def queue_depth() -> int:
             # Elastico keys off the *buffered* queue depth (paper §III-B "a
@@ -276,30 +350,55 @@ class ServingSimulator:
                     assignment_timeline.append((now, tuple(assign)))
                 timeline.append((now, active))
 
-        def start_next(now: float) -> None:
+        def start_next(now: float, flush: bool = False) -> None:
             # dispatch as many buffered requests as there are free servers;
             # lowest-numbered server first keeps the schedule deterministic
             # (and, under a heterogeneous pinning sorted fastest-first, lets
-            # the faster servers absorb the larger share of the load).
-            nonlocal order
+            # the faster servers absorb the larger share of the load).  With
+            # batching, each dispatch takes up to B requests; a short batch
+            # lingers until the timeout (``flush=True`` dispatches it) or
+            # until arrivals fill it.
+            nonlocal order, num_batches, linger_pending, linger_token
             while free_servers and waiting:
+                avail = len(waiting)
+                if avail < B and not flush and linger_s > 0.0:
+                    # hold the short batch open; dispatch at the timeout or
+                    # when the backlog reaches a full batch.
+                    if not linger_pending:
+                        linger_pending = True
+                        linger_token += 1
+                        heapq.heappush(
+                            events, (now + linger_s, order, "linger",
+                                     linger_token))
+                        order += 1
+                    return
+                b = min(B, avail)
                 server = heapq.heappop(free_servers)
-                rid = waiting.pop(0)
+                batch = [waiting.pop(0) for _ in range(b)]
+                if linger_pending:
+                    # whatever was lingering just dispatched (filled or
+                    # flushed); invalidate the scheduled timeout event.
+                    linger_pending = False
+                    linger_token += 1
                 start = max(now, switch_ready_s) if now < switch_ready_s else now
                 cfg = active if assign is None else assign[server]
-                svc = self.service_sampler(cfg, rng)
+                svc = batch_service_time(cfg, b)
                 comp = start + svc
                 busy_s[server] += comp - start
-                completed.append(CompletedRequest(
-                    request_id=rid,
-                    arrival_s=arrival_time[rid],
-                    start_s=start,
-                    completion_s=comp,
-                    config_index=cfg,
-                    server_id=server,
-                ))
+                num_batches += 1
+                for rid in batch:
+                    completed.append(CompletedRequest(
+                        request_id=rid,
+                        arrival_s=arrival_time[rid],
+                        start_s=start,
+                        completion_s=comp,
+                        config_index=cfg,
+                        server_id=server,
+                        batch_size=b,
+                    ))
                 heapq.heappush(events, (comp, order, "completion", server))
                 order += 1
+                flush = False   # the expired window covered one batch only
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -313,6 +412,12 @@ class ServingSimulator:
                 heapq.heappush(free_servers, int(payload))  # type: ignore[arg-type]
                 start_next(now)
                 observe(now)
+            elif kind == "linger":
+                if linger_pending and payload == linger_token:
+                    linger_pending = False
+                    start_next(now, flush=True)
+                    observe(now)
+                # else: stale timeout for a batch that already dispatched
             else:  # control tick
                 observe(now)
                 start_next(now)
@@ -327,4 +432,5 @@ class ServingSimulator:
             num_servers=self.num_servers,
             per_server_busy_s=busy_s,
             assignment_timeline=assignment_timeline,
+            num_batches=num_batches,
         )

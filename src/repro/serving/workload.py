@@ -1,15 +1,18 @@
 """Workload generators for serving experiments (paper §VI-C).
 
-Arrival processes are Poisson with a time-varying rate function (the AQM
-assumes Poisson arrivals; the evaluation stresses the controller with two
-rate patterns):
+Arrival processes are Poisson with a time-varying rate function.  The AQM
+assumes Poisson arrivals whatever the serving substrate behind the queue —
+the paper's single M/G/1 server, a c-worker M/G/c pool, a heterogeneous
+per-worker mix, or a batching pool — so every trace generated here replays
+unchanged against any of them (and against both the discrete-event
+simulator and the threaded engine).  The paper's two stress patterns:
 
 - **Spike**: sustained 4x load increase during the middle third of the run.
 - **Bursty**: random short 2-5x bursts lasting 5-15 s throughout the run.
 
 Base rate 1.5 QPS, 180 s duration — the paper's setup, kept as defaults.
 
-Beyond-paper patterns sized for multi-server (M/G/c) runs:
+Beyond-paper patterns sized to stress pool- and batch-level capacity:
 
 - **Flash crowd**: a near-instant ramp to ``peak_factor`` x base (default
   10x), a short hold, and a symmetric decay — the load shape a viral link
@@ -18,8 +21,10 @@ Beyond-paper patterns sized for multi-server (M/G/c) runs:
 - **Sustained overload**: after a warmup at a fraction of one server's
   capacity, the rate steps to ``overload_factor`` x the *single-server*
   capacity for the rest of the run.  With overload_factor between 1 and c
-  the trace overloads small pools while staying stable for larger ones,
-  which is exactly the regime the multi-server benchmark compares.
+  the trace overloads small pools while staying stable for larger ones —
+  and past c, only pools that batch (raising per-worker capacity toward
+  ``B / S(B)``) stay ahead of it, the regime
+  ``benchmarks/multi_server_bench.py`` compares.
 """
 
 from __future__ import annotations
@@ -117,11 +122,14 @@ def sustained_overload_pattern(capacity_qps: float, *,
                                warmup_fraction: float = 0.5) -> RateFn:
     """Sustained overload relative to *one* server's capacity.
 
-    ``capacity_qps`` is 1 / s-bar of the serving configuration (the M/G/1
-    stability limit).  The rate starts at ``warmup_fraction`` x capacity,
-    then steps to ``overload_factor`` x capacity and stays there: any pool
-    with c <= overload_factor servers is unstable for the rest of the run,
-    any pool with c > overload_factor drains it.
+    ``capacity_qps`` is 1 / s-bar of the serving configuration (the
+    single-server, unbatched stability limit).  The rate starts at
+    ``warmup_fraction`` x capacity, then steps to ``overload_factor`` x
+    capacity and stays there: any unbatched pool with c <= overload_factor
+    servers is unstable for the rest of the run, any pool with
+    c > overload_factor drains it — and a pool whose workers batch raises
+    its effective c by the amortization factor b * S(1) / S(b), which is
+    how the batching benchmark survives overloads past its worker count.
     """
     if capacity_qps <= 0:
         raise ValueError("capacity must be positive")

@@ -12,12 +12,18 @@ reference class against the working tree:
 - **repo paths** (``src/repro/core/aqm.py``, ``docs/queueing.md``): must
   exist relative to the repo root;
 - **CLI flags** (``--check-docs``): the literal flag string must appear in
-  some ``*.py`` under ``benchmarks/``, ``examples/``, or ``src/``.
+  some ``*.py`` under ``benchmarks/``, ``examples/``, or ``src/``;
+- **relative markdown links** (``[queueing model](queueing.md)``): the
+  target, resolved against the *linking document's* directory, must exist
+  (external ``http(s)://``/``mailto:`` targets and same-document
+  ``#anchor`` links are skipped; a ``path#anchor`` target is checked for
+  the path part).  Broken links between ``docs/*.md`` files used to pass
+  silently — inline-code spans only cover backticked references.
 
 Fenced code blocks are skipped (shell snippets legitimately mention
-transient names); only inline backtick spans are checked.  Anything that
-matches none of the three reference classes is ignored, so prose can use
-backticks for emphasis (``c = 1``, ``N_k(up)``) freely.
+transient names); only inline backtick spans and markdown links are
+checked.  Anything that matches none of the reference classes is ignored,
+so prose can use backticks for emphasis (``c = 1``, ``N_k(up)``) freely.
 
 Run via ``tests/test_docs.py`` (tier-1) or
 ``PYTHONPATH=src python -m benchmarks.run --check-docs``.
@@ -35,6 +41,8 @@ _INLINE_RE = re.compile(r"`([^`\n]+)`")
 _DOTTED_RE = re.compile(r"^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$")
 _PATH_RE = re.compile(r"^[\w.\-/]+\.(py|md|ini|txt|json)$")
 _FLAG_RE = re.compile(r"^--[a-z][a-z0-9-]*$")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+_EXTERNAL_RE = re.compile(r"^[a-z][a-z0-9+.-]*:")   # http:, https:, mailto:, ...
 
 
 def repo_root() -> Path:
@@ -104,8 +112,47 @@ def _flag_exists(flag: str, root: Path) -> bool:
     return False
 
 
+def extract_links(text: str) -> List[str]:
+    """Markdown link targets outside fenced blocks, deduplicated in order."""
+    stripped = _FENCE_RE.sub("", text)
+    seen: List[str] = []
+    for m in _LINK_RE.finditer(stripped):
+        target = m.group(1).strip()
+        if target and target not in seen:
+            seen.append(target)
+    return seen
+
+
+def check_links(text: str, *, source: str = "<doc>",
+                base_dir: Optional[Path] = None,
+                root: Optional[Path] = None) -> List[str]:
+    """Validate relative markdown links against the working tree.
+
+    ``base_dir`` is the directory the linking document lives in (relative
+    targets resolve against it, matching how GitHub renders them); defaults
+    to the repo root.  External schemes and pure-anchor links are skipped.
+    """
+    root = root or repo_root()
+    base = base_dir or root
+    problems: List[str] = []
+    for target in extract_links(text):
+        if _EXTERNAL_RE.match(target) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (root / path.lstrip("/")) if target.startswith("/") \
+            else (base / path)
+        if not resolved.exists():
+            problems.append(
+                f"{source}: broken markdown link `{target}` "
+                f"(resolved to {resolved})")
+    return problems
+
+
 def check_text(text: str, *, source: str = "<doc>",
-               root: Optional[Path] = None) -> List[str]:
+               root: Optional[Path] = None,
+               base_dir: Optional[Path] = None) -> List[str]:
     """Check one document's references; returns human-readable problems."""
     root = root or repo_root()
     problems: List[str] = []
@@ -123,6 +170,8 @@ def check_text(text: str, *, source: str = "<doc>",
                 problems.append(
                     f"{source}: CLI flag `{tok}` not found in any "
                     "benchmarks/examples/src python file")
+    problems.extend(
+        check_links(text, source=source, base_dir=base_dir, root=root))
     return problems
 
 
@@ -136,7 +185,7 @@ def check_docs(root: Optional[Path] = None) -> List[str]:
     for f in files:
         problems.extend(
             check_text(f.read_text(), source=str(f.relative_to(root)),
-                       root=root))
+                       root=root, base_dir=f.parent))
     return problems
 
 

@@ -1,0 +1,733 @@
+"""In-worker batching: the alpha + beta * b service law, batch-aware
+thresholds, linger semantics, and the max_batch_size=1 golden equivalences
+against the PR-2 (unbatched) engine and simulator."""
+
+import threading
+import time
+
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    allen_cunneen_mean_wait,
+    batch_expected_wait,
+    batch_mean_wait,
+    derive_mix_policies,
+    derive_policies,
+    expected_wait,
+    max_sustainable_rate,
+)
+from repro.core.elastico import ElasticoController, ElasticoMixController
+from repro.core.pareto import (
+    BatchProfile,
+    LatencyProfile,
+    fit_batch_profile,
+)
+from repro.core.planner import Planner
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import WorkerPool, WorkflowExecutor
+from repro.serving.queue import RequestQueue
+from repro.serving.simulator import (
+    ServingSimulator,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    Request,
+    constant_rate,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+# alpha-dominated amortization: S(1) = s-bar, S(8) = 3.8 s-bar for 8 requests
+BATCH_PROFILES = [BatchProfile(alpha=0.6 * m, beta=0.4 * m) for m in MEANS]
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+# -- BatchProfile / fit --------------------------------------------------------
+
+
+def test_batch_profile_service_law():
+    bp = BatchProfile(alpha=0.06, beta=0.04)
+    assert bp.service_time(1) == pytest.approx(0.10)
+    assert bp.service_time(8) == pytest.approx(0.06 + 0.32)
+    assert bp.per_request_time(8) < bp.per_request_time(1)
+    assert bp.speedup(8) == pytest.approx(8 * 0.10 / 0.38)
+    with pytest.raises(ValueError):
+        bp.service_time(0)
+    with pytest.raises(ValueError):
+        BatchProfile(alpha=-0.1, beta=0.2)
+    with pytest.raises(ValueError):
+        BatchProfile(alpha=0.0, beta=0.0)
+
+
+def test_fit_batch_profile_recovers_law():
+    bp = BatchProfile(alpha=0.06, beta=0.04)
+    sizes = [1, 2, 4, 8]
+    times = [bp.service_time(b) for b in sizes]
+    fit = fit_batch_profile(sizes, times)
+    assert fit.alpha == pytest.approx(0.06, abs=1e-9)
+    assert fit.beta == pytest.approx(0.04, abs=1e-9)
+
+
+def test_fit_batch_profile_degenerate_and_validation():
+    # one batch size observed: everything goes to the marginal term
+    fit = fit_batch_profile([4, 4], [0.4, 0.4])
+    assert fit.alpha == 0.0
+    assert fit.beta == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        fit_batch_profile([], [])
+    with pytest.raises(ValueError):
+        fit_batch_profile([1, 2], [0.1])
+    with pytest.raises(ValueError):
+        fit_batch_profile([0, 1], [0.1, 0.1])
+    with pytest.raises(ValueError):
+        fit_batch_profile([1, 2], [0.1, -0.1])
+
+
+def test_effective_batch_profile_fallback():
+    prof = LatencyProfile(mean=0.2, p95=0.3)
+    fb = prof.effective_batch_profile()
+    assert fb.alpha == 0.0 and fb.beta == 0.2
+    assert fb.service_time(1) == 0.2          # exact, not approx
+    measured = BatchProfile(alpha=0.1, beta=0.1)
+    prof2 = LatencyProfile(mean=0.2, p95=0.3, batch_profile=measured)
+    assert prof2.effective_batch_profile() is measured
+
+
+# -- batch_expected_wait -------------------------------------------------------
+
+
+@given(st.integers(0, 200), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_batch_expected_wait_collapses_at_b1(n, c):
+    """max_batch_size=1 must equal Eq. 8's expected_wait exactly for a
+    profile-derived law (S(1) = s-bar, no float drift)."""
+    bp = LatencyProfile(mean=0.2, p95=0.3).effective_batch_profile()
+    assert batch_expected_wait(n, bp, c, 1) == expected_wait(n, 0.2, c)
+
+
+def test_batch_expected_wait_depth_speeds_drain():
+    """With an amortizing law the *per-request* drain time falls as depth
+    unlocks larger batches: wait grows sublinearly until the cap."""
+    bp = BatchProfile(alpha=0.06, beta=0.04)
+    c, B = 4, 8
+    w1 = batch_expected_wait(c * 1, bp, c, B)      # singleton batches
+    w8 = batch_expected_wait(c * 8, bp, c, B)      # full batches
+    # 8x the depth but much less than 8x the wait
+    assert w8 < 8 * w1 * 0.6
+    # per-request wait is lower at full batch
+    assert w8 / (c * 8) < w1 / (c * 1)
+    assert batch_expected_wait(0, bp, c, B) == 0.0
+    with pytest.raises(ValueError):
+        batch_expected_wait(-1, bp, c, B)
+    with pytest.raises(ValueError):
+        batch_expected_wait(1, bp, 0, B)
+    with pytest.raises(ValueError):
+        batch_expected_wait(1, bp, c, 0)
+
+
+# -- batch_mean_wait -----------------------------------------------------------
+
+
+@given(st.integers(1, 8), st.floats(0.05, 0.95), st.floats(0.0, 4.0))
+@settings(max_examples=40, deadline=None)
+def test_batch_mean_wait_collapses_to_allen_cunneen(c, rho, scv):
+    """The satellite criterion: B = 1 must reproduce allen_cunneen_mean_wait
+    bit-for-bit, for any SCV (and hence Erlang-C at SCV = 1)."""
+    bp = BatchProfile(alpha=0.0, beta=0.2)
+    lam = rho * c / 0.2
+    assert batch_mean_wait(c, lam, bp, max_batch_size=1, scv_service=scv) == \
+        allen_cunneen_mean_wait(c, lam, 0.2, scv_service=scv)
+
+
+def test_batch_mean_wait_stabilizes_overload():
+    """An arrival rate that saturates the unbatched pool is finite under
+    batching — the throughput headline in analytic form."""
+    bp = BATCH_PROFILES[0]                      # S(1)=0.1, S(8)=0.38
+    c = 4
+    lam = 60.0                                  # > c/S(1) = 40 qps
+    assert allen_cunneen_mean_wait(c, lam, bp.service_time(1)) == float("inf")
+    w = batch_mean_wait(c, lam, bp, max_batch_size=8)
+    assert w < float("inf")
+    # beyond full-batch capacity c*B/S(B) = 84.2 qps: unstable again
+    assert batch_mean_wait(c, 90.0, bp, max_batch_size=8) == float("inf")
+
+
+def test_batch_mean_wait_forming_delay_bounded_by_linger():
+    bp = BATCH_PROFILES[0]
+    c, lam = 4, 2.0                             # light load: b_eq = 1
+    base = batch_mean_wait(c, lam, bp, max_batch_size=8)
+    lingered = batch_mean_wait(c, lam, bp, max_batch_size=8,
+                               batch_timeout_s=0.05)
+    # forming term = min(0.05, (8-1)/(2*2)) = 0.05 at this light rate
+    assert lingered == pytest.approx(base + 0.05)
+    # at high (still stable) rates the fill time, not the timeout, binds
+    lam = 80.0                                  # < c*B/S(B) = 84.2 qps
+    hi = batch_mean_wait(c, lam, bp, max_batch_size=8, batch_timeout_s=10.0)
+    assert hi - batch_mean_wait(c, lam, bp, max_batch_size=8) == \
+        pytest.approx((8 - 1) / (2 * lam))
+    assert batch_mean_wait(c, 0.0, bp, max_batch_size=8) == 0.0
+    with pytest.raises(ValueError):
+        batch_mean_wait(c, 1.0, bp, max_batch_size=0)
+    with pytest.raises(ValueError):
+        batch_mean_wait(c, 1.0, bp, max_batch_size=2, batch_timeout_s=-1.0)
+
+
+def test_max_sustainable_rate_scales_with_batch():
+    pol = derive_policies(ladder_front(), slo_p95_s=1.0).policies[0]
+    base = max_sustainable_rate(pol, num_servers=4)
+    assert base == pytest.approx(4 / MEANS[0])
+    # unmeasured batch law: batching buys nothing
+    assert max_sustainable_rate(pol, num_servers=4, max_batch_size=8) == \
+        pytest.approx(base)
+
+
+# -- batch-aware thresholds ----------------------------------------------------
+
+
+@given(st.integers(1, 8), st.floats(0.7, 3.0))
+@settings(max_examples=30, deadline=None)
+def test_derive_policies_b1_is_bit_for_bit(c, slo):
+    """max_batch_size=1 must produce the identical table (same floats, same
+    ints) as the unbatched derivation."""
+    a = derive_policies(ladder_front(), slo_p95_s=slo, num_servers=c)
+    b = derive_policies(ladder_front(), slo_p95_s=slo, num_servers=c,
+                        max_batch_size=1, batch_profiles=BATCH_PROFILES)
+    assert a.policies == b.policies
+    assert b.max_batch_size == 1
+
+
+def test_batched_thresholds_shift_outward():
+    unb = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=4)
+    bat = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=4,
+                          max_batch_size=8, batch_profiles=BATCH_PROFILES)
+    assert bat.max_batch_size == 8
+    for u, b in zip(unb.policies, bat.policies):
+        assert b.upscale_threshold >= u.upscale_threshold
+        if b.downscale_threshold is not None:
+            assert b.downscale_threshold >= u.downscale_threshold
+    # the fast rung (large unbatched threshold -> full-batch regime) shifts
+    # strictly and substantially
+    assert bat.policies[0].upscale_threshold > \
+        1.5 * unb.policies[0].upscale_threshold
+
+
+def test_batched_thresholds_neutral_without_amortization():
+    """No measured batch profile -> no-amortization fallback -> identical
+    integer thresholds (the model never invents amortization)."""
+    unb = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=4)
+    bat = derive_policies(ladder_front(), slo_p95_s=1.0, num_servers=4,
+                          max_batch_size=8)
+    for u, b in zip(unb.policies, bat.policies):
+        assert b.upscale_threshold == u.upscale_threshold
+        assert b.downscale_threshold == u.downscale_threshold
+
+
+def test_derive_policies_batch_validation():
+    with pytest.raises(ValueError):
+        derive_policies(ladder_front(), slo_p95_s=1.0, max_batch_size=0)
+    with pytest.raises(ValueError):
+        derive_policies(ladder_front(), slo_p95_s=1.0, max_batch_size=2,
+                        batch_profiles=BATCH_PROFILES[:1])
+
+
+def test_batched_threshold_region_is_downward_closed():
+    """An upscale threshold must guarantee every depth at or below it: with
+    an extreme alpha-dominated law the batch wait is non-monotone (depth 2
+    at c=2 drains slower than depth 3), and the threshold must stop at the
+    last depth below the first unsafe one rather than skipping past it."""
+    from repro.core.aqm import _batch_drain_threshold
+    bp = BatchProfile(alpha=1.0, beta=0.01)
+    c, B, budget = 2, 2, 0.8
+    t = _batch_drain_threshold(budget, bp, c, B)
+    for n in range(t + 1):
+        assert batch_expected_wait(n, bp, c, B) <= budget
+    # ...and the threshold is exactly the last depth of the safe prefix
+    assert batch_expected_wait(t + 1, bp, c, B) > budget
+
+
+def test_max_sustainable_rate_honors_override():
+    pol = derive_policies(ladder_front(), slo_p95_s=1.0).policies[0]
+    bp = BATCH_PROFILES[0]
+    got = max_sustainable_rate(pol, num_servers=4, max_batch_size=8,
+                               batch_profile=bp)
+    assert got == pytest.approx(4 * 8 / bp.service_time(8))
+    assert got > max_sustainable_rate(pol, num_servers=4, max_batch_size=8)
+
+
+@given(st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_derive_mix_policies_b1_is_bit_for_bit(c):
+    a = derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=c)
+    b = derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=c,
+                            max_batch_size=1, batch_profiles=BATCH_PROFILES)
+    assert a.policies == b.policies
+
+
+def test_mix_batched_thresholds_shift_outward():
+    unb = derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=4)
+    bat = derive_mix_policies(ladder_front(), slo_p95_s=1.0, num_servers=4,
+                              max_batch_size=8, batch_profiles=BATCH_PROFILES)
+    assert bat.max_batch_size == 8
+    for u, b in zip(unb.policies, bat.policies):
+        assert b.assignment == u.assignment
+        assert b.upscale_threshold >= u.upscale_threshold
+    assert bat.policies[0].upscale_threshold > unb.policies[0].upscale_threshold
+
+
+# -- planner integration -------------------------------------------------------
+
+
+def test_planner_measures_batch_profile_and_batch_thresholds():
+    base = BatchProfile(alpha=0.12, beta=0.08)   # S(1) = 0.2
+
+    def profiler(config, n):
+        return [0.2] * n
+
+    def batch_profiler(config, b, n):
+        return [base.service_time(b)] * n
+
+    plan_unb = Planner(profiler=profiler, num_servers=4).plan(
+        {("cfg",): 0.9}, slo_p95_s=1.0)
+    plan_bat = Planner(profiler=profiler, num_servers=4, max_batch_size=8,
+                       batch_profiler=batch_profiler).plan(
+        {("cfg",): 0.9}, slo_p95_s=1.0)
+    prof = plan_bat.front[0].profile
+    assert prof.batch_profile is not None
+    assert prof.batch_profile.alpha == pytest.approx(0.12, abs=1e-9)
+    assert prof.batch_profile.beta == pytest.approx(0.08, abs=1e-9)
+    assert plan_bat.table.max_batch_size == 8
+    assert plan_bat.table.policies[0].upscale_threshold > \
+        plan_unb.table.policies[0].upscale_threshold
+    assert "batching B = 8" in plan_bat.describe()
+    assert "batching" not in plan_unb.describe()
+
+
+# -- queue.get_batch -----------------------------------------------------------
+
+
+def _req(i):
+    return Request(request_id=i, arrival_s=0.0)
+
+
+def test_get_batch_equals_get_at_size_one():
+    q = RequestQueue()
+    for i in range(3):
+        q.put(_req(i))
+    assert [r.request_id for r in q.get_batch(1)] == [0]
+    assert q.get().request_id == 1
+    assert [r.request_id for r in q.get_batch(1, timeout=0.01,
+                                              linger_s=10.0)] == [2]
+    # empty queue: times out without lingering (batch never started)
+    t0 = time.monotonic()
+    assert q.get_batch(1, timeout=0.02, linger_s=10.0) == []
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_get_batch_drains_fifo_run_greedily():
+    q = RequestQueue()
+    for i in range(10):
+        q.put(_req(i))
+    assert [r.request_id for r in q.get_batch(4)] == [0, 1, 2, 3]
+    assert [r.request_id for r in q.get_batch(8)] == [4, 5, 6, 7, 8, 9]
+    with pytest.raises(ValueError):
+        q.get_batch(0)
+
+
+def test_get_batch_linger_fills_from_late_arrivals():
+    """A short batch held open by the linger window must absorb arrivals
+    that land inside it and dispatch the moment it fills."""
+    q = RequestQueue()
+    q.put(_req(0))
+    got = {}
+
+    def consumer():
+        got["batch"] = q.get_batch(3, timeout=1.0, linger_s=5.0)
+
+    t = threading.Thread(target=consumer)
+    t0 = time.monotonic()
+    t.start()
+    time.sleep(0.05)
+    q.put(_req(1))
+    q.put(_req(2))
+    t.join(timeout=5.0)
+    elapsed = time.monotonic() - t0
+    assert [r.request_id for r in got["batch"]] == [0, 1, 2]
+    assert elapsed < 2.0          # dispatched on fill, not at the 5 s window
+
+
+def test_get_batch_linger_timeout_returns_partial():
+    q = RequestQueue()
+    q.put(_req(0))
+    t0 = time.monotonic()
+    batch = q.get_batch(4, timeout=1.0, linger_s=0.05)
+    elapsed = time.monotonic() - t0
+    assert [r.request_id for r in batch] == [0]
+    assert 0.04 <= elapsed < 1.0  # waited the window, then gave up
+
+
+def test_get_batch_linger_claim_visible_as_buffered():
+    """Requests held by a lingering get_batch must stay visible: the queue's
+    buffered() counts them (matching the simulator's waiting list) even
+    though depth() no longer does — this is what the engine's controller
+    observations and drain loop key off."""
+    q = RequestQueue()
+    q.put(_req(0))
+    q.put(_req(1))
+    in_linger = threading.Event()
+    got = {}
+
+    def consumer():
+        in_linger.set()
+        got["batch"] = q.get_batch(8, timeout=1.0, linger_s=0.3)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    in_linger.wait()
+    time.sleep(0.1)                # worker is mid-linger holding both
+    assert q.depth() == 0          # popped out of the deque...
+    assert q.claimed() == 2        # ...but claimed by the forming batch
+    assert q.buffered() == 2
+    t.join(timeout=5.0)
+    assert len(got["batch"]) == 2
+    assert q.claimed() == 0 and q.buffered() == 0
+
+
+def test_bounded_queue_counts_claimed_toward_admission():
+    """Admission control must bound buffered (waiting + claimed), not just
+    the deque: a lingering batch vacating deque slots must not let the
+    bounded queue admit past max_depth."""
+    q = RequestQueue(max_depth=2)
+    q.put(_req(0))
+    q.put(_req(1))
+    in_linger = threading.Event()
+    got = {}
+
+    def consumer():
+        in_linger.set()
+        got["batch"] = q.get_batch(8, timeout=1.0, linger_s=0.3)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    in_linger.wait()
+    time.sleep(0.1)                   # both requests now claimed, deque empty
+    assert q.depth() == 0
+    assert q.buffered() == 2
+    assert not q.put(_req(2))         # still full: claimed occupy the bound
+    assert q.total_dropped == 1
+    t.join(timeout=5.0)
+    assert len(got["batch"]) == 2
+    assert q.put(_req(3))             # batch dispatched: capacity freed
+
+
+def test_get_batch_close_releases_lingerer():
+    q = RequestQueue()
+    q.put(_req(0))
+    got = {}
+
+    def consumer():
+        got["batch"] = q.get_batch(4, timeout=1.0, linger_s=30.0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert [r.request_id for r in got["batch"]] == [0]
+
+
+# -- executor.execute_batch ----------------------------------------------------
+
+
+def test_execute_batch_shares_timestamps_and_records_batch_size():
+    calls = []
+
+    def wf(config, payload):
+        calls.append(payload)
+        return payload * 2
+
+    ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=wf)
+    reqs = [Request(request_id=i, arrival_s=0.1 * i, payload=i)
+            for i in range(4)]
+    recs = ex.execute_batch(reqs, worker_id=1)
+    assert len(recs) == 4
+    assert calls == [0, 1, 2, 3]            # sequential fallback, in order
+    assert len({r.start_s for r in recs}) == 1
+    assert len({r.completion_s for r in recs}) == 1
+    for i, r in enumerate(recs):
+        assert r.batch_size == 4
+        assert r.result == 2 * i
+        assert r.worker_id == 1
+    assert ex.records == recs
+    with pytest.raises(ValueError):
+        ex.execute_batch([])
+
+
+def test_execute_batch_uses_vectorized_fn():
+    def wf(config, payload):                 # must NOT be called
+        raise AssertionError("scalar path used")
+
+    def batch_wf(config, payloads):
+        return [p + 100 for p in payloads]
+
+    ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=wf,
+                          batch_workflow_fn=batch_wf)
+    reqs = [Request(request_id=i, arrival_s=0.0, payload=i) for i in range(3)]
+    recs = ex.execute_batch(reqs)
+    assert [r.result for r in recs] == [100, 101, 102]
+
+    def bad_batch_wf(config, payloads):
+        return payloads[:-1]                 # wrong length
+
+    ex2 = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=wf,
+                           batch_workflow_fn=bad_batch_wf)
+    with pytest.raises(ValueError, match="results"):
+        ex2.execute_batch(reqs)
+    assert ex2.in_flight() == 0              # accounting restored on error
+
+
+def test_execute_batch_of_one_delegates_to_execute():
+    ex = WorkflowExecutor(configs=[("cfg", 0)],
+                          workflow_fn=lambda c, p: p)
+    recs = ex.execute_batch([Request(request_id=7, arrival_s=0.0, payload=9)])
+    assert len(recs) == 1
+    assert recs[0].batch_size == 1
+    assert recs[0].request_id == 7
+
+
+# -- worker pool / engine ------------------------------------------------------
+
+
+def sleep_workflow(config, payload):
+    time.sleep(0.003)
+    return payload
+
+
+def test_engine_b1_matches_pr2_engine_behavior():
+    """Golden equivalence for the threaded path: max_batch_size=1 must
+    behave exactly like the PR-2 engine — same FIFO completion order at
+    c=1, every record a singleton batch, no linger stalls."""
+    def run(**kw):
+        ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=sleep_workflow)
+        eng = ServingEngine(ex, num_workers=1, control_tick_s=0.01, **kw)
+        eng.start()
+        for i in range(30):
+            eng.submit(Request(request_id=i, arrival_s=0.0))
+        return eng.drain_and_stop()
+
+    plain = run()
+    b1 = run(max_batch_size=1, batch_timeout_s=0.5)
+    for rep in (plain, b1):
+        assert [r.request_id for r in rep.records] == list(range(30))
+        assert all(r.batch_size == 1 for r in rep.records)
+        assert rep.mean_batch_size == 1.0
+    assert b1.max_batch_size == 1
+    assert [r.request_id for r in b1.records] == \
+        [r.request_id for r in plain.records]
+
+
+def test_engine_batching_forms_batches_and_drains_all():
+    # a (never-switching) controller so the observe loop records snapshots
+    front = [synthetic_point(0.003, 0.005, 0.7, "fast"),
+             synthetic_point(0.008, 0.012, 0.9, "accurate")]
+    table = derive_policies(front, slo_p95_s=30.0,
+                            hysteresis=HysteresisSpec(downscale_cooldown_s=60.0))
+    ex = WorkflowExecutor(configs=[("cfg", 0), ("cfg", 1)],
+                          workflow_fn=sleep_workflow)
+    eng = ServingEngine(ex, controller=ElasticoController(table),
+                        num_workers=2, control_tick_s=0.01,
+                        max_batch_size=4, batch_timeout_s=0.02)
+    eng.start()
+    for i in range(100):
+        eng.submit(Request(request_id=i, arrival_s=0.0))
+    rep = eng.drain_and_stop()
+    assert len(rep.records) == 100
+    assert rep.total_requests == 100 and rep.dropped == 0
+    assert any(r.batch_size > 1 for r in rep.records)
+    assert rep.mean_batch_size > 1.0
+    assert rep.max_batch_size == 4
+    assert sum(rep.served_per_worker) == 100
+    # batch members share their dispatch timestamps
+    by_batch = {}
+    for r in rep.records:
+        by_batch.setdefault((r.worker_id, r.start_s), []).append(r)
+    for members in by_batch.values():
+        assert len({m.completion_s for m in members}) == 1
+        assert len({m.batch_size for m in members}) == 1
+        assert members[0].batch_size == len(members)
+    # monitor snapshots carry the realized batch size
+    assert any(s.batch_size is not None and s.batch_size >= 1.0
+               for s in eng.monitor.history())
+
+
+def test_engine_linger_does_not_lose_partial_batches():
+    """Drain must wait for a lingering worker's claimed-but-unexecuted
+    batch (pool.pending), or the last requests of a trace vanish."""
+    ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=sleep_workflow)
+    eng = ServingEngine(ex, num_workers=1, control_tick_s=0.01,
+                        max_batch_size=8, batch_timeout_s=0.2)
+    eng.start()
+    eng.submit(Request(request_id=0, arrival_s=0.0))
+    time.sleep(0.05)   # worker is now lingering with a claimed singleton
+    rep = eng.drain_and_stop()
+    assert len(rep.records) == 1
+    assert rep.records[0].request_id == 0
+
+
+def test_worker_pool_batch_validation():
+    q = RequestQueue()
+    ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=sleep_workflow)
+    with pytest.raises(ValueError):
+        WorkerPool(ex, q, c=1, max_batch_size=0)
+    with pytest.raises(ValueError):
+        WorkerPool(ex, q, c=1, batch_timeout_s=-0.1)
+    pool = WorkerPool(ex, q, c=2, max_batch_size=4)
+    assert pool.mean_batch_size() == 1.0       # before any dispatch
+    assert pool.pending() == 0
+
+
+# -- simulator: goldens and batching behavior ----------------------------------
+
+
+def test_simulator_b1_reproduces_pr2_schedule_bit_for_bit():
+    """The tentpole golden: max_batch_size=1 (with every batching knob set)
+    must reproduce the PR-2 simulator's schedule exactly — homogeneous,
+    static-mix, and controller-driven runs alike."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=2.5,
+                                   warmup_s=20.0), 120.0, seed=1)
+    table = derive_policies(ladder_front(), slo_p95_s=1.0,
+                            hysteresis=HysteresisSpec(downscale_cooldown_s=5.0),
+                            num_servers=4)
+    cases = [
+        dict(static_index=0),
+        dict(assignment=[0, 0, 1, 2]),
+        dict(controller=ElasticoController(table)),
+    ]
+    for kw in cases:
+        plain = ServingSimulator(sampler, seed=0, num_servers=4, **kw)
+        batched = ServingSimulator(sampler, seed=0, num_servers=4,
+                                   max_batch_size=1, batch_timeout_s=0.5,
+                                   batch_profiles=BATCH_PROFILES, **kw)
+        a = plain.run(arr, 120.0)
+        b = batched.run(arr, 120.0)
+        assert a.completed == b.completed
+        assert a.per_server_busy_s == b.per_server_busy_s
+        assert a.queue_depth_samples == b.queue_depth_samples
+        assert a.config_timeline == b.config_timeline
+        assert b.num_batches == len(b.completed)
+        assert b.mean_batch_size() == 1.0
+
+
+def test_simulator_batching_conserves_and_amortizes():
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=7.0,
+                                   warmup_s=10.0), 60.0, seed=1)
+    out = ServingSimulator(sampler, static_index=0, seed=0, num_servers=4,
+                           max_batch_size=8,
+                           batch_profiles=BATCH_PROFILES).run(arr, 60.0)
+    assert len(out.completed) == len(arr)
+    ids = [r.request_id for r in out.completed]
+    assert len(set(ids)) == len(ids)
+    assert all(1 <= r.batch_size <= 8 for r in out.completed)
+    assert out.mean_batch_size() > 2.0         # overload fills batches
+    # batching must beat the unbatched pool on this trace
+    unb = ServingSimulator(sampler, static_index=0, seed=0,
+                           num_servers=4).run(arr, 60.0)
+    ok = sum(1 for r in out.completed if r.latency_s <= 1.0) / len(arr)
+    ok_unb = sum(1 for r in unb.completed if r.latency_s <= 1.0) / len(arr)
+    assert ok >= 1.5 * ok_unb
+
+
+def test_simulator_linger_boundary_light_load():
+    """Light load + linger: singletons dispatch exactly at the linger
+    window (the boundary case), never earlier, never much later."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(constant_rate(0.5), 30.0, seed=2)
+    tau = 0.05
+    out = ServingSimulator(sampler, static_index=0, seed=0, num_servers=2,
+                           max_batch_size=4, batch_timeout_s=tau,
+                           batch_profiles=BATCH_PROFILES).run(arr, 30.0)
+    assert len(out.completed) == len(arr)
+    for r in out.completed:
+        if r.batch_size == 1:
+            assert r.start_s - r.arrival_s == pytest.approx(tau, abs=1e-9)
+
+
+def test_simulator_linger_zero_dispatches_greedily():
+    """tau = 0: no linger events, batches form only from backlog; under
+    light load every batch is a singleton dispatched immediately."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(constant_rate(0.5), 30.0, seed=2)
+    out = ServingSimulator(sampler, static_index=0, seed=0, num_servers=2,
+                           max_batch_size=4,
+                           batch_profiles=BATCH_PROFILES).run(arr, 30.0)
+    for r in out.completed:
+        if r.batch_size == 1:
+            assert r.start_s == pytest.approx(r.arrival_s, abs=1e-9)
+
+
+def test_simulator_linger_fill_dispatches_before_timeout():
+    """Arrivals that complete a forming batch dispatch it at the fill
+    moment, not at the timeout."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    # two arrivals 10 ms apart, linger window 10 s, B = 2: the batch must
+    # dispatch at t = 0.01 (fill), far before the window.
+    out = ServingSimulator(sampler, static_index=0, seed=0, num_servers=1,
+                           max_batch_size=2, batch_timeout_s=10.0,
+                           batch_profiles=BATCH_PROFILES).run([0.0, 0.01], 1.0)
+    assert len(out.completed) == 2
+    assert all(r.batch_size == 2 for r in out.completed)
+    assert all(r.start_s == pytest.approx(0.01, abs=1e-9)
+               for r in out.completed)
+
+
+def test_simulator_batch_validation():
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    with pytest.raises(ValueError):
+        ServingSimulator(sampler, max_batch_size=0).run([0.1], 1.0)
+    with pytest.raises(ValueError):
+        ServingSimulator(sampler, batch_timeout_s=-1.0).run([0.1], 1.0)
+
+
+def test_batched_elastico_holds_accuracy_longer_under_load():
+    """The threshold-shift payoff: with batch-aware thresholds and a
+    batched pool, Elastico serves overload at visibly higher goodput than
+    the unbatched pool with its own honest thresholds."""
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=7.0,
+                                   warmup_s=20.0), 120.0, seed=1)
+    hyst = HysteresisSpec(downscale_cooldown_s=5.0)
+    unb_table = derive_policies(ladder_front(), slo_p95_s=1.0,
+                                hysteresis=hyst, num_servers=4)
+    bat_table = derive_policies(ladder_front(), slo_p95_s=1.0,
+                                hysteresis=hyst, num_servers=4,
+                                max_batch_size=8,
+                                batch_profiles=BATCH_PROFILES)
+    unb = ServingSimulator(sampler, controller=ElasticoController(unb_table),
+                           seed=0, num_servers=4).run(arr, 120.0)
+    bat = ServingSimulator(sampler, controller=ElasticoController(bat_table),
+                           seed=0, num_servers=4, max_batch_size=8,
+                           batch_timeout_s=0.005,
+                           batch_profiles=BATCH_PROFILES).run(arr, 120.0)
+    good_unb = sum(1 for r in unb.completed if r.latency_s <= 1.0) / len(arr)
+    good_bat = sum(1 for r in bat.completed if r.latency_s <= 1.0) / len(arr)
+    assert good_bat >= 1.5 * good_unb
+    assert bat.mean_batch_size() > 1.5

@@ -1,0 +1,67 @@
+"""Tier-1 benchmark hygiene: every benchmarks/*.py module must import.
+
+Benchmarks bit-rot silently — they only run when someone reproduces a
+figure, so a refactor that renames a symbol they import can sit broken for
+PRs at a time.  Importing every module (and checking the driver's registry
+is complete) catches that class of rot at tier-1 cost.  Actually *running*
+the benchmarks stays out of tier-1; ``python -m benchmarks.run --smoke``
+runs each one at its smallest setting as the cheap execution gate.
+"""
+
+import importlib
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+BENCH_DIR = REPO / "benchmarks"
+MODULES = sorted(p.stem for p in BENCH_DIR.glob("*.py")
+                 if p.stem != "__init__")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _benchmarks_on_path():
+    """benchmarks/ is a top-level package next to src/; tier-1 runs with
+    PYTHONPATH=src, so the repo root must be importable too."""
+    added = False
+    if str(REPO) not in sys.path:
+        sys.path.insert(0, str(REPO))
+        added = True
+    yield
+    if added:
+        sys.path.remove(str(REPO))
+
+
+def test_every_benchmark_module_is_listed():
+    assert MODULES, "no benchmark modules found"
+    assert "run" in MODULES and "multi_server_bench" in MODULES
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_benchmark_module_imports(name):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    assert mod is not None
+
+
+def test_driver_registry_covers_every_bench_module():
+    """Every non-driver benchmark module must be wired into benchmarks.run's
+    registry (a new bench that is never runnable from the driver is rot of
+    another kind), and every registry entry must expose a callable run()."""
+    run = importlib.import_module("benchmarks.run")
+    registered = {m.__name__.rsplit(".", 1)[-1] for m in run.MODULES.values()}
+    helpers = {"run", "common", "render_report"}
+    assert registered == set(MODULES) - helpers
+    for name, mod in run.MODULES.items():
+        assert callable(run.BENCHES[name])
+        smoke = getattr(mod, "run_smoke", None)
+        if smoke is not None:
+            assert callable(smoke)
+
+
+def test_smoke_flag_is_wired():
+    run = importlib.import_module("benchmarks.run")
+    assert "--smoke" in run.__doc__
+    # the smallest-setting entry points the smoke gate relies on
+    msb = importlib.import_module("benchmarks.multi_server_bench")
+    assert callable(msb.run_smoke)

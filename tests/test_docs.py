@@ -12,8 +12,10 @@ import pytest
 
 from repro.tools.docscheck import (
     check_docs,
+    check_links,
     check_text,
     doc_files,
+    extract_links,
     extract_references,
     repo_root,
     resolve_dotted,
@@ -32,6 +34,7 @@ def test_required_documents_exist():
     assert "README.md" in names
     assert "docs/architecture.md" in names
     assert "docs/queueing.md" in names
+    assert "docs/batching.md" in names
 
 
 def test_extract_skips_fenced_blocks():
@@ -65,6 +68,43 @@ def test_check_text_flags_stale_references():
 def test_check_text_ignores_plain_prose_backticks():
     ok = "Set `c = 1` and watch `N_k(up)`; run `pytest -x` as usual."
     assert check_text(ok, source="synthetic") == []
+
+
+def test_extract_links_skips_fences_and_dedups():
+    text = (
+        "See [queueing](queueing.md) and [again](queueing.md).\n"
+        "```md\n[not a link](fenced.md)\n```\n"
+        "Plus [anchored](batching.md#section) and [ext](https://x.test/a).\n"
+    )
+    links = extract_links(text)
+    assert links == ["queueing.md", "batching.md#section", "https://x.test/a"]
+    assert "fenced.md" not in links
+
+
+def test_check_links_resolves_relative_to_doc_dir():
+    docs = ROOT / "docs"
+    ok = "[queueing model](queueing.md) and [batching](batching.md#top)"
+    assert check_links(ok, source="synthetic", base_dir=docs) == []
+    # the same targets are broken when resolved from the repo root — the
+    # exact class of bug that used to pass silently
+    assert len(check_links(ok, source="synthetic", base_dir=ROOT)) == 2
+
+
+def test_check_links_flags_broken_and_skips_external():
+    text = (
+        "[gone](no/such/file.md) [ext](https://example.test/x) "
+        "[mail](mailto:a@b.c) [anchor](#local-section) [root](/README.md)"
+    )
+    problems = check_links(text, source="synthetic", base_dir=ROOT / "docs")
+    assert len(problems) == 1
+    assert "no/such/file.md" in problems[0]
+
+
+def test_check_text_includes_link_validation():
+    bad = "A [broken link](missing-target.md) in prose."
+    problems = check_text(bad, source="synthetic", base_dir=ROOT / "docs")
+    assert len(problems) == 1
+    assert "broken markdown link" in problems[0]
 
 
 def test_repo_docs_have_no_stale_references():
