@@ -25,6 +25,19 @@ for its own runtime (``derive_policies(..., max_batch_size=B)``).  The
 headline checks the PR's acceptance criterion: batched goodput must be
 >= 1.5x unbatched goodput under sustained overload.
 
+Part 4 (PR 4): work stealing on per-worker backlogs at c = 4.  Arrivals
+are routed round-robin to per-worker queues (the static partition a
+sharded frontend produces) with a skewed pinning ``[0, 0, 2, 2]`` — two
+fast workers, two accurate ones — under a sustained overload the pool can
+absorb in aggregate but the partition cannot (the accurate workers' share
+alone overloads them).  Three disciplines run on the identical trace:
+static pinning without stealing, pinning with work stealing (idle workers
+pull from the globally deepest backlog at the
+``repro.core.aqm.steal_threshold`` depth, serving stolen work under their
+own pin), and the shared-queue ideal.  The headline checks the PR's
+acceptance criterion: stealing must beat static pinning on
+sustained-overload goodput.
+
 ``run_smoke()`` runs the same sweeps at the smallest useful setting
 (short horizon, pool sizes {1, 4}) for the ``--smoke`` CI gate.
 """
@@ -35,6 +48,7 @@ from repro.core.aqm import (
     HysteresisSpec,
     derive_mix_policies,
     derive_policies,
+    steal_threshold,
 )
 from repro.core.elastico import ElasticoController, ElasticoMixController
 from repro.core.pareto import BatchProfile, LatencyProfile, ParetoPoint
@@ -64,6 +78,13 @@ BATCH_OVERLOAD = 7.0  # x one server's fastest-rung capacity; > BATCH_C, so
 # the alpha-dominated shape of LLM serving (prefill/launch overhead shared
 # across the batch); full batches run ~2.1x more requests per second.
 BATCH_PROFILES = [BatchProfile(alpha=0.6 * m, beta=0.4 * m) for m in MEANS]
+STEAL_C = 4                   # pool size for the work-stealing comparison
+STEAL_ASSIGNMENT = (0, 0, 2, 2)   # skewed pinning: two fast, two accurate
+# 1.8x one server's fastest-rung capacity: the pool's aggregate drain
+# (2/s0 + 2/s2 = 24.4 qps) absorbs it, but a round-robin partition gives
+# each accurate worker (capacity 2.2 qps) a 4.5 qps share — only
+# rebalancing can save the SLO.
+STEAL_OVERLOAD = 1.8
 
 
 def _front():
@@ -210,6 +231,34 @@ def _run(duration_s: float, pool_sizes,
                 {"max_batch_size": kw.get("max_batch_size", 1),
                  "fast_rung_n_up": table.policies[0].upscale_threshold},
             ))
+
+        # -- part 4: work stealing on per-worker backlogs at c = STEAL_C ------
+        steal_arr = generate_arrivals(
+            sustained_overload_pattern(1.0 / MEANS[0],
+                                       overload_factor=STEAL_OVERLOAD,
+                                       warmup_s=20.0),
+            duration_s, seed=1,
+        )
+        n_steal = steal_threshold(_front(), STEAL_ASSIGNMENT, slo_p95_s=SLO_S)
+        for mode, kw in [
+            ("pinned-no-steal", dict(queue_discipline="per_worker")),
+            ("pinned-steal", dict(queue_discipline="per_worker", steal=True,
+                                  steal_threshold=n_steal)),
+            ("pinned-shared", {}),   # shared-queue ideal, same pinning
+        ]:
+            sim = ServingSimulator(
+                sampler, assignment=list(STEAL_ASSIGNMENT), seed=0,
+                num_servers=STEAL_C, **kw,
+            )
+            out = sim.run(steal_arr, duration_s)
+            total_completed += len(out.completed)
+            rows.append(_row(
+                f"steal-overload-{STEAL_OVERLOAD:g}x", mode, STEAL_C,
+                steal_arr, out, duration_s,
+                {"assignment": list(STEAL_ASSIGNMENT),
+                 "steal_threshold": n_steal,
+                 "stolen_batches": out.stolen_batches},
+            ))
     save_json(artifact, rows)
 
     by_key = {(r["pattern"], r["mode"], r["num_servers"]): r for r in rows
@@ -239,6 +288,13 @@ def _run(duration_s: float, pool_sizes,
     bat = by_key[(batch_pattern, "batched", BATCH_C)]
     batch_gain = bat["goodput"] / max(unb["goodput"], 1e-9)
 
+    # PR-4 acceptance check: work stealing vs static pinning on per-worker
+    # backlogs under sustained overload (steal must strictly improve).
+    steal_pattern = f"steal-overload-{STEAL_OVERLOAD:g}x"
+    pin = by_key[(steal_pattern, "pinned-no-steal", STEAL_C)]
+    stl = by_key[(steal_pattern, "pinned-steal", STEAL_C)]
+    shr = by_key[(steal_pattern, "pinned-shared", STEAL_C)]
+
     derived = (
         f"overload_compliance c{c_lo}={ov1:.3f} c{c_hi}={ov4:.3f} "
         f"(+{(ov4 - ov1) * 100:.1f}pts) "
@@ -259,6 +315,14 @@ def _run(duration_s: float, pool_sizes,
         f"({batch_gain:.2f}x, mean_bs={bat['mean_batch_size']:.2f}, "
         f"N_up[0] {unb['fast_rung_n_up']}->{bat['fast_rung_n_up']})"
         + ("" if batch_gain >= 1.5 else " [<1.5x: acceptance FAILED]")
+    )
+    derived += (
+        f" steal {list(STEAL_ASSIGNMENT)}@{STEAL_OVERLOAD:g}x: "
+        f"goodput pinned={pin['goodput']:.3f} -> steal={stl['goodput']:.3f} "
+        f"(shared ideal {shr['goodput']:.3f}, N_steal={stl['steal_threshold']}, "
+        f"{stl['stolen_batches']} stolen)"
+        + ("" if stl["goodput"] > pin["goodput"]
+           else " [steal <= pinned: acceptance FAILED]")
     )
     return {
         "name": "multi_server",

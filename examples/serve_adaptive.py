@@ -22,11 +22,29 @@ import time
 from repro.core.compass_v import CompassV
 from repro.core.elastico import ElasticoController
 from repro.core.planner import Planner
-from repro.serving.engine import ServingEngine, replay_workload
+from repro.serving.engine import EngineReport, ServingEngine, replay_workload
 from repro.serving.executor import WorkerPool, WorkflowExecutor
-from repro.serving.queue import RequestQueue
+from repro.serving.scheduler import Scheduler
 from repro.serving.workload import Request, bursty_pattern, generate_arrivals
 from repro.workflows.rag import RagWorkflow
+
+
+def _check_demo_api() -> None:
+    """Fail loudly (not silently drift) if the engine/scheduler API this
+    example demonstrates changes: every attribute the demo relies on is
+    resolved up front, so a rename aborts with a clear message instead of
+    a misleading mid-run failure."""
+    required = [
+        (ServingEngine, ["submit", "drain_and_stop", "start", "num_workers"]),
+        (Scheduler, ["offer", "poll", "observe", "buffered"]),
+        (WorkerPool, ["submit", "start", "stop", "mean_batch_size"]),
+        (EngineReport, ["slo_compliance", "goodput", "mean_accuracy"]),
+    ]
+    for obj, attrs in required:
+        for attr in attrs:
+            if not hasattr(obj, attr):
+                sys.exit(f"serve_adaptive demo is stale: {obj.__name__}.{attr} "
+                         "no longer exists — update the example")
 
 
 def main() -> None:
@@ -43,6 +61,7 @@ def main() -> None:
                     help="batch linger window in seconds (batch_timeout_s): "
                          "how long a worker holds a short batch open")
     args = ap.parse_args()
+    _check_demo_api()
 
     print("=== 1. preparing the live RAG workflow (training generators) ===")
     t0 = time.time()
@@ -95,13 +114,12 @@ def main() -> None:
     # burst through the same WorkerPool machinery the engine uses and target
     # ~50% of the throughput it actually achieved.
     warm = WorkflowExecutor(configs=configs, workflow_fn=wf_fn)
-    warm_queue = RequestQueue()
-    warm_pool = WorkerPool(warm, warm_queue, c=args.workers)
+    warm_pool = WorkerPool(warm, c=args.workers)
     n_warm = max(30, args.workers)
     t0 = time.time()
     warm_pool.start()
     for i in range(n_warm):
-        warm_queue.put(Request(request_id=i, arrival_s=0.0))
+        warm_pool.submit(Request(request_id=i, arrival_s=0.0))
     deadline = time.time() + 60.0
     while len(warm.records) < n_warm and time.time() < deadline:
         time.sleep(0.002)

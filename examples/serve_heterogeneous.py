@@ -1,36 +1,70 @@
-"""Heterogeneous worker pools: mixes, switching, and in-worker batching.
+"""Heterogeneous worker pools: mixes, switching, batching, and stealing.
 
     PYTHONPATH=src python examples/serve_heterogeneous.py [--servers 4]
                                                           [--max-batch 8]
 
 A fast, fully deterministic demo (discrete-event simulator, no model
-training) of the per-worker config-pinning runtime:
+training) of the per-worker config-pinning runtime — every policy below
+is one implementation, :class:`repro.serving.scheduler.Scheduler`, driven
+here under virtual time and by the threaded engine under wall-clock time:
 
 1. builds a synthetic three-rung Pareto ladder (fast/medium/accurate);
 2. derives homogeneous Eq. 10/13 thresholds (``derive_policies``) and the
    heterogeneous mix ladder with Allen-Cunneen M/G/c thresholds
-   (``derive_mix_policies``);
+   (``derive_mix_policies``), which also emits the steal / re-route
+   thresholds (see docs/scheduler.md);
 3. replays a flash-crowd trace against pools of the same size: static
    all-fast, homogeneous-switching Elastico, mix-shifting Elastico (one
    worker repinned per decision), and — with ``--max-batch > 1`` — a
    batching pool under batch-aware thresholds (an alpha-dominated
    ``alpha + beta*b`` service law; see docs/batching.md);
-4. prints per-policy SLO compliance / accuracy, the mix trajectory, and
+4. demonstrates **work stealing** on per-worker backlogs (a skewed static
+   pinning drowns its slow partition; stealing recovers the shared-queue
+   ideal) and **mix-aware admission** (a tight bound re-routes to the
+   all-fast mix before dropping);
+5. prints per-policy SLO compliance / accuracy, the mix trajectory, and
    the batching pool's realized mean batch size.
 """
 
 import argparse
+import sys
 
 from repro.core.aqm import (
     HysteresisSpec,
     derive_mix_policies,
     derive_policies,
     mix_mean_wait,
+    steal_threshold,
 )
 from repro.core.elastico import ElasticoController, ElasticoMixController
 from repro.core.pareto import BatchProfile, LatencyProfile, ParetoPoint
+from repro.serving.scheduler import Scheduler
 from repro.serving.simulator import ServingSimulator, lognormal_sampler_from_profile
-from repro.serving.workload import flash_crowd_pattern, generate_arrivals
+from repro.serving.workload import (
+    flash_crowd_pattern,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+
+def _check_demo_api() -> None:
+    """Fail loudly (not silently drift) if the simulator/scheduler API this
+    example demos changes: resolve every relied-upon attribute up front."""
+    required = [
+        (ServingSimulator, ["run"]),
+        (Scheduler, ["offer", "poll", "observe", "on_linger_expired"]),
+    ]
+    for obj, attrs in required:
+        for attr in attrs:
+            if not hasattr(obj, attr):
+                sys.exit(f"serve_heterogeneous demo is stale: "
+                         f"{obj.__name__}.{attr} no longer exists — update "
+                         "the example")
+    for fld in ("dropped", "rerouted", "stolen_batches"):
+        from repro.serving.simulator import SimulationResult
+        if fld not in SimulationResult.__dataclass_fields__:
+            sys.exit(f"serve_heterogeneous demo is stale: "
+                     f"SimulationResult.{fld} no longer exists")
 
 MEANS = [0.10, 0.25, 0.45]
 P95S = [0.14, 0.35, 0.63]
@@ -47,6 +81,7 @@ def main() -> None:
                     help="per-worker batch cap B for the batching pool "
                          "(1 disables the batching comparison)")
     args = ap.parse_args()
+    _check_demo_api()
     c = args.servers
 
     front = [
@@ -110,7 +145,6 @@ def main() -> None:
         for pol, unb in zip(batched_table.policies, table.policies):
             print(f"  [{pol.index}] N_up {unb.upscale_threshold:3d} -> "
                   f"{pol.upscale_threshold:3d}  (deeper queue drains faster)")
-        from repro.serving.workload import sustained_overload_pattern
         overload = generate_arrivals(
             sustained_overload_pattern(1.0 / MEANS[0], overload_factor=7.0,
                                        warmup_s=20.0), DURATION_S, seed=1)
@@ -132,6 +166,50 @@ def main() -> None:
             print(f"  {name:22s} goodput={ok / len(overload) * 100:5.1f}% "
                   f"accuracy={out.mean_accuracy(ACCS):.3f} "
                   f"p95={out.p95_latency() * 1e3:6.0f}ms{batch_note}")
+
+    # -- work stealing on per-worker backlogs ------------------------------
+    # A skewed pinning under partitioned (round-robin) routing: the slow
+    # workers' share alone overloads them while the fast workers idle.
+    # Stealing (idle worker pulls from the globally deepest backlog, at the
+    # aqm-derived threshold, serving stolen work under its OWN pin)
+    # recovers the shared-queue ideal without giving up per-worker queues.
+    skew = [0] * (c - c // 2) + [2] * (c // 2)
+    n_steal = steal_threshold(front, skew, slo_p95_s=SLO_S)
+    steal_arr = generate_arrivals(
+        sustained_overload_pattern(1.0 / MEANS[0], overload_factor=1.8,
+                                   warmup_s=20.0), DURATION_S, seed=1)
+    print(f"\n=== work stealing: pinning {skew}, N_steal={n_steal}, "
+          f"{len(steal_arr)} arrivals ===")
+    for name, kw in [
+        ("pinned-no-steal", dict(queue_discipline="per_worker")),
+        ("pinned-steal", dict(queue_discipline="per_worker", steal=True,
+                              steal_threshold=n_steal)),
+        ("shared-queue", {}),
+    ]:
+        out = ServingSimulator(sampler, assignment=skew, seed=0,
+                               num_servers=c, **kw).run(steal_arr, DURATION_S)
+        print(f"  {name:22s} goodput={out.goodput(SLO_S) * 100:5.1f}% "
+              f"accuracy={out.mean_accuracy(ACCS):.3f} "
+              f"stolen={out.stolen_batches}")
+
+    # -- mix-aware admission -----------------------------------------------
+    # A tight admission bound clamps the observed depth below the mix
+    # thresholds, so a plain bounded pool gets stuck mid-ladder dropping
+    # through the whole crowd; re-routing to the all-fast state before
+    # rejecting converts most drops into served requests.
+    crowd = generate_arrivals(
+        flash_crowd_pattern(args.base_qps, peak_factor=15.0,
+                            crowd_start_s=40.0, ramp_s=1.0, hold_s=25.0),
+        DURATION_S, seed=1)
+    print(f"\n=== mix-aware admission: bound 8, {len(crowd)} arrivals "
+          f"(reroute cap N_up[0]={mix_table.reroute_threshold}) ===")
+    for name, reroute in [("bounded-drop", False), ("bounded-reroute", True)]:
+        out = ServingSimulator(
+            sampler, controller=ElasticoMixController(mix_table), seed=0,
+            num_servers=c, max_queue_depth=8, admission_reroute=reroute,
+        ).run(crowd, DURATION_S)
+        print(f"  {name:22s} goodput={out.goodput(SLO_S) * 100:5.1f}% "
+              f"dropped={out.dropped:4d} rerouted={out.rerouted}")
 
     mix = outs["mix-shifting"]
     print("\n=== mix trajectory (one worker repinned per event) ===")

@@ -507,6 +507,8 @@ class MixPolicy:
     upscale_threshold: int      # depth above which to shift one worker faster
     downscale_threshold: Optional[int]  # depth below which to shift one worker
                                         # more accurate; None at the top state
+    steal_threshold: int = 1    # min victim-backlog depth that justifies a
+                                # steal under this mix (see steal_threshold())
 
     @property
     def num_servers(self) -> int:
@@ -531,6 +533,10 @@ class MixPolicyTable:
     num_servers: int
     excluded: Tuple[ParetoPoint, ...] = ()
     max_batch_size: int = 1               # B the thresholds were derived for
+    # mix-aware admission: the deepest buffered depth even the all-fastest
+    # mix can drain inside its slack — N_0(up).  Beyond it, re-routing to
+    # the fast rung cannot save the SLO and admission control should drop.
+    reroute_threshold: Optional[int] = None
 
     @property
     def ladder_size(self) -> int:
@@ -611,6 +617,44 @@ def mix_aggregates(front: Sequence[ParetoPoint], assignment: Sequence[int],
     scv_eff = max(0.0, m2 / (m1 * m1) - 1.0)
     worst_p95 = max(front[a].profile.p95 for a in assignment)
     return mu_agg, s_eff, scv_eff, worst_p95, acc
+
+
+def steal_threshold(front: Sequence[ParetoPoint], assignment: Sequence[int],
+                    *, slo_p95_s: float) -> int:
+    """Minimum victim-backlog depth at which an idle worker should steal —
+    emitted per mix state by :func:`derive_mix_policies` and consumed by
+    the serving scheduler's per-worker-queue discipline.
+
+    Per-worker backlogs exist for locality (resident KV/cache state), so a
+    steal is justified only once leaving the backlog in place *threatens
+    the SLO*: worker w pinned to rung a_w drains its own backlog of depth
+    n in about n * s-bar_{a_w}, inside the SLO while that stays within the
+    rung's queuing slack Delta_{a_w} = L - s95_{a_w} (Eq. 7/8 applied to a
+    single server).  The first worker to drown is the slowest pinned rung,
+    so the state's threshold is its last safe depth:
+
+        N(steal) = max(1, floor(Delta_slowest / s-bar_slowest))
+
+    A skewed mix under partitioned routing hits this almost immediately
+    (the slow rung's slack buys less than a handful of requests), which is
+    exactly when the fast workers' idle capacity should absorb the
+    backlog; a homogeneous all-fast mix tolerates a deeper local backlog
+    before rebalancing is worth breaking locality for.
+    """
+    if not assignment:
+        raise ValueError("empty assignment")
+    if slo_p95_s <= 0:
+        raise ValueError("SLO must be positive")
+    slowest = None
+    for a in assignment:
+        if not 0 <= a < len(front):
+            raise IndexError(f"config index {a} outside the front")
+        p = front[a].profile
+        if slowest is None or p.mean > slowest.mean:
+            slowest = p
+    assert slowest is not None
+    slack = slo_p95_s - slowest.p95
+    return max(1, int(math.floor(slack / slowest.mean)))
 
 
 def derive_mix_policies(
@@ -734,6 +778,8 @@ def derive_mix_policies(
             expected_accuracy=acc,
             upscale_threshold=up,
             downscale_threshold=down,
+            steal_threshold=steal_threshold(admitted, assignment,
+                                            slo_p95_s=slo_p95_s),
         ))
     return MixPolicyTable(
         slo_p95_s=slo_p95_s,
@@ -743,6 +789,7 @@ def derive_mix_policies(
         num_servers=num_servers,
         excluded=tuple(excluded),
         max_batch_size=max_batch_size,
+        reroute_threshold=policies[0].upscale_threshold if policies else None,
     )
 
 

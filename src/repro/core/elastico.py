@@ -178,6 +178,37 @@ class ElasticoController:
             self._low_since_s = None
         return None
 
+    def force_fastest(self, queue_depth: int, now_s: float,
+                      reason: str = "admission reroute") -> Optional[SwitchEvent]:
+        """Emergency jump to the fastest rung (index 0), bypassing the
+        threshold walk and the upscale cooldown.
+
+        This is the *mix-aware admission* hook: when an arrival finds the
+        bounded buffer full, the scheduler re-routes the pool to the
+        fastest rung of the ladder before rejecting (ROADMAP: "drop to the
+        fast rung instead of rejecting").  Returns None when already at
+        the fastest rung — the caller should then actually drop.  The
+        event is recorded in ``events`` like any threshold-driven switch,
+        with a ``reason`` naming the admission path.
+        """
+        if queue_depth < 0:
+            raise ValueError("negative queue depth")
+        if self.current_index == 0:
+            return None
+        event = SwitchEvent(
+            time_s=now_s,
+            from_index=self.current_index,
+            to_index=0,
+            queue_depth=queue_depth,
+            direction="faster",
+            reason=f"{reason}: depth {queue_depth} at admission bound",
+        )
+        self.current_index = 0
+        self.last_upscale_s = now_s
+        self._low_since_s = None
+        self.events.append(event)
+        return event
+
     def reset(self) -> None:
         self.current_index = (
             self.initial_index

@@ -98,14 +98,15 @@ class DeploymentPlan:
         if self.mix_table is not None:
             lines.append(
                 f"  mix ladder: {self.mix_table.ladder_size} states "
-                f"(one-worker shifts, Allen-Cunneen M/G/c thresholds)"
+                f"(one-worker shifts, Allen-Cunneen M/G/c thresholds; "
+                f"admission re-route cap N={self.mix_table.reroute_threshold})"
             )
             for mp in self.mix_table.policies:
                 lines.append(
                     f"    [{mp.index}] {list(mp.assignment)} "
                     f"mu={mp.drain_rate_qps:.1f}/s scv={mp.scv:.2f} "
                     f"acc~{mp.expected_accuracy:.3f} N_up={mp.upscale_threshold} "
-                    f"N_dn={mp.downscale_threshold}"
+                    f"N_dn={mp.downscale_threshold} N_steal={mp.steal_threshold}"
                 )
         return "\n".join(lines)
 

@@ -1,54 +1,70 @@
-"""Inference serving runtime: queue, monitor, worker pool, engine, simulator.
+"""Inference serving runtime: scheduler core, monitor, worker pool, engine,
+simulator.
 
-Worker-pool architecture (M/G/c)
+One scheduling core, two drivers
 --------------------------------
 
-Every layer of the runtime is parameterized by a server count ``c >= 1``:
+Every dispatch decision — admission control, FIFO order, batch draining
+with linger, per-worker assignment, work stealing, the Elastico switch
+hook — is made in exactly one place:
+:class:`repro.serving.scheduler.Scheduler`, a pure state machine over an
+injected clock.  Two thin drivers execute its decisions:
 
 - :class:`ServingSimulator` (``num_servers``) — deterministic discrete-event
-  M/G/c: a bank of c server slots drains one FIFO queue, dispatching to the
-  lowest-numbered free server; per-server utilization is reported in
+  M/G/c under virtual time: it owns the event heap and the service-time
+  RNG, feeds arrival/completion/linger/tick events to the scheduler, and
+  turns each :class:`~repro.serving.scheduler.Dispatch` into a sampled
+  service time; per-server utilization is reported in
   :class:`SimulationResult`.
 - :class:`WorkerPool` (``c``) / :class:`ServingEngine` (``num_workers``) —
-  the real-time path: c worker threads drain one shared
-  :class:`RequestQueue`, all executing through one thread-safe
-  :class:`WorkflowExecutor`.  With a homogeneous controller the Elastico
-  switch flips the executor's default configuration for every worker at
-  once; with an :class:`~repro.core.elastico.ElasticoMixController` the
-  pool instead carries a *per-worker assignment vector*
-  (``WorkerPool.set_assignment``) and each switch repins exactly one
-  worker, blending accuracy and latency across the pool.
-  ``max_queue_depth`` adds admission control (bounded buffer with drop
-  accounting in ``EngineReport.dropped``).
-- The switching thresholds come from
-  :func:`repro.core.aqm.derive_policies` (``num_servers=c``), which scales
-  the paper's Eq. 10/13 by the pool's aggregate drain rate c / s-bar;
-  heterogeneous mixes use :func:`repro.core.aqm.derive_mix_policies`, whose
-  Allen-Cunneen M/G/c wait model folds in the service-time SCV measured by
-  the profiler.
+  the real-time path: c worker threads execute the scheduler's dispatches
+  through one thread-safe :class:`WorkflowExecutor`, with all scheduler
+  access serialized behind the pool's lock.
+
+With a homogeneous controller the Elastico switch flips the executor's
+default configuration for every worker at once; with an
+:class:`~repro.core.elastico.ElasticoMixController` the scheduler carries
+a *per-worker assignment vector* and each switch repins exactly one
+worker, blending accuracy and latency across the pool.
+``max_queue_depth`` adds admission control (bounded buffer with drop
+accounting in ``EngineReport.dropped`` / ``SimulationResult.dropped``),
+and ``admission_reroute=True`` upgrades it to *mix-aware admission*: the
+scheduler forces the fastest rung before rejecting.  The switching
+thresholds come from :func:`repro.core.aqm.derive_policies`
+(``num_servers=c``), which scales the paper's Eq. 10/13 by the pool's
+aggregate drain rate c / s-bar; heterogeneous mixes use
+:func:`repro.core.aqm.derive_mix_policies`, whose Allen-Cunneen M/G/c wait
+model folds in the service-time SCV measured by the profiler and which
+also emits the steal/re-route thresholds the scheduler consumes.
 
 In-worker batching (``max_batch_size``, ``batch_timeout_s`` on both
 :class:`ServingEngine`/:class:`WorkerPool` and :class:`ServingSimulator`)
-lets each worker drain up to B requests per dequeue — lingering up to the
-batch timeout for a short batch to fill — and execute them as one batch
-(:meth:`WorkflowExecutor.execute_batch`), amortizing per-dispatch overhead
-by the measured ``alpha + beta * b`` law
+lets each dispatch carry up to B requests — the scheduler lingers a short
+batch up to the batch timeout for arrivals to fill it — executed as one
+batch (:meth:`WorkflowExecutor.execute_batch`), amortizing per-dispatch
+overhead by the measured ``alpha + beta * b`` law
 (:class:`repro.core.pareto.BatchProfile`); thresholds derived with
 ``max_batch_size > 1`` account for the depth-dependent drain rate
 (:func:`repro.core.aqm.batch_expected_wait`).
+
+Work stealing (``queue_discipline="per_worker"``, ``steal=True``) routes
+arrivals round-robin to per-worker backlogs and lets idle workers pull
+from the globally deepest backlog (:func:`repro.core.aqm.steal_threshold`),
+always serving stolen work under their own pinned configuration.
 
 ``c = 1`` is the paper-faithful default throughout and reproduces the
 original single-server (M/G/1) behavior exactly — same seeds, same results;
 an all-same-config assignment vector likewise reproduces the homogeneous
 pool bit-for-bit, and ``max_batch_size = 1`` the unbatched runtime.
-Elastico always observes the *buffered* queue depth (waiting requests,
-excluding the up-to-c in service), the depth the thresholds are stated in.
+Elastico always observes the *buffered* queue depth (requests waiting for
+dispatch, excluding those in service), the depth the thresholds are stated
+in.
 """
 
 from .engine import EngineReport, ServingEngine, replay_workload
 from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
 from .monitor import LoadMonitor, LoadSnapshot
-from .queue import RequestQueue
+from .scheduler import AdmissionDecision, Dispatch, Linger, Scheduler
 from .simulator import (
     CompletedRequest,
     ServingSimulator,
@@ -77,7 +93,10 @@ __all__ = [
     "WorkflowExecutor",
     "LoadMonitor",
     "LoadSnapshot",
-    "RequestQueue",
+    "AdmissionDecision",
+    "Dispatch",
+    "Linger",
+    "Scheduler",
     "CompletedRequest",
     "ServingSimulator",
     "SimulationResult",

@@ -1,45 +1,59 @@
-"""Real-time serving engine: queue + monitor + Elastico + worker pool (§III-B).
+"""Real-time serving engine: monitor + Elastico + scheduler + worker pool.
 
 The engine wires the runtime components of the paper's serving architecture
-and runs them against wall-clock time on this host:
+(§III-B) and runs them against wall-clock time on this host.  Since PR 4
+every *dispatch decision* — admission, FIFO order, batch draining with
+linger, per-worker assignment, work stealing, the Elastico switch hook —
+is made by the shared :class:`repro.serving.scheduler.Scheduler`; this
+module contributes only the wall-clock driving: ingress, worker threads
+(via :class:`repro.serving.executor.WorkerPool`), the control-loop thread,
+and the report.
 
-  ingress thread  ->  RequestQueue  ->  WorkerPool (c x WorkflowExecutor)
-                          |                   |
-                      LoadMonitor  <----------+
+  ingress thread  ->  Scheduler (policy core)  ->  WorkerPool (c threads)
+                          |                             |
+                      LoadMonitor  <--------------------+
                           |
-                  control thread (Elastico) -> executor.set_active (homogeneous)
-                                            -> pool.set_assignment (mix)
+                  control thread (Elastico) -> scheduler.observe
+                                               (index flip or one-worker repin)
 
 ``num_workers=1`` (the default) is the paper-faithful M/G/1 server; larger
-pools drain the same shared queue concurrently (M/G/c) with the switching
-thresholds derived for that c (pass ``num_servers`` to ``derive_policies``).
-The controller may be either flavor: a homogeneous
+pools drain the same buffered backlog concurrently (M/G/c) with the
+switching thresholds derived for that c (pass ``num_servers`` to
+``derive_policies``).  The controller may be either flavor: a homogeneous
 :class:`~repro.core.elastico.ElasticoController`, whose decisions flip the
 executor's default active index for all workers at once, or a heterogeneous
 :class:`~repro.core.elastico.ElasticoMixController`, whose decisions repin
-the pool's per-worker assignment vector one worker at a time
-(``pool.set_assignment``); ``EngineReport.assignment_timeline`` records the
-mix trajectory.  Controller decisions are serialized behind a lock so
+the scheduler's per-worker assignment vector one worker at a time;
+``EngineReport.assignment_timeline`` records the mix trajectory.
+Controller decisions are serialized behind the pool's scheduler lock so
 concurrent workers never interleave observations, and every decision keys
-off the *buffered* queue depth — requests waiting for service, excluding
-the up-to-c in flight.
+off the *buffered* queue depth — requests waiting for dispatch, excluding
+those in flight.
 
 ``max_queue_depth`` enables admission control (beyond-paper): arrivals that
 find the buffer full are rejected at ingress and surface in
 ``EngineReport.dropped`` (see that field's documentation for exact
-semantics).
+semantics).  ``admission_reroute=True`` adds *mix-aware admission*: the
+scheduler forces the controller to the fastest rung before rejecting, and
+only drops when the pool is already all-fast (or the depth exceeds the mix
+table's re-route threshold) — ``EngineReport.rerouted`` counts the saves.
 
 ``max_batch_size``/``batch_timeout_s`` enable in-worker batching
-(beyond-paper): each worker drains up to ``max_batch_size`` requests per
-dequeue — lingering up to ``batch_timeout_s`` for a short batch to fill —
-and executes the run as one batch (see
-:meth:`repro.serving.executor.WorkflowExecutor.execute_batch`).  The drain
-logic accounts for batches a lingering worker has claimed but not yet
-executed (``WorkerPool.pending``), and ``EngineReport.mean_batch_size``
-reports the realized amortization.  ``max_batch_size=1`` (default) takes
-the exact pre-batching code path.
+(beyond-paper): each dispatch carries up to ``max_batch_size`` requests —
+the scheduler lingers a short batch up to ``batch_timeout_s`` for arrivals
+to fill it — and executes the run as one batch (see
+:meth:`repro.serving.executor.WorkflowExecutor.execute_batch`).
+``EngineReport.mean_batch_size`` reports the realized amortization;
+``max_batch_size=1`` (default) takes the exact pre-batching code path.
 
-A deterministic-virtual-time variant is provided by
+``queue_discipline="per_worker"`` with ``steal=True`` (beyond-paper)
+switches the scheduler to per-worker backlogs with work stealing: arrivals
+are routed round-robin, and an idle worker pulls from the globally deepest
+backlog once it reaches the steal threshold — serving stolen requests
+under its *own* pinned configuration.  ``EngineReport.stolen_batches``
+counts the rebalanced dispatches.
+
+A deterministic-virtual-time driver over the same scheduler is provided by
 :mod:`repro.serving.simulator`; this module is the "it actually serves"
 path used by the examples and smoke tests.
 """
@@ -54,7 +68,7 @@ from typing import Any, Callable, List, Optional, Sequence
 from ..core.elastico import ElasticoController, ElasticoMixController
 from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
 from .monitor import LoadMonitor
-from .queue import RequestQueue
+from .scheduler import Scheduler
 from .workload import Request
 
 
@@ -71,7 +85,9 @@ class EngineReport:
     (the paper's no-drop default — configuration switches never drop
     requests, §III-B).  ``slo_compliance`` ignores drops (fraction of
     *served* requests in SLO); ``goodput`` charges them (fraction of
-    *offered* load served in SLO).
+    *offered* load served in SLO).  ``rerouted`` counts arrivals that
+    mix-aware admission saved by forcing the fastest rung instead of
+    dropping.
 
     ``assignment_timeline`` records ``(time_s, assignment_vector)`` repin
     events when a mix controller drives a heterogeneous pool; empty for
@@ -89,6 +105,8 @@ class EngineReport:
     # realized requests-per-dispatch across the pool; 1.0 for unbatched runs
     mean_batch_size: float = 1.0
     max_batch_size: int = 1
+    rerouted: int = 0
+    stolen_batches: int = 0
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.records:
@@ -113,7 +131,7 @@ class ServingEngine:
     """Threaded serving engine with dynamic configuration switching.
 
     ``num_workers`` sizes the worker pool (c of the M/G/c model);
-    ``max_queue_depth`` bounds the shared buffer for admission control
+    ``max_queue_depth`` bounds the buffered backlog for admission control
     (None = unbounded, the paper's no-drop default); ``max_batch_size`` /
     ``batch_timeout_s`` enable in-worker batching (1 / 0.0 = unbatched,
     the paper-faithful default).  ``controller`` may be
@@ -121,6 +139,9 @@ class ServingEngine:
     config) or an :class:`ElasticoMixController` (repins the per-worker
     assignment vector one worker at a time); pass None for a static run,
     optionally with a fixed heterogeneous pinning via ``assignment``.
+    ``queue_discipline`` / ``steal`` / ``steal_threshold`` /
+    ``admission_reroute`` forward to the shared
+    :class:`repro.serving.scheduler.Scheduler` (see its documentation).
     """
 
     def __init__(
@@ -135,37 +156,44 @@ class ServingEngine:
         assignment: Optional[Sequence[int]] = None,
         max_batch_size: int = 1,
         batch_timeout_s: float = 0.0,
+        queue_discipline: str = "shared",
+        steal: bool = False,
+        steal_threshold: Optional[int] = None,
+        admission_reroute: bool = False,
     ) -> None:
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
-        if assignment is not None and controller is not None:
-            # reject silently-dead configurations: pinned workers never
-            # consult the default active index a homogeneous controller
-            # switches, and a mix controller repins the pool from its own
-            # ladder at start() anyway.
-            raise ValueError(
-                "assignment is for static runs (controller=None); use "
-                "ElasticoMixController for dynamic per-worker pinning")
-        self.queue = RequestQueue(max_depth=max_queue_depth)
         self.monitor = LoadMonitor(clock=clock)
         self.executor = executor
         self.controller = controller
-        self.pool = WorkerPool(
-            executor, self.queue, c=num_workers, on_observe=self._observe,
+        # the single source of dispatch policy, shared with the simulator;
+        # construction validates the whole configuration eagerly (e.g. an
+        # assignment under a controller would be silently dead and raises).
+        self.scheduler = Scheduler(
+            num_workers=num_workers,
+            max_batch_size=max_batch_size,
+            batch_timeout_s=batch_timeout_s,
+            max_queue_depth=max_queue_depth,
+            controller=controller,
+            static_index=executor.active_index(),
             assignment=assignment,
-            max_batch_size=max_batch_size, batch_timeout_s=batch_timeout_s,
+            num_configs=executor.num_configs,
+            queue_discipline=queue_discipline,
+            steal=steal,
+            steal_threshold=steal_threshold,
+            admission_reroute=admission_reroute,
+            record_initial_config=controller is not None,
+            on_switch=self._mirror_switch,
+        )
+        self.pool = WorkerPool(
+            executor, c=num_workers, on_observe=self._observe,
+            scheduler=self.scheduler, clock=clock,
         )
         self.control_tick_s = control_tick_s
         self._clock = clock
         self._stop = threading.Event()
         self._ctrl_thread: Optional[threading.Thread] = None
-        self._timeline: List = []
-        self._assignment_timeline: List = []
         self._epoch: Optional[float] = None
-        # one lock serializes controller observations from all workers + the
-        # control loop: ElasticoController is pure decision logic and relies
-        # on the caller for thread safety.
-        self._observe_lock = threading.Lock()
         self._submitted = 0
         self._dropped = 0
         self._ingress_lock = threading.Lock()
@@ -182,17 +210,12 @@ class ServingEngine:
         self._epoch = self._clock()
         self.executor.set_clock(self._now_rel)
         self.monitor.set_clock(self._now_rel)  # one time axis for all stamps
-        if self.controller is not None:
-            self.controller.reset()
-            if isinstance(self.controller, ElasticoMixController):
-                vec = self.controller.current_assignment
-                self.pool.set_assignment(vec)
-                self._assignment_timeline.append((0.0, vec))
-            else:
-                self.executor.set_active(self.controller.current_index)
-            self._timeline.append((0.0, self.controller.current_index))
-        elif self.pool.assignment() is not None:
-            self._assignment_timeline.append((0.0, self.pool.assignment()))
+        self.pool.set_clock(self._now_rel)     # scheduler timestamps likewise
+        if self.controller is not None and not isinstance(
+                self.controller, ElasticoMixController):
+            # homogeneous: workers follow the executor's default index; the
+            # mix path pins every dispatch through the scheduler instead.
+            self.executor.set_active(self.controller.current_index)
         self.pool.start()
         self._ctrl_thread = threading.Thread(
             target=self._control_loop, name="compass-elastico", daemon=True
@@ -201,29 +224,37 @@ class ServingEngine:
 
     def submit(self, request: Request) -> bool:
         """Offer a request to the engine; returns False if admission control
-        rejected it (bounded queue full)."""
+        rejected it (bounded queue full, and — with mix-aware admission —
+        not salvageable by re-routing to the fastest rung)."""
+        if self._epoch is None:
+            # before start() the epoch-relative clock is not installed, so
+            # scheduler timestamps (linger deadlines, switch times) would
+            # land on the raw host clock axis and never fire/compare sanely.
+            raise RuntimeError("engine not started")
         self.monitor.record_arrival()
-        accepted = self.queue.put(request)
+        adm = self.pool.submit(request)
         with self._ingress_lock:
             self._submitted += 1
-            if not accepted:
+            if not adm.admitted:
                 self._dropped += 1
-        if not accepted:
+        if not adm.admitted:
             self.monitor.record_drop()
-        return accepted
+        return adm.admitted
 
     def drain_and_stop(self, *, timeout_s: float = 120.0) -> EngineReport:
-        """Close ingress, wait until the queue empties, stop threads.
+        """Close ingress, wait until the backlog empties, stop threads.
 
-        The drain condition uses ``queue.buffered()`` (waiting + claimed by
-        a lingering forming batch) plus ``pool.pending()`` (a dequeued batch
-        not yet executing), so a worker mid-linger cannot race the shutdown
-        into dropping its partial batch."""
+        The drain condition uses the scheduler's ``buffered()`` (waiting,
+        including any forming batch held open by a linger window) plus
+        ``pool.pending()`` (dispatched to a worker mailbox but not yet
+        finished), so a worker mid-linger cannot race the shutdown into
+        dropping its partial batch."""
         deadline = self._clock() + timeout_s
-        while (self.queue.buffered() > 0 or self.executor.in_flight() > 0
+        while (self.pool.buffered() > 0 or self.executor.in_flight() > 0
                or self.pool.pending() > 0) and self._clock() < deadline:
             time.sleep(0.01)
-        self.queue.close()
+        with self.pool.lock:
+            self.scheduler.close()
         self._stop.set()
         self.pool.stop()
         if self._ctrl_thread is not None:
@@ -234,14 +265,16 @@ class ServingEngine:
         return EngineReport(
             records=list(self.executor.records),
             switch_events=list(self.controller.events) if self.controller else [],
-            config_timeline=list(self._timeline),
+            config_timeline=list(self.scheduler.config_timeline),
             total_requests=submitted,
             dropped=dropped,
             num_workers=self.pool.c,
             served_per_worker=self.pool.served_per_worker(),
-            assignment_timeline=list(self._assignment_timeline),
+            assignment_timeline=list(self.scheduler.assignment_timeline),
             mean_batch_size=self.pool.mean_batch_size(),
             max_batch_size=self.pool.max_batch_size,
+            rerouted=self.scheduler.rerouted,
+            stolen_batches=self.scheduler.stolen_batches,
         )
 
     # -- loops ---------------------------------------------------------------
@@ -258,27 +291,31 @@ class ServingEngine:
     def _observe(self) -> None:
         if self.controller is None:
             return
-        with self._observe_lock:
-            # buffered requests only (see simulator): waiting in the queue
-            # plus any lingering worker's forming batch — the simulator keeps
-            # forming batches in its waiting list, so both runtimes show the
-            # controller the same depth for the same state.
-            depth = self.queue.buffered()
+        # the pool's scheduler lock serializes controller observations from
+        # all workers + the control loop: the scheduler (and Elastico) are
+        # pure decision logic and rely on the caller for thread safety.
+        with self.pool.lock:
+            # buffered requests only: waiting for dispatch, including any
+            # lingering forming batch — the same depth the simulator's
+            # event loop shows the controller for the same state.
+            depth = self.scheduler.buffered()
             now = self._now_rel()
             batch = (self.pool.mean_batch_size()
                      if self.pool.max_batch_size > 1 else None)
             self.monitor.snapshot(depth, self.executor.in_flight(), now,
-                                  assignment=self.pool.assignment(),
+                                  assignment=self.scheduler.assignment(),
                                   batch_size=batch)
-            ev = self.controller.observe(depth, now)
-            if ev is not None:
-                if isinstance(self.controller, ElasticoMixController):
-                    vec = self.controller.assignment_for(ev.to_index)
-                    self.pool.set_assignment(vec)
-                    self._assignment_timeline.append((now, vec))
-                else:
-                    self.executor.set_active(ev.to_index)
-                self._timeline.append((now, ev.to_index))
+            # any resulting switch is mirrored into the executor by the
+            # scheduler's on_switch hook (_mirror_switch) inside this same
+            # critical section — racing observers cannot reorder it.
+            self.scheduler.observe(now)
+
+    def _mirror_switch(self, ev) -> None:
+        """Scheduler on_switch hook: keep the executor's default index in
+        step with homogeneous switches (mix switches pin per dispatch and
+        need no mirroring).  Runs under the pool's scheduler lock."""
+        if not isinstance(self.controller, ElasticoMixController):
+            self.executor.set_active(ev.to_index)
 
 
 def replay_workload(

@@ -5,24 +5,26 @@ configurations are kept *resident* (the paper pre-loads all configs in GPU
 memory; here every config's parameters/compiled functions stay live), so a
 switch only flips an index — the paper's <10 ms "pipeline rerouting".
 
-:class:`WorkerPool` generalizes the runtime from the paper's single worker
-(M/G/1) to ``c`` worker threads draining one shared :class:`RequestQueue`
-(M/G/c), and from one globally active configuration to an optional
-*per-worker assignment vector*: each worker can be pinned to its own Pareto
-rung (``set_assignment``), so the pool serves a heterogeneous mix that
-blends accuracy and latency instead of hard-switching every worker at once.
-With no assignment set (the default) all workers follow the executor's
-single active index, which reproduces the homogeneous engine behavior
-exactly; ``c = 1`` reproduces the seed's single-worker engine.
+:class:`WorkerPool` is the *threaded driver* over the shared scheduling
+core (:class:`repro.serving.scheduler.Scheduler`): ``c`` worker threads
+execute the dispatches the scheduler hands out, under real wall-clock
+time.  All dispatch policy — FIFO order, admission, batch draining with
+linger, per-worker assignment, work stealing — lives in the scheduler; the
+pool owns only the threads, the lock that serializes scheduler access, and
+the per-worker mailboxes that hand a :class:`~repro.serving.scheduler.Dispatch`
+to its worker.  The discrete-event
+:class:`repro.serving.simulator.ServingSimulator` drives the *same*
+scheduler under virtual time, which is what keeps the two runtimes'
+decisions identical by construction.
 
 In-worker batching (beyond-paper): with ``max_batch_size = B > 1`` each
-worker drains up to B requests per dequeue (lingering up to
-``batch_timeout_s`` for the batch to fill) and executes them as ONE batch
-through :meth:`WorkflowExecutor.execute_batch` — vectorized over the
-workflow's model calls when a ``batch_workflow_fn`` is supplied (jax-level
-batching: stack the payloads, run the stacked forward once), else a
-sequential fallback that still amortizes queue/dispatch overhead.  The
-default ``max_batch_size = 1`` takes the exact single-request code path.
+dispatch carries up to B requests (the scheduler lingers short batches up
+to ``batch_timeout_s``) and the worker executes them as ONE batch through
+:meth:`WorkflowExecutor.execute_batch` — vectorized over the workflow's
+model calls when a ``batch_workflow_fn`` is supplied (jax-level batching:
+stack the payloads, run the stacked forward once), else a sequential
+fallback that still amortizes queue/dispatch overhead.  The default
+``max_batch_size = 1`` takes the exact single-request code path.
 All record collection goes through the executor's lock, so a pool of any
 size yields one consistent, thread-safe record list.
 """
@@ -31,11 +33,11 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
 
 from ..core.space import Config
-from .queue import RequestQueue
+from .scheduler import AdmissionDecision, Dispatch, Scheduler
 from .workload import Request
 
 WorkflowFn = Callable[[Config, Any], Any]
@@ -70,13 +72,13 @@ class WorkflowExecutor:
     one request under a given configuration.  The executor keeps a *default*
     active index for homogeneous operation, but a caller may override the
     configuration per call (``execute(..., config_index=w_pin)``) — that is
-    how :class:`WorkerPool` executes each worker under its pinned rung when
-    an assignment vector is set.  ``set_active`` is thread-safe and changes
-    only the default: it takes effect for the *next* un-pinned request —
-    in-flight requests always complete under the configuration they started
-    with (no drops, §III-B), and workers pinned via the pool's assignment
-    vector are unaffected.  ``execute`` may be called concurrently from any
-    number of workers; record collection and in-flight accounting are
+    how :class:`WorkerPool` executes each worker under the rung the
+    scheduler's assignment vector pinned it to.  ``set_active`` is
+    thread-safe and changes only the default: it takes effect for the
+    *next* un-pinned request — in-flight requests always complete under the
+    configuration they started with (no drops, §III-B), and pinned
+    dispatches are unaffected.  ``execute`` may be called concurrently from
+    any number of workers; record collection and in-flight accounting are
     lock-protected.
     """
 
@@ -103,9 +105,9 @@ class WorkflowExecutor:
             return self._active
 
     def set_active(self, index: int) -> None:
-        """Set the *default* configuration for workers without a per-worker
-        pin.  Homogeneous Elastico drives this hook; the heterogeneous path
-        repins workers through :meth:`WorkerPool.set_assignment` instead and
+        """Set the *default* configuration for un-pinned dispatches.
+        Homogeneous Elastico drives this hook; the heterogeneous path pins
+        each dispatch through the scheduler's assignment vector instead and
         leaves the default untouched."""
         if not 0 <= index < len(self._configs):
             raise IndexError(f"config index {index} out of range")
@@ -219,40 +221,39 @@ class WorkflowExecutor:
 
 
 class WorkerPool:
-    """``c`` worker threads draining one shared request queue (M/G/c).
+    """``c`` worker threads executing the shared scheduler's dispatches.
 
-    Each worker loops: pop a request, fire the observe hook (the
-    arrival-to-service boundary is where Elastico decides), execute under
-    its *pinned* configuration if an assignment vector is set — else under
-    the executor's default active configuration — then fire the hook again.
-    The hook is supplied by the engine and must be safe to call concurrently
-    (the engine serializes controller access internally).
+    The pool is a thin wall-clock driver: every scheduling decision —
+    which worker serves next, under which configuration, how large a
+    batch, whether an arrival is admitted — is made by the
+    :class:`repro.serving.scheduler.Scheduler` this pool drives (the same
+    core the discrete-event simulator drives under virtual time).  The
+    pool contributes the threading machinery only:
+
+    - one lock/condition (:attr:`lock`) serializes all scheduler access;
+    - :meth:`submit` offers an arrival to the scheduler and pumps ready
+      dispatches into per-worker *mailboxes*;
+    - each worker thread waits on its mailbox, executes the batch through
+      the shared :class:`WorkflowExecutor` (under the dispatch's pinned
+      configuration, or the executor's default when un-pinned), then
+      releases itself back to the scheduler and pumps again;
+    - linger windows fire from timed condition waits: a waiting worker
+      bounds its wait by the scheduler's next linger deadline and flushes
+      the forming batch when the window expires.
 
     ``set_assignment([k_0, ..., k_{c-1}])`` pins worker w to Pareto rung
-    k_w, turning the pool heterogeneous: Elastico's mix controller shifts
-    this vector one worker at a time instead of flipping a global index.
-    ``set_assignment(None)`` (the default state) restores homogeneous
-    operation.  The swap is atomic (one tuple replacement under a lock) and
-    takes effect at each worker's *next* request — in-flight requests finish
-    under the configuration they started with (no drops, §III-B).
+    k_w (delegated to the scheduler); the swap is atomic and takes effect
+    at each worker's *next* dispatch — in-flight requests finish under the
+    configuration they started with (no drops, §III-B).
 
-    ``max_batch_size = B > 1`` turns on in-worker batching: each dequeue
-    drains up to B requests (``RequestQueue.get_batch``), lingering up to
-    ``batch_timeout_s`` for a short batch to fill, and executes the run as
-    one batch under the worker's configuration.  Requests claimed but not
-    yet executed are visible via :meth:`pending` so the engine's drain
-    logic cannot race a lingering worker.
-
-    ``c = 1`` is the paper-faithful single-worker server; the pool then
-    behaves exactly like the seed's single ``compass-worker`` thread (and
-    the default ``max_batch_size = 1`` never lingers — a batch of one is
-    full at the first pop).
+    ``c = 1`` is the paper-faithful single-worker server (and the default
+    ``max_batch_size = 1`` never lingers — a batch of one is full at the
+    first request).
     """
 
     def __init__(
         self,
         executor: WorkflowExecutor,
-        queue: RequestQueue,
         *,
         c: int = 1,
         on_observe: Optional[Callable[[], None]] = None,
@@ -261,62 +262,103 @@ class WorkerPool:
         assignment: Optional[Sequence[int]] = None,
         max_batch_size: int = 1,
         batch_timeout_s: float = 0.0,
+        scheduler: Optional[Scheduler] = None,
+        clock: Callable[[], float] = time.monotonic,
     ) -> None:
-        if c < 1:
-            raise ValueError("worker pool needs c >= 1 workers")
-        if max_batch_size < 1:
-            raise ValueError("max_batch_size must be >= 1")
-        if batch_timeout_s < 0:
-            raise ValueError("batch_timeout_s must be >= 0")
+        if scheduler is not None:
+            if scheduler.num_workers != c:
+                raise ValueError(
+                    f"scheduler sized for {scheduler.num_workers} workers, "
+                    f"pool has {c}")
+            if (assignment is not None or max_batch_size != 1
+                    or batch_timeout_s != 0.0):
+                # policy knobs live on the scheduler; accepting them here
+                # too would silently ignore the caller's configuration.
+                raise ValueError(
+                    "assignment/max_batch_size/batch_timeout_s are owned by "
+                    "the scheduler — configure them on the Scheduler you "
+                    "pass, not on the pool")
         self.executor = executor
-        self.queue = queue
+        self._sched = scheduler if scheduler is not None else Scheduler(
+            num_workers=c,
+            max_batch_size=max_batch_size,
+            batch_timeout_s=batch_timeout_s,
+            assignment=assignment,
+            num_configs=executor.num_configs,
+            record_initial_config=False,
+        )
         self.c = c
-        self.max_batch_size = max_batch_size
-        self.batch_timeout_s = batch_timeout_s
+        self.max_batch_size = self._sched.max_batch_size
+        self.batch_timeout_s = self._sched.batch_timeout_s
         self._on_observe = on_observe
         self._poll_timeout_s = poll_timeout_s
         self._name = name
+        self._clock = clock
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._served_per_worker = [0] * c
         self._dispatches_per_worker = [0] * c
+        self._stolen_per_worker = [0] * c
         self._pending_per_worker = [0] * c
-        self._assignment_lock = threading.Lock()
-        self._assignment: Optional[Tuple[int, ...]] = None
-        if assignment is not None:
-            self.set_assignment(assignment)
+        self.lock = threading.Condition()
+        self._mailbox: List[Optional[Dispatch]] = [None] * c
 
     @property
     def num_workers(self) -> int:
         return self.c
 
-    def assignment(self) -> Optional[Tuple[int, ...]]:
+    @property
+    def scheduler(self) -> Scheduler:
+        """The shared dispatch-policy core this pool drives."""
+        return self._sched
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Align the pool (and hence every scheduler timestamp) with the
+        engine's epoch-relative clock."""
+        self._clock = clock
+
+    # -- scheduler delegation -------------------------------------------------
+
+    def assignment(self):
         """Current per-worker config pinning; None = homogeneous (all workers
         follow the executor's active index)."""
-        with self._assignment_lock:
-            return self._assignment
+        with self.lock:
+            return self._sched.assignment()
 
     def set_assignment(self, assignment: Optional[Sequence[int]]) -> None:
         """Atomically repin every worker.  ``assignment[w]`` is the config
-        index worker w serves its next request under; None clears pinning."""
-        if assignment is None:
-            with self._assignment_lock:
-                self._assignment = None
-            return
-        vec = tuple(int(a) for a in assignment)
-        if len(vec) != self.c:
-            raise ValueError(
-                f"assignment length {len(vec)} != pool size {self.c}")
-        n = self.executor.num_configs
-        if any(not 0 <= a < n for a in vec):
-            raise IndexError(f"assignment {vec} has config index out of range")
-        with self._assignment_lock:
-            self._assignment = vec
+        index worker w serves its next dispatch under; None clears pinning."""
+        with self.lock:
+            self._sched.set_assignment(assignment)
 
     def config_for_worker(self, worker_id: int) -> Optional[int]:
         """Pinned config index for a worker, or None when homogeneous."""
-        with self._assignment_lock:
-            return None if self._assignment is None else self._assignment[worker_id]
+        with self.lock:
+            return self._sched.config_for_worker(worker_id)
+
+    def buffered(self) -> int:
+        """Requests admitted but not yet dispatched to a worker."""
+        with self.lock:
+            return self._sched.buffered()
+
+    # -- ingress --------------------------------------------------------------
+
+    def submit(self, request: Request) -> AdmissionDecision:
+        """Offer one request to the scheduler; pumps any ready dispatches to
+        worker mailboxes.  Returns the scheduler's admission decision."""
+        with self.lock:
+            adm = self._sched.offer(request, self._clock())
+            if adm.admitted:
+                self._pump_locked()
+            if self._sched.batch_timeout_s > 0:
+                # wake waiting workers even without a dispatch: a new
+                # arrival can shorten the linger deadline they bound their
+                # waits with.  Without linger, _deposit_locked already
+                # notified iff there is work — skip the thundering herd.
+                self.lock.notify_all()
+        return adm
+
+    # -- observability --------------------------------------------------------
 
     def served_per_worker(self) -> List[int]:
         """Requests completed by each worker (a load-balance observability
@@ -328,6 +370,10 @@ class WorkerPool:
         ratio served/dispatches is the realized mean batch size."""
         return list(self._dispatches_per_worker)
 
+    def stolen_per_worker(self) -> List[int]:
+        """Dispatches each worker pulled from another worker's backlog."""
+        return list(self._stolen_per_worker)
+
     def mean_batch_size(self) -> float:
         """Realized mean batch size so far (requests per dispatch); 1.0 for
         an unbatched pool, and before any dispatch."""
@@ -337,13 +383,16 @@ class WorkerPool:
         return sum(self._served_per_worker) / dispatches
 
     def pending(self) -> int:
-        """Requests a worker has dequeued but not yet handed to the executor
-        (the window between ``get_batch`` returning and ``execute`` /
-        ``execute_batch`` registering them in-flight).  Forming batches
-        still inside a lingering ``get_batch`` are counted by
-        ``RequestQueue.claimed()`` instead; the engine's drain loop waits on
-        both, so no shutdown race can drop a claimed batch."""
+        """Requests dispatched to a worker mailbox but not yet finished
+        executing.  The scheduler's ``buffered()`` no longer counts them,
+        so the engine's drain loop waits on both — no shutdown race can
+        drop a dispatched batch."""
         return sum(self._pending_per_worker)
+
+    def in_flight(self) -> int:
+        return self.executor.in_flight()
+
+    # -- lifecycle ------------------------------------------------------------
 
     def start(self) -> None:
         if self._threads:
@@ -361,39 +410,92 @@ class WorkerPool:
         for t in self._threads:
             t.start()
 
-    def in_flight(self) -> int:
-        return self.executor.in_flight()
-
     def stop(self, *, join_timeout_s: float = 5.0) -> None:
         self._stop.set()
+        with self.lock:
+            self.lock.notify_all()
         for t in self._threads:
             t.join(timeout=join_timeout_s)
         self._threads = []
 
+    # -- internals ------------------------------------------------------------
+
+    def _pump_locked(self) -> None:
+        """Drain ready work from the scheduler into worker mailboxes.
+        Caller holds :attr:`lock`."""
+        dispatches, _lingers = self._sched.poll(self._clock())
+        self._deposit_locked(dispatches)
+
+    def _deposit_locked(self, dispatches: Sequence[Dispatch]) -> None:
+        for d in dispatches:
+            # the scheduler only dispatches to free workers, so the mailbox
+            # slot is empty by construction
+            self._mailbox[d.worker_id] = d
+            self._pending_per_worker[d.worker_id] = len(d.items)
+        if dispatches:
+            self.lock.notify_all()
+
+    def _fire_due_lingers_locked(self) -> None:
+        dl = self._sched.next_linger_deadline()
+        if dl is None:
+            return
+        deadline_s, token = dl
+        now = self._clock()
+        if now < deadline_s:
+            return
+        res = self._sched.on_linger_expired(token, now)
+        if res is not None:
+            self._deposit_locked(res[0])
+
+    def _await_dispatch(self, worker_id: int) -> Optional[Dispatch]:
+        """Block until this worker's mailbox holds a dispatch (or the pool
+        stops).  Waits are bounded by the scheduler's next linger deadline
+        so an expiring window flushes its forming batch promptly."""
+        with self.lock:
+            while not self._stop.is_set():
+                d = self._mailbox[worker_id]
+                if d is not None:
+                    self._mailbox[worker_id] = None
+                    return d
+                self._fire_due_lingers_locked()
+                d = self._mailbox[worker_id]
+                if d is not None:
+                    self._mailbox[worker_id] = None
+                    return d
+                timeout = self._poll_timeout_s
+                dl = self._sched.next_linger_deadline()
+                if dl is not None:
+                    timeout = min(timeout, max(0.0, dl[0] - self._clock()))
+                self.lock.wait(timeout)
+            return None
+
     def _worker_loop(self, worker_id: int) -> None:
-        while not self._stop.is_set():
-            reqs = self.queue.get_batch(self.max_batch_size,
-                                        timeout=self._poll_timeout_s,
-                                        linger_s=self.batch_timeout_s)
-            if not reqs:
-                continue
-            self._pending_per_worker[worker_id] = len(reqs)
+        while True:
+            d = self._await_dispatch(worker_id)
+            if d is None:
+                return
+            if self._on_observe is not None:
+                self._on_observe()   # arrival-to-service boundary decision
+            cfg = d.config_index if d.pinned else None
             try:
-                if self._on_observe is not None:
-                    self._on_observe()   # arrival-to-service boundary decision
-                cfg = self.config_for_worker(worker_id)
-                if len(reqs) == 1:
+                if len(d.items) == 1:
                     # unbatched fast path: identical to the pre-batching pool
-                    req = reqs[0]
+                    req = d.items[0]
                     self.executor.execute(req.request_id, req.arrival_s,
                                           req.payload, worker_id=worker_id,
                                           config_index=cfg)
                 else:
-                    self.executor.execute_batch(reqs, worker_id=worker_id,
+                    self.executor.execute_batch(list(d.items),
+                                                worker_id=worker_id,
                                                 config_index=cfg)
             finally:
-                self._pending_per_worker[worker_id] = 0
-            self._served_per_worker[worker_id] += len(reqs)
+                with self.lock:
+                    self._pending_per_worker[worker_id] = 0
+                    self._sched.release(worker_id, self._clock())
+                    self._pump_locked()
+            self._served_per_worker[worker_id] += len(d.items)
             self._dispatches_per_worker[worker_id] += 1
+            if d.stolen:
+                self._stolen_per_worker[worker_id] += 1
             if self._on_observe is not None:
                 self._on_observe()

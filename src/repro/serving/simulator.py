@@ -22,17 +22,35 @@ bit-for-bit) with:
     batch *lingers* up to the batch timeout for arrivals to fill it — the
     same dequeue-up-to-B / linger-window rules the threaded
     :class:`repro.serving.executor.WorkerPool` implements.  One detail is
-    necessarily a deterministic idealization: the threaded pool lets every
-    free worker linger concurrently and arrivals land with whichever
-    lingering/blocked worker the condition variable wakes (a thread race),
-    while the simulator holds ONE forming batch at a time (the lowest free
-    server's) that absorbs all arrivals — a fixed resolution of that race,
-    so agreement with the threaded runtime is at the level of batch caps,
-    linger windows, and buffered-depth accounting, not per-thread
-    interleavings.  Batch service time scales the per-request draw by the
-    measured amortization law S(b) / S(1)
-    (:class:`repro.core.pareto.BatchProfile`; without profiles the
-    fallback S(b) = b * S(1) makes batching service-neutral).
+    necessarily a deterministic idealization: the threaded pool resolves
+    which thread wakes first by a race, while the shared core holds ONE
+    forming batch at a time (the lowest free server's) that absorbs all
+    arrivals — a fixed resolution of that race, so agreement with the
+    threaded runtime is at the level of batch caps, linger windows, and
+    buffered-depth accounting, not per-thread interleavings.  Batch service
+    time scales the per-request draw by the measured amortization law
+    S(b) / S(1) (:class:`repro.core.pareto.BatchProfile`; without profiles
+    the fallback S(b) = b * S(1) makes batching service-neutral),
+  - optional admission control (``max_queue_depth``) with *mix-aware
+    admission* (``admission_reroute``): an arrival over the bound first
+    forces the controller to the fastest rung and is admitted, dropping
+    only when already all-fast or past the table's re-route threshold,
+  - optional per-server backlogs with **work stealing**
+    (``queue_discipline="per_worker"``, ``steal=True``): arrivals are
+    routed round-robin to per-server queues (the static partition of a
+    sharded frontend) and an idle server pulls from the globally deepest
+    backlog once it reaches the steal threshold
+    (:func:`repro.core.aqm.steal_threshold`), always serving stolen work
+    under its *own* pinned configuration.
+
+Since PR 4 every scheduling decision above lives in ONE place —
+:class:`repro.serving.scheduler.Scheduler` — and this module is a thin
+*virtual-time driver*: it owns the event heap, the RNG, and the
+service-time model, feeds events to the scheduler in deterministic order,
+and turns each returned :class:`~repro.serving.scheduler.Dispatch` into a
+sampled service time plus a future completion event.  The threaded
+:class:`repro.serving.engine.ServingEngine` drives the *same* scheduler
+from real threads, so policy fixes and features land once.
 
 Requests are dispatched to the lowest-numbered free server, so per-server
 utilization (``SimulationResult.per_server_busy_s``) is deterministic too.
@@ -50,8 +68,9 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..core.elastico import ElasticoController, ElasticoMixController
+from ..core.elastico import ElasticoController
 from ..core.pareto import BatchProfile
+from .scheduler import Dispatch, Linger, Scheduler
 from .workload import RateFn, generate_arrivals
 
 ServiceSampler = Callable[[int, random.Random], float]
@@ -141,6 +160,10 @@ class SimulationResult:
     assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = field(
         default_factory=list)
     num_batches: int = 0        # dispatches; == len(completed) when unbatched
+    offered: int = 0            # arrivals offered (== completed when no drops)
+    dropped: int = 0            # admission-control rejections
+    rerouted: int = 0           # admissions saved by the mix-aware re-route
+    stolen_batches: int = 0     # dispatches pulled from another backlog
 
     def mean_batch_size(self) -> float:
         """Realized requests per dispatch; 1.0 for unbatched runs."""
@@ -169,6 +192,14 @@ class SimulationResult:
         ok = sum(1 for r in self.completed if r.latency_s <= slo_s)
         return ok / len(self.completed)
 
+    def goodput(self, slo_s: float) -> float:
+        """Fraction of *offered* arrivals served within the SLO — unlike
+        ``slo_compliance`` this charges admission-control drops."""
+        if self.offered == 0:
+            return 1.0
+        ok = sum(1 for r in self.completed if r.latency_s <= slo_s)
+        return ok / self.offered
+
     def mean_accuracy(self, accuracies: Sequence[float]) -> float:
         """Average task accuracy over served requests, where request r served
         under config k scores accuracies[k] in expectation."""
@@ -191,7 +222,8 @@ class SimulationResult:
 
 @dataclass
 class ServingSimulator:
-    """Event-driven M/G/c + Elastico simulator.
+    """Event-driven M/G/c + Elastico simulator: a virtual-time driver over
+    the shared :class:`repro.serving.scheduler.Scheduler`.
 
     ``controller=None`` simulates a static baseline pinned to
     ``static_index`` — the paper's Static-Fast / Medium / Accurate baselines.
@@ -203,8 +235,8 @@ class ServingSimulator:
 
     Heterogeneous pools (beyond-paper): ``assignment`` statically pins
     server i to config ``assignment[i]``, and passing an
-    :class:`ElasticoMixController` as ``controller`` makes the pinning
-    dynamic — each switch event repins exactly one server
+    :class:`repro.core.elastico.ElasticoMixController` as ``controller``
+    makes the pinning dynamic — each switch event repins exactly one server
     (``assignment_timeline`` records the trajectory).  An all-same
     ``assignment`` vector takes the same code path as the homogeneous
     simulator and reproduces ``static_index`` runs exactly (same seeds ->
@@ -224,10 +256,22 @@ class ServingSimulator:
     fewer than B requests are buffered and ``batch_timeout_s > 0``, the
     forming batch *lingers*: a dispatch event fires at the timeout — or
     immediately once arrivals fill the batch — mirroring the threaded
-    pool's ``RequestQueue.get_batch`` linger.  Every member of a batch
-    shares the batch's start/completion times.  ``max_batch_size=1``
-    reproduces the unbatched schedule bit-for-bit (identical rng sequence
-    and event order; no linger events are ever scheduled).
+    pool's linger.  Every member of a batch shares the batch's
+    start/completion times.  ``max_batch_size=1`` reproduces the unbatched
+    schedule bit-for-bit (identical rng sequence and event order; no
+    linger events are ever scheduled).
+
+    Admission control (beyond-paper): ``max_queue_depth`` bounds the
+    buffered depth; rejected arrivals are counted in
+    ``SimulationResult.dropped`` and never complete.
+    ``admission_reroute=True`` (requires a controller and the bound) turns
+    on mix-aware admission: force the fastest rung before rejecting.
+
+    Work stealing (beyond-paper): ``queue_discipline="per_worker"`` routes
+    arrivals round-robin to per-server backlogs; ``steal=True`` lets idle
+    servers pull from the globally deepest backlog at or past
+    ``steal_threshold`` (default: the controller's mix-state threshold, or
+    1).  Stolen work runs under the thief's pinned configuration.
     """
 
     service_sampler: ServiceSampler
@@ -241,48 +285,31 @@ class ServingSimulator:
     max_batch_size: int = 1
     batch_timeout_s: float = 0.0
     batch_profiles: Optional[Sequence[BatchProfile]] = None
+    max_queue_depth: Optional[int] = None
+    admission_reroute: bool = False
+    queue_discipline: str = "shared"
+    steal: bool = False
+    steal_threshold: Optional[int] = None
 
     def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
         if self.num_servers < 1:
             raise ValueError("num_servers must be >= 1")
-        if self.max_batch_size < 1:
-            raise ValueError("max_batch_size must be >= 1")
-        if self.batch_timeout_s < 0:
-            raise ValueError("batch_timeout_s must be >= 0")
         rng = random.Random(self.seed)
-        ctrl = self.controller
-        if ctrl is not None:
-            ctrl.reset()
-        active = ctrl.current_index if ctrl is not None else self.static_index
-        # per-server config pinning: a mix controller drives it dynamically,
-        # a bare `assignment` pins it statically, None = homogeneous (all
-        # servers follow `active`).
-        mix_ctrl = ctrl if isinstance(ctrl, ElasticoMixController) else None
-        if self.assignment is not None and ctrl is not None:
-            # a static pinning under any controller would be silently dead:
-            # a mix controller repins from its own ladder immediately, and a
-            # homogeneous controller's switches would never reach pinned
-            # servers while still being recorded as events.
-            raise ValueError(
-                "assignment is for static runs (controller=None); use "
-                "ElasticoMixController for dynamic per-server pinning")
-        assign: Optional[List[int]] = None
-        if mix_ctrl is not None:
-            assign = list(mix_ctrl.current_assignment)
-        elif self.assignment is not None:
-            assign = [int(a) for a in self.assignment]
-        if assign is not None:
-            if len(assign) != self.num_servers:
-                raise ValueError(
-                    f"assignment length {len(assign)} != num_servers "
-                    f"{self.num_servers}")
-            for a in assign:
-                if a < 0:
-                    raise IndexError(
-                        f"assignment {assign} has negative config index")
-        assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = (
-            [(0.0, tuple(assign))] if assign is not None else [])
-        switch_ready_s = 0.0  # time the latest switch completes
+        sched = Scheduler(
+            num_workers=self.num_servers,
+            max_batch_size=self.max_batch_size,
+            batch_timeout_s=self.batch_timeout_s,
+            max_queue_depth=self.max_queue_depth,
+            controller=self.controller,
+            static_index=self.static_index,
+            assignment=self.assignment,
+            switch_latency_s=self.switch_latency_s,
+            queue_discipline=self.queue_discipline,
+            steal=self.steal,
+            steal_threshold=self.steal_threshold,
+            admission_reroute=self.admission_reroute,
+            record_initial_config=True,
+        )
 
         # event heap: (time, order, kind, payload)
         events: List[Tuple[float, int, str, object]] = []
@@ -296,23 +323,10 @@ class ServingSimulator:
             order += 1
             t += self.control_tick_s
 
-        waiting: List[int] = []            # FIFO queue of request ids
         arrival_time: Dict[int, float] = {i: a for i, a in enumerate(arrivals)}
-        free_servers: List[int] = list(range(self.num_servers))  # min-heap
         busy_s: List[float] = [0.0] * self.num_servers
         completed: List[CompletedRequest] = []
-        timeline: List[Tuple[float, int]] = [(0.0, active)]
         depth_samples: List[Tuple[float, int]] = []
-        num_batches = 0
-
-        # -- in-worker batching state ------------------------------------------
-        B = self.max_batch_size
-        linger_s = self.batch_timeout_s
-        # one forming batch lingers at a time (the lowest free server's);
-        # the token invalidates a scheduled linger event once its batch is
-        # dispatched early (filled by arrivals) or superseded.
-        linger_pending = False
-        linger_token = 0
 
         def batch_service_time(cfg: int, b: int) -> float:
             # one rng draw per dispatch, same order as the unbatched
@@ -326,111 +340,71 @@ class ServingSimulator:
                 return draw * (law.service_time(b) / law.service_time(1))
             return draw * b   # unprofiled: batching is service-neutral
 
-        def queue_depth() -> int:
-            # Elastico keys off the *buffered* queue depth (paper §III-B "a
-            # load monitor that tracks current queue depth"): requests waiting
-            # for service, excluding the up-to-c in service.  Counting the
-            # in-flight requests would make N_up = 0 rungs (the most accurate
-            # configs under tight SLOs, Eq. 10) unreachable at any utilization
-            # and would double-count the pool's own concurrency.
-            return len(waiting)
-
-        def observe(now: float) -> None:
-            nonlocal active, switch_ready_s, assign
-            if ctrl is None:
-                return
-            ev = ctrl.observe(queue_depth(), now)
-            if ev is not None:
-                # the new configuration becomes usable after the switch
-                # latency; the executor keeps draining with the old one.
-                switch_ready_s = now + self.switch_latency_s
-                active = ev.to_index
-                if mix_ctrl is not None:
-                    assign = list(mix_ctrl.assignment_for(ev.to_index))
-                    assignment_timeline.append((now, tuple(assign)))
-                timeline.append((now, active))
-
-        def start_next(now: float, flush: bool = False) -> None:
-            # dispatch as many buffered requests as there are free servers;
-            # lowest-numbered server first keeps the schedule deterministic
-            # (and, under a heterogeneous pinning sorted fastest-first, lets
-            # the faster servers absorb the larger share of the load).  With
-            # batching, each dispatch takes up to B requests; a short batch
-            # lingers until the timeout (``flush=True`` dispatches it) or
-            # until arrivals fill it.
-            nonlocal order, num_batches, linger_pending, linger_token
-            while free_servers and waiting:
-                avail = len(waiting)
-                if avail < B and not flush and linger_s > 0.0:
-                    # hold the short batch open; dispatch at the timeout or
-                    # when the backlog reaches a full batch.
-                    if not linger_pending:
-                        linger_pending = True
-                        linger_token += 1
-                        heapq.heappush(
-                            events, (now + linger_s, order, "linger",
-                                     linger_token))
-                        order += 1
-                    return
-                b = min(B, avail)
-                server = heapq.heappop(free_servers)
-                batch = [waiting.pop(0) for _ in range(b)]
-                if linger_pending:
-                    # whatever was lingering just dispatched (filled or
-                    # flushed); invalidate the scheduled timeout event.
-                    linger_pending = False
-                    linger_token += 1
-                start = max(now, switch_ready_s) if now < switch_ready_s else now
-                cfg = active if assign is None else assign[server]
-                svc = batch_service_time(cfg, b)
-                comp = start + svc
-                busy_s[server] += comp - start
-                num_batches += 1
-                for rid in batch:
+        def execute(polled: Tuple[List[Dispatch], List[Linger]]) -> None:
+            # Turn each scheduler decision into simulated service: draw the
+            # batch's service time, record the members, and schedule the
+            # completion (and any linger expiry) on the event heap — in the
+            # same push order the pre-refactor loop used, so event
+            # tie-breaks are unchanged.
+            nonlocal order
+            dispatches, lingers = polled
+            for d in dispatches:
+                svc = batch_service_time(d.config_index, d.batch_size)
+                comp = d.start_s + svc
+                busy_s[d.worker_id] += comp - d.start_s
+                for rid in d.items:
                     completed.append(CompletedRequest(
                         request_id=rid,
                         arrival_s=arrival_time[rid],
-                        start_s=start,
+                        start_s=d.start_s,
                         completion_s=comp,
-                        config_index=cfg,
-                        server_id=server,
-                        batch_size=b,
+                        config_index=d.config_index,
+                        server_id=d.worker_id,
+                        batch_size=d.batch_size,
                     ))
-                heapq.heappush(events, (comp, order, "completion", server))
+                heapq.heappush(events, (comp, order, "completion", d.worker_id))
                 order += 1
-                flush = False   # the expired window covered one batch only
+            for lg in lingers:
+                heapq.heappush(events, (lg.deadline_s, order, "linger",
+                                        lg.token))
+                order += 1
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if now > duration_s and kind == "tick":
                 continue
             if kind == "arrival":
-                waiting.append(int(payload))  # type: ignore[arg-type]
-                start_next(now)
-                observe(now)
+                sched.offer(int(payload), now)  # type: ignore[arg-type]
+                execute(sched.poll(now))
+                sched.observe(now)
             elif kind == "completion":
-                heapq.heappush(free_servers, int(payload))  # type: ignore[arg-type]
-                start_next(now)
-                observe(now)
+                sched.release(int(payload), now)  # type: ignore[arg-type]
+                execute(sched.poll(now))
+                sched.observe(now)
             elif kind == "linger":
-                if linger_pending and payload == linger_token:
-                    linger_pending = False
-                    start_next(now, flush=True)
-                    observe(now)
+                res = sched.on_linger_expired(int(payload), now)  # type: ignore[arg-type]
+                if res is not None:
+                    execute(res)
+                    sched.observe(now)
                 # else: stale timeout for a batch that already dispatched
             else:  # control tick
-                observe(now)
-                start_next(now)
-                depth_samples.append((now, queue_depth()))
+                sched.observe(now)
+                execute(sched.poll(now))
+                depth_samples.append((now, sched.buffered()))
 
+        ctrl = self.controller
         return SimulationResult(
             completed=completed,
             switch_events=list(ctrl.events) if ctrl is not None else [],
-            config_timeline=timeline,
+            config_timeline=list(sched.config_timeline),
             queue_depth_samples=depth_samples,
             duration_s=duration_s,
             num_servers=self.num_servers,
             per_server_busy_s=busy_s,
-            assignment_timeline=assignment_timeline,
-            num_batches=num_batches,
+            assignment_timeline=list(sched.assignment_timeline),
+            num_batches=sched.num_batches,
+            offered=sched.offered,
+            dropped=sched.dropped,
+            rerouted=sched.rerouted,
+            stolen_batches=sched.stolen_batches,
         )

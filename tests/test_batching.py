@@ -2,7 +2,6 @@
 thresholds, linger semantics, and the max_batch_size=1 golden equivalences
 against the PR-2 (unbatched) engine and simulator."""
 
-import threading
 import time
 
 import pytest
@@ -28,7 +27,7 @@ from repro.core.pareto import (
 from repro.core.planner import Planner
 from repro.serving.engine import ServingEngine
 from repro.serving.executor import WorkerPool, WorkflowExecutor
-from repro.serving.queue import RequestQueue
+from repro.serving.scheduler import Scheduler
 from repro.serving.simulator import (
     ServingSimulator,
     lognormal_sampler_from_profile,
@@ -316,138 +315,124 @@ def test_planner_measures_batch_profile_and_batch_thresholds():
     assert "batching" not in plan_unb.describe()
 
 
-# -- queue.get_batch -----------------------------------------------------------
+# -- scheduler batch draining / linger -----------------------------------------
+#
+# These used to exercise RequestQueue.get_batch's threaded linger; the
+# semantics now live in the shared Scheduler and are tested in pure
+# virtual time (no sleeps, no threads) — the same code path both the
+# engine and the simulator drive.
 
 
 def _req(i):
     return Request(request_id=i, arrival_s=0.0)
 
 
-def test_get_batch_equals_get_at_size_one():
-    q = RequestQueue()
-    for i in range(3):
-        q.put(_req(i))
-    assert [r.request_id for r in q.get_batch(1)] == [0]
-    assert q.get().request_id == 1
-    assert [r.request_id for r in q.get_batch(1, timeout=0.01,
-                                              linger_s=10.0)] == [2]
-    # empty queue: times out without lingering (batch never started)
-    t0 = time.monotonic()
-    assert q.get_batch(1, timeout=0.02, linger_s=10.0) == []
-    assert time.monotonic() - t0 < 1.0
+def _ids(dispatches):
+    return [r.request_id for d in dispatches for r in d.items]
 
 
-def test_get_batch_drains_fifo_run_greedily():
-    q = RequestQueue()
+def test_scheduler_b1_never_lingers():
+    """max_batch_size=1: a batch is full at the first request, so the
+    linger window never opens even with a huge timeout."""
+    s = Scheduler(num_workers=1, max_batch_size=1, batch_timeout_s=10.0)
+    s.offer(_req(0), 0.0)
+    dispatches, lingers = s.poll(0.0)
+    assert _ids(dispatches) == [0]
+    assert lingers == []
+    assert s.next_linger_deadline() is None
+
+
+def test_scheduler_batches_drain_fifo_runs_greedily():
+    s = Scheduler(num_workers=2, max_batch_size=4)
     for i in range(10):
-        q.put(_req(i))
-    assert [r.request_id for r in q.get_batch(4)] == [0, 1, 2, 3]
-    assert [r.request_id for r in q.get_batch(8)] == [4, 5, 6, 7, 8, 9]
+        s.offer(_req(i), 0.0)
+    dispatches, _ = s.poll(0.0)
+    assert [_ids([d]) for d in dispatches] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    assert [d.worker_id for d in dispatches] == [0, 1]
+    s.release(0, 1.0)
+    dispatches, _ = s.poll(1.0)
+    assert _ids(dispatches) == [8, 9]
     with pytest.raises(ValueError):
-        q.get_batch(0)
+        Scheduler(num_workers=1, max_batch_size=0)
 
 
-def test_get_batch_linger_fills_from_late_arrivals():
+def test_scheduler_linger_fills_from_late_arrivals():
     """A short batch held open by the linger window must absorb arrivals
-    that land inside it and dispatch the moment it fills."""
-    q = RequestQueue()
-    q.put(_req(0))
-    got = {}
-
-    def consumer():
-        got["batch"] = q.get_batch(3, timeout=1.0, linger_s=5.0)
-
-    t = threading.Thread(target=consumer)
-    t0 = time.monotonic()
-    t.start()
-    time.sleep(0.05)
-    q.put(_req(1))
-    q.put(_req(2))
-    t.join(timeout=5.0)
-    elapsed = time.monotonic() - t0
-    assert [r.request_id for r in got["batch"]] == [0, 1, 2]
-    assert elapsed < 2.0          # dispatched on fill, not at the 5 s window
+    that land inside it and dispatch the moment it fills — before the
+    window expires."""
+    s = Scheduler(num_workers=1, max_batch_size=3, batch_timeout_s=5.0)
+    s.offer(_req(0), 0.0)
+    dispatches, lingers = s.poll(0.0)
+    assert dispatches == [] and len(lingers) == 1
+    assert lingers[0].deadline_s == pytest.approx(5.0)
+    s.offer(_req(1), 0.05)
+    assert s.poll(0.05) == ([], [])       # still short: keeps lingering
+    s.offer(_req(2), 0.06)
+    dispatches, _ = s.poll(0.06)          # full: dispatches at the fill time
+    assert _ids(dispatches) == [0, 1, 2]
+    assert dispatches[0].start_s == pytest.approx(0.06)
+    # the scheduled expiry is now stale
+    assert s.on_linger_expired(lingers[0].token, 5.0) is None
 
 
-def test_get_batch_linger_timeout_returns_partial():
-    q = RequestQueue()
-    q.put(_req(0))
-    t0 = time.monotonic()
-    batch = q.get_batch(4, timeout=1.0, linger_s=0.05)
-    elapsed = time.monotonic() - t0
-    assert [r.request_id for r in batch] == [0]
-    assert 0.04 <= elapsed < 1.0  # waited the window, then gave up
+def test_scheduler_linger_timeout_flushes_partial():
+    s = Scheduler(num_workers=1, max_batch_size=4, batch_timeout_s=0.05)
+    s.offer(_req(0), 0.0)
+    _, lingers = s.poll(0.0)
+    res = s.on_linger_expired(lingers[0].token, 0.05)
+    assert res is not None
+    dispatches, _ = res
+    assert _ids(dispatches) == [0]
+    assert dispatches[0].batch_size == 1
+    assert dispatches[0].start_s == pytest.approx(0.05)
 
 
-def test_get_batch_linger_claim_visible_as_buffered():
-    """Requests held by a lingering get_batch must stay visible: the queue's
-    buffered() counts them (matching the simulator's waiting list) even
-    though depth() no longer does — this is what the engine's controller
-    observations and drain loop key off."""
-    q = RequestQueue()
-    q.put(_req(0))
-    q.put(_req(1))
-    in_linger = threading.Event()
-    got = {}
-
-    def consumer():
-        in_linger.set()
-        got["batch"] = q.get_batch(8, timeout=1.0, linger_s=0.3)
-
-    t = threading.Thread(target=consumer)
-    t.start()
-    in_linger.wait()
-    time.sleep(0.1)                # worker is mid-linger holding both
-    assert q.depth() == 0          # popped out of the deque...
-    assert q.claimed() == 2        # ...but claimed by the forming batch
-    assert q.buffered() == 2
-    t.join(timeout=5.0)
-    assert len(got["batch"]) == 2
-    assert q.claimed() == 0 and q.buffered() == 0
+def test_scheduler_forming_batch_visible_as_buffered():
+    """Requests held by a forming (lingering) batch must stay visible in
+    buffered() — that is the depth the controller observes and the
+    engine's drain loop keys off, and it matches the simulator exactly
+    because both drive this one implementation."""
+    s = Scheduler(num_workers=1, max_batch_size=8, batch_timeout_s=0.3)
+    s.offer(_req(0), 0.0)
+    s.offer(_req(1), 0.0)
+    _, lingers = s.poll(0.0)
+    assert len(lingers) == 1              # forming batch held open
+    assert s.buffered() == 2              # still counted while forming
+    res = s.on_linger_expired(lingers[0].token, 0.3)
+    dispatches, _ = res
+    assert len(dispatches[0].items) == 2
+    assert s.buffered() == 0
 
 
-def test_bounded_queue_counts_claimed_toward_admission():
-    """Admission control must bound buffered (waiting + claimed), not just
-    the deque: a lingering batch vacating deque slots must not let the
-    bounded queue admit past max_depth."""
-    q = RequestQueue(max_depth=2)
-    q.put(_req(0))
-    q.put(_req(1))
-    in_linger = threading.Event()
-    got = {}
-
-    def consumer():
-        in_linger.set()
-        got["batch"] = q.get_batch(8, timeout=1.0, linger_s=0.3)
-
-    t = threading.Thread(target=consumer)
-    t.start()
-    in_linger.wait()
-    time.sleep(0.1)                   # both requests now claimed, deque empty
-    assert q.depth() == 0
-    assert q.buffered() == 2
-    assert not q.put(_req(2))         # still full: claimed occupy the bound
-    assert q.total_dropped == 1
-    t.join(timeout=5.0)
-    assert len(got["batch"]) == 2
-    assert q.put(_req(3))             # batch dispatched: capacity freed
+def test_bounded_scheduler_counts_forming_batch_toward_admission():
+    """Admission control bounds buffered depth *including* a forming
+    batch: holding requests in a linger window must not let the bounded
+    scheduler admit past max_queue_depth."""
+    s = Scheduler(num_workers=1, max_batch_size=8, batch_timeout_s=0.3,
+                  max_queue_depth=2)
+    assert s.offer(_req(0), 0.0).admitted
+    assert s.offer(_req(1), 0.0).admitted
+    _, lingers = s.poll(0.0)
+    assert s.buffered() == 2              # both held by the forming batch
+    assert not s.offer(_req(2), 0.1).admitted   # still full
+    assert s.dropped == 1
+    res = s.on_linger_expired(lingers[0].token, 0.3)
+    assert len(res[0][0].items) == 2      # batch dispatched: capacity freed
+    assert s.offer(_req(3), 0.4).admitted
 
 
-def test_get_batch_close_releases_lingerer():
-    q = RequestQueue()
-    q.put(_req(0))
-    got = {}
-
-    def consumer():
-        got["batch"] = q.get_batch(4, timeout=1.0, linger_s=30.0)
-
-    t = threading.Thread(target=consumer)
-    t.start()
-    time.sleep(0.05)
-    q.close()
-    t.join(timeout=5.0)
-    assert not t.is_alive()
-    assert [r.request_id for r in got["batch"]] == [0]
+def test_scheduler_stale_linger_token_is_noop():
+    """An expiry for a batch that already dispatched (filled early) must
+    not flush anything — the token invalidation the old threaded queue
+    implemented with its claimed-count machinery."""
+    s = Scheduler(num_workers=1, max_batch_size=2, batch_timeout_s=1.0)
+    s.offer(_req(0), 0.0)
+    _, lingers = s.poll(0.0)
+    s.offer(_req(1), 0.2)
+    dispatches, _ = s.poll(0.2)           # fills -> dispatches early
+    assert _ids(dispatches) == [0, 1]
+    assert s.on_linger_expired(lingers[0].token, 1.0) is None
+    assert s.buffered() == 0
 
 
 # -- executor.execute_batch ----------------------------------------------------
@@ -589,13 +574,12 @@ def test_engine_linger_does_not_lose_partial_batches():
 
 
 def test_worker_pool_batch_validation():
-    q = RequestQueue()
     ex = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=sleep_workflow)
     with pytest.raises(ValueError):
-        WorkerPool(ex, q, c=1, max_batch_size=0)
+        WorkerPool(ex, c=1, max_batch_size=0)
     with pytest.raises(ValueError):
-        WorkerPool(ex, q, c=1, batch_timeout_s=-0.1)
-    pool = WorkerPool(ex, q, c=2, max_batch_size=4)
+        WorkerPool(ex, c=1, batch_timeout_s=-0.1)
+    pool = WorkerPool(ex, c=2, max_batch_size=4)
     assert pool.mean_batch_size() == 1.0       # before any dispatch
     assert pool.pending() == 0
 

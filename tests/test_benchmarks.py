@@ -3,12 +3,17 @@
 Benchmarks bit-rot silently — they only run when someone reproduces a
 figure, so a refactor that renames a symbol they import can sit broken for
 PRs at a time.  Importing every module (and checking the driver's registry
-is complete) catches that class of rot at tier-1 cost.  Actually *running*
-the benchmarks stays out of tier-1; ``python -m benchmarks.run --smoke``
-runs each one at its smallest setting as the cheap execution gate.
+is complete) catches that class of rot at tier-1 cost.  Running every
+benchmark stays out of tier-1; ``python -m benchmarks.run --smoke`` runs
+each one at its smallest setting as the cheap execution gate — of which
+the multi-server smoke (the serving substrate's acceptance sweep,
+including the work-stealing setting) and the ``--check-docs`` gate are
+cheap enough to execute here outright.
 """
 
 import importlib
+import os
+import subprocess
 import sys
 from pathlib import Path
 
@@ -65,3 +70,29 @@ def test_smoke_flag_is_wired():
     # the smallest-setting entry points the smoke gate relies on
     msb = importlib.import_module("benchmarks.multi_server_bench")
     assert callable(msb.run_smoke)
+
+
+def _run_gate(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+
+
+def test_multi_server_smoke_gate_exits_zero():
+    """The CI smoke path must actually run: the multi-server smoke sweep
+    (all four parts, including the work-stealing setting) exits 0 and its
+    acceptance checks hold."""
+    proc = _run_gate("--smoke", "multi_server")
+    assert proc.returncode == 0, proc.stderr
+    assert "multi_server," in proc.stdout
+    assert "steal" in proc.stdout           # part 4 ran
+    assert "FAILED" not in proc.stdout      # no acceptance check tripped
+
+
+def test_check_docs_gate_exits_zero():
+    proc = _run_gate("--check-docs")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "docscheck: OK" in proc.stdout

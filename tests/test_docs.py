@@ -35,6 +35,7 @@ def test_required_documents_exist():
     assert "docs/architecture.md" in names
     assert "docs/queueing.md" in names
     assert "docs/batching.md" in names
+    assert "docs/scheduler.md" in names
 
 
 def test_extract_skips_fenced_blocks():

@@ -9,7 +9,7 @@ from repro.core.elastico import ElasticoController
 from repro.serving.engine import ServingEngine, replay_workload
 from repro.serving.executor import WorkflowExecutor
 from repro.serving.monitor import LoadMonitor
-from repro.serving.queue import RequestQueue
+from repro.serving.scheduler import Scheduler
 from repro.serving.workload import Request
 
 from conftest import synthetic_point
@@ -78,16 +78,24 @@ def test_replay_workload_timing():
     assert time.monotonic() - t0 >= 0.04
 
 
-def test_request_queue_fifo_and_close():
-    q = RequestQueue()
+def test_scheduler_fifo_and_close():
+    """The shared core preserves FIFO order across dispatches and rejects
+    ingress after close (the semantics the old RequestQueue provided for
+    the engine alone)."""
+    s = Scheduler(num_workers=1)
     for i in range(5):
-        q.put(Request(request_id=i, arrival_s=0.0))
-    assert q.depth() == 5
-    assert [q.get().request_id for _ in range(5)] == list(range(5))
-    q.close()
-    assert q.get(timeout=0.01) is None
+        s.offer(Request(request_id=i, arrival_s=0.0), 0.0)
+    assert s.buffered() == 5
+    served = []
+    for t in range(5):
+        dispatches, _ = s.poll(float(t))
+        for d in dispatches:
+            served.extend(r.request_id for r in d.items)
+            s.release(d.worker_id, float(t))
+    assert served == list(range(5))
+    s.close()
     with pytest.raises(RuntimeError):
-        q.put(Request(request_id=9, arrival_s=0.0))
+        s.offer(Request(request_id=9, arrival_s=0.0), 9.0)
 
 
 def test_load_monitor_rates():

@@ -23,7 +23,6 @@ from repro.core.elastico import ElasticoController, ElasticoMixController
 from repro.core.planner import Planner
 from repro.serving.engine import ServingEngine
 from repro.serving.executor import WorkerPool, WorkflowExecutor
-from repro.serving.queue import RequestQueue
 from repro.serving.simulator import (
     ServingSimulator,
     lognormal_sampler_from_profile,
@@ -326,14 +325,13 @@ def sleep_workflow(config, payload):
 
 
 def test_worker_pool_assignment_pins_configs():
-    q = RequestQueue()
     executor = WorkflowExecutor(configs=[("cfg", 0), ("cfg", 1), ("cfg", 2)],
                                 workflow_fn=sleep_workflow)
-    pool = WorkerPool(executor, q, c=3, assignment=[0, 1, 2])
+    pool = WorkerPool(executor, c=3, assignment=[0, 1, 2])
     assert pool.assignment() == (0, 1, 2)
     pool.start()
     for i in range(60):
-        q.put(Request(request_id=i, arrival_s=0.0))
+        pool.submit(Request(request_id=i, arrival_s=0.0))
     deadline = time.monotonic() + 10.0
     while len(executor.records) < 60 and time.monotonic() < deadline:
         time.sleep(0.005)
@@ -344,10 +342,9 @@ def test_worker_pool_assignment_pins_configs():
 
 
 def test_worker_pool_assignment_validation():
-    q = RequestQueue()
     executor = WorkflowExecutor(configs=[("cfg", 0)],
                                 workflow_fn=sleep_workflow)
-    pool = WorkerPool(executor, q, c=2)
+    pool = WorkerPool(executor, c=2)
     assert pool.assignment() is None
     assert pool.config_for_worker(0) is None
     with pytest.raises(ValueError):

@@ -20,7 +20,7 @@ from repro.core.aqm import (
 from repro.core.elastico import ElasticoController
 from repro.serving.engine import ServingEngine
 from repro.serving.executor import WorkerPool, WorkflowExecutor
-from repro.serving.queue import RequestQueue
+from repro.serving.scheduler import Scheduler
 from repro.serving.simulator import (
     ServingSimulator,
     exponential_sampler,
@@ -369,17 +369,22 @@ def test_admission_control_counts_drops():
     assert report.goodput(10.0) <= report.slo_compliance(10.0)
 
 
-def test_bounded_queue_put_semantics():
-    q = RequestQueue(max_depth=2)
-    assert q.put(Request(request_id=0, arrival_s=0.0))
-    assert q.put(Request(request_id=1, arrival_s=0.0))
-    assert not q.put(Request(request_id=2, arrival_s=0.0))
-    assert q.total_enqueued == 2
-    assert q.total_dropped == 1
-    assert q.get().request_id == 0
-    assert q.put(Request(request_id=3, arrival_s=0.0))
+def test_bounded_scheduler_admission_semantics():
+    """The scheduler's admission bound: offers over max_queue_depth are
+    rejected and counted; dispatching frees capacity (the exact semantics
+    the old bounded RequestQueue implemented for the engine alone — now
+    shared with the simulator)."""
+    s = Scheduler(num_workers=1, max_queue_depth=2)
+    assert s.offer(Request(request_id=0, arrival_s=0.0), 0.0).admitted
+    assert s.offer(Request(request_id=1, arrival_s=0.0), 0.0).admitted
+    assert not s.offer(Request(request_id=2, arrival_s=0.0), 0.0).admitted
+    assert s.offered == 3
+    assert s.dropped == 1
+    dispatches, _ = s.poll(0.0)
+    assert [r.request_id for d in dispatches for r in d.items] == [0]
+    assert s.offer(Request(request_id=3, arrival_s=0.0), 0.1).admitted
     with pytest.raises(ValueError):
-        RequestQueue(max_depth=0)
+        Scheduler(num_workers=1, max_queue_depth=0)
 
 
 def test_engine_monitor_shares_time_axis():
@@ -407,14 +412,13 @@ def test_engine_monitor_shares_time_axis():
 
 def test_worker_pool_standalone():
     """WorkerPool used directly (without the engine): c workers drain the
-    shared queue and every record lands in the executor."""
-    q = RequestQueue()
+    shared scheduler and every record lands in the executor."""
     executor = WorkflowExecutor(configs=[("cfg", 0)],
                                 workflow_fn=lambda cfg, p: p)
-    pool = WorkerPool(executor, q, c=3)
+    pool = WorkerPool(executor, c=3)
     pool.start()
     for i in range(50):
-        q.put(Request(request_id=i, arrival_s=0.0))
+        pool.submit(Request(request_id=i, arrival_s=0.0))
     deadline = time.monotonic() + 10.0
     while len(executor.records) < 50 and time.monotonic() < deadline:
         time.sleep(0.005)
@@ -422,4 +426,4 @@ def test_worker_pool_standalone():
     assert sorted(r.request_id for r in executor.records) == list(range(50))
     assert pool.num_workers == 3
     with pytest.raises(ValueError):
-        WorkerPool(executor, q, c=0)
+        WorkerPool(executor, c=0)

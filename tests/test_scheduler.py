@@ -1,0 +1,362 @@
+"""The shared scheduling core: invariants, work stealing, mix-aware
+admission, and the threaded/simulated drivers exercising one policy.
+
+Property tests run through the ``tests/proptest.py`` hypothesis shim and
+pin the scheduler's conservation guarantees: no admitted request is ever
+lost or double-dispatched, and a steal never violates assignment pinning
+(stolen work runs under the thief's own rung)."""
+
+import time
+
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    derive_mix_policies,
+    derive_policies,
+    steal_threshold,
+)
+from repro.core.elastico import ElasticoController, ElasticoMixController
+from repro.serving.engine import ServingEngine, replay_workload
+from repro.serving.executor import WorkflowExecutor
+from repro.serving.scheduler import Scheduler
+from repro.serving.simulator import (
+    ServingSimulator,
+    deterministic_sampler,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    Request,
+    constant_rate,
+    flash_crowd_pattern,
+    generate_arrivals,
+    sustained_overload_pattern,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+SLO_S = 1.0
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+# -- construction-time validation ----------------------------------------------
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=0)
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=1, queue_discipline="priority")
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=2, steal=True)   # needs per-worker queues
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=2, queue_discipline="per_worker",
+                  batch_timeout_s=0.1)         # linger is shared-queue only
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=2, queue_discipline="per_worker", steal=True,
+                  steal_threshold=0)
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=1, admission_reroute=True)  # needs controller+bound
+    with pytest.raises(ValueError):
+        Scheduler(num_workers=2, assignment=[0])          # wrong length
+    with pytest.raises(IndexError):
+        Scheduler(num_workers=2, assignment=[0, -1])
+    with pytest.raises(IndexError):
+        Scheduler(num_workers=2, assignment=[0, 5], num_configs=2)
+
+
+# -- per-worker queues and stealing --------------------------------------------
+
+
+def test_per_worker_round_robin_routing():
+    s = Scheduler(num_workers=3, queue_discipline="per_worker")
+    for i in range(7):
+        s.offer(i, 0.0)
+    assert s.backlog_depths() == [3, 2, 2]
+    assert s.buffered() == 7
+
+
+def test_steal_takes_deepest_backlog_under_thief_pin():
+    """An idle worker with an empty backlog pulls from the globally deepest
+    backlog — and serves the stolen request under its OWN pinned config."""
+    s = Scheduler(num_workers=2, queue_discipline="per_worker", steal=True,
+                  steal_threshold=1, assignment=[0, 1], num_configs=2)
+    for i in range(6):            # round-robin: w0 <- 0,2,4 ; w1 <- 1,3,5
+        s.offer(i, 0.0)
+    first, _ = s.poll(0.0)
+    assert [(d.worker_id, d.items[0], d.config_index) for d in first] == \
+        [(0, 0, 0), (1, 1, 1)]
+    for t in range(3):
+        s.release(0, float(t))    # only the fast worker keeps freeing
+        ds, _ = s.poll(float(t))
+        assert len(ds) == 1 and ds[0].worker_id == 0
+    # w0 drained its own 2, 4 first, then stole w1's head (3) — under pin 0
+    stolen = ds[0]
+    assert stolen.items == (3,)
+    assert stolen.stolen
+    assert stolen.config_index == 0          # thief's pin, not the victim's
+    assert s.backlog_depths() == [0, 1]      # 5 still with its owner
+    assert s.stolen_batches == 1
+
+
+def test_steal_respects_threshold():
+    s = Scheduler(num_workers=2, queue_discipline="per_worker", steal=True,
+                  steal_threshold=3)
+    s.offer(0, 0.0)               # w0's backlog
+    s.offer(1, 0.0)               # w1's backlog
+    ds, _ = s.poll(0.0)           # both serve their own
+    s.release(0, 1.0)
+    s.offer(2, 1.0)               # w0's backlog -> w0 takes it
+    ds, _ = s.poll(1.0)
+    assert [(d.worker_id, d.items[0]) for d in ds] == [(0, 2)]
+    s.release(0, 2.0)
+    s.offer(3, 2.0)               # w1's backlog: depth 1 < threshold 3
+    ds, _ = s.poll(2.0)
+    assert ds == []               # w0 idles rather than steal a shallow queue
+    s.offer(5, 3.0)               # w0's own backlog: takes it normally
+    ds, _ = s.poll(3.0)
+    assert [(d.worker_id, d.items[0], d.stolen) for d in ds] == [(0, 5, False)]
+
+
+# -- conservation properties (proptest shim) -----------------------------------
+
+
+@given(st.integers(1, 5), st.integers(0, 2**16), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_shared_scheduler_conserves_requests(c, seed, batch):
+    """Simulator-driven conservation: every arrival completes exactly once,
+    for any pool size / seed / batch cap."""
+    arr = generate_arrivals(constant_rate(6.0), 15.0, seed=seed)
+    out = ServingSimulator(
+        deterministic_sampler(MEANS), static_index=0, seed=seed,
+        num_servers=c, max_batch_size=batch,
+    ).run(arr, 15.0)
+    ids = [r.request_id for r in out.completed]
+    assert len(ids) == len(arr)
+    assert len(set(ids)) == len(ids)
+
+
+@given(st.integers(2, 5), st.integers(0, 2**16), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_stealing_scheduler_conserves_and_respects_pinning(c, seed, thr):
+    """Per-worker queues with stealing: no request lost or double-served,
+    and every request — stolen or not — runs under the config its *server*
+    is pinned to (a steal moves work, never breaks pinning)."""
+    assignment = [i % 3 for i in range(c)]
+    arr = generate_arrivals(constant_rate(5.0), 15.0, seed=seed)
+    out = ServingSimulator(
+        lognormal_sampler_from_profile(MEANS, P95S),
+        assignment=assignment, seed=seed, num_servers=c,
+        queue_discipline="per_worker", steal=True, steal_threshold=thr,
+    ).run(arr, 15.0)
+    ids = [r.request_id for r in out.completed]
+    assert len(ids) == len(arr)
+    assert len(set(ids)) == len(ids)
+    for r in out.completed:
+        assert r.config_index == assignment[r.server_id]
+
+
+@given(st.integers(1, 4), st.integers(0, 2**16), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_bounded_scheduler_accounts_every_offer(c, seed, depth):
+    """With admission control: offered == completed + dropped, exactly."""
+    arr = generate_arrivals(constant_rate(12.0), 10.0, seed=seed)
+    out = ServingSimulator(
+        deterministic_sampler(MEANS), static_index=2, seed=seed,
+        num_servers=c, max_queue_depth=depth,
+    ).run(arr, 10.0)
+    assert out.offered == len(arr)
+    assert len(out.completed) + out.dropped == out.offered
+    ids = [r.request_id for r in out.completed]
+    assert len(set(ids)) == len(ids)
+
+
+# -- steal / re-route threshold derivation (core/aqm) --------------------------
+
+
+def test_steal_threshold_slo_aware_values():
+    front = ladder_front()
+    # homogeneous all-fast: the worker itself drains floor(0.86/0.10) = 8
+    # inside its slack — don't break locality before that.
+    assert steal_threshold(front, (0, 0, 0, 0), slo_p95_s=SLO_S) == 8
+    # a skewed mix drowns at its slowest rung: floor(0.37/0.45) = 0 -> 1.
+    assert steal_threshold(front, (0, 0, 2, 2), slo_p95_s=SLO_S) == 1
+    assert steal_threshold(front, (1,), slo_p95_s=SLO_S) == \
+        int((SLO_S - P95S[1]) / MEANS[1])
+    with pytest.raises(ValueError):
+        steal_threshold(front, (), slo_p95_s=SLO_S)
+    with pytest.raises(ValueError):
+        steal_threshold(front, (0,), slo_p95_s=0.0)
+    with pytest.raises(IndexError):
+        steal_threshold(front, (7,), slo_p95_s=SLO_S)
+
+
+def test_mix_table_emits_steal_and_reroute_thresholds():
+    table = derive_mix_policies(ladder_front(), slo_p95_s=SLO_S,
+                                num_servers=4)
+    assert table.reroute_threshold == table.policies[0].upscale_threshold
+    for mp in table.policies:
+        assert mp.steal_threshold >= 1
+        assert mp.steal_threshold == steal_threshold(
+            ladder_front(), mp.assignment, slo_p95_s=SLO_S)
+    # all-fast states tolerate the deepest local backlog before stealing
+    assert table.policies[0].steal_threshold == \
+        max(p.steal_threshold for p in table.policies)
+
+
+def test_scheduler_uses_mix_state_steal_threshold():
+    table = derive_mix_policies(ladder_front(), slo_p95_s=SLO_S,
+                                num_servers=2)
+    ctrl = ElasticoMixController(table)
+    s = Scheduler(num_workers=2, queue_discipline="per_worker", steal=True,
+                  controller=ctrl)
+    # starts at the top (all-accurate) state; explicit param would override
+    assert s.current_steal_threshold() == table.policies[-1].steal_threshold
+    s2 = Scheduler(num_workers=2, queue_discipline="per_worker", steal=True,
+                   controller=ElasticoMixController(table), steal_threshold=7)
+    assert s2.current_steal_threshold() == 7
+
+
+# -- mix-aware admission -------------------------------------------------------
+
+
+def test_force_fastest_jumps_and_records():
+    table = derive_policies(ladder_front(), slo_p95_s=SLO_S)
+    ctrl = ElasticoController(table)     # starts most accurate
+    ev = ctrl.force_fastest(9, 1.0)
+    assert ev is not None
+    assert ev.to_index == 0 and ev.direction == "faster"
+    assert "admission reroute" in ev.reason
+    assert ctrl.current_index == 0
+    assert ctrl.events[-1] is ev
+    assert ctrl.force_fastest(9, 2.0) is None   # already all-fast: drop
+    with pytest.raises(ValueError):
+        ctrl.force_fastest(-1, 3.0)
+
+
+def test_admission_reroute_saves_goodput_under_flash_crowd():
+    """Mix-aware admission: a tight bound clamps the observed depth below
+    the mix thresholds, so a plain bounded pool gets stuck mid-ladder and
+    drops for the whole crowd; re-routing to the all-fast state first
+    converts most of those drops into served requests."""
+    front = ladder_front()
+    table = derive_mix_policies(front, slo_p95_s=SLO_S,
+                                hysteresis=HysteresisSpec(downscale_cooldown_s=5.0),
+                                num_servers=4)
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arr = generate_arrivals(
+        flash_crowd_pattern(3.0, peak_factor=15.0, crowd_start_s=40.0,
+                            ramp_s=1.0, hold_s=25.0), 120.0, seed=1)
+    outs = {}
+    for name, reroute in [("bounded", False), ("reroute", True)]:
+        outs[name] = ServingSimulator(
+            sampler, controller=ElasticoMixController(table), seed=0,
+            num_servers=4, max_queue_depth=8, admission_reroute=reroute,
+        ).run(arr, 120.0)
+    plain, rerouted = outs["bounded"], outs["reroute"]
+    assert rerouted.rerouted > 0
+    assert rerouted.dropped < plain.dropped * 0.5
+    assert rerouted.goodput(SLO_S) > plain.goodput(SLO_S) + 0.1
+    assert any("admission reroute" in e.reason for e in rerouted.switch_events)
+    # conservation still holds with drops in play
+    assert len(rerouted.completed) + rerouted.dropped == rerouted.offered
+
+
+def test_admission_reroute_respects_table_cap():
+    """Past the table's reroute_threshold even the all-fast mix cannot
+    drain inside the SLO — the scheduler must drop, not re-route."""
+    table = derive_mix_policies(ladder_front(), slo_p95_s=SLO_S,
+                                num_servers=1)
+    cap = table.reroute_threshold
+    ctrl = ElasticoMixController(table)
+    s = Scheduler(num_workers=1, max_queue_depth=cap + 1, controller=ctrl,
+                  admission_reroute=True)
+    for i in range(cap + 1):
+        assert s.offer(i, 0.0).admitted
+    # depth is now cap + 1 > cap: no re-route, hard drop
+    adm = s.offer(999, 0.0)
+    assert not adm.admitted and adm.event is None
+    assert ctrl.current_index == table.ladder_size - 1   # never forced
+
+
+# -- threaded drivers over the same core ---------------------------------------
+
+
+def _sleepy(d):
+    def fn(config, payload):
+        time.sleep(d[config[1]])
+        return payload
+    return fn
+
+
+def test_engine_steals_across_pinned_workers():
+    """Threaded path: per-worker queues + stealing through the same core —
+    the fast worker absorbs the slow worker's backlog, nothing is lost,
+    and stolen requests run under the thief's pin."""
+    executor = WorkflowExecutor(
+        configs=[("cfg", 0), ("cfg", 1)],
+        workflow_fn=_sleepy({0: 0.001, 1: 0.02}))
+    engine = ServingEngine(executor, num_workers=2, assignment=[0, 1],
+                           control_tick_s=0.01,
+                           queue_discipline="per_worker", steal=True,
+                           steal_threshold=1)
+    engine.start()
+    for i in range(60):
+        engine.submit(Request(request_id=i, arrival_s=0.0))
+    report = engine.drain_and_stop()
+    assert sorted(r.request_id for r in report.records) == list(range(60))
+    assert report.stolen_batches > 0
+    for r in report.records:
+        assert r.config_index == [0, 1][r.worker_id]
+    # the fast worker served strictly more than its round-robin half
+    assert report.served_per_worker[0] > 30
+
+
+def test_worker_pool_rejects_conflicting_scheduler_args():
+    """Policy knobs live on the scheduler: passing both an explicit
+    scheduler and pool-level assignment/batching knobs must raise instead
+    of silently ignoring the caller's configuration."""
+    executor = WorkflowExecutor(configs=[("cfg", 0)],
+                                workflow_fn=_sleepy({0: 0.001}))
+    from repro.serving.executor import WorkerPool
+    sched = Scheduler(num_workers=2)
+    with pytest.raises(ValueError, match="owned by"):
+        WorkerPool(executor, c=2, scheduler=sched, max_batch_size=8)
+    with pytest.raises(ValueError, match="owned by"):
+        WorkerPool(executor, c=2, scheduler=sched, assignment=[0, 0])
+    with pytest.raises(ValueError):
+        WorkerPool(executor, c=1, scheduler=sched)   # size mismatch
+
+
+def test_replay_workload_c2_with_drops():
+    """replay_workload against a bounded multi-worker engine: the
+    admission-control invariant total == served + dropped must hold, with
+    no request served twice (engine.py's replay path under c > 1)."""
+    executor = WorkflowExecutor(configs=[("cfg", 0)],
+                                workflow_fn=_sleepy({0: 0.01}))
+    engine = ServingEngine(executor, num_workers=2, max_queue_depth=3,
+                           control_tick_s=0.01)
+    engine.start()
+    # 200 qps offered vs 2 workers x 100 qps capacity + depth-3 buffer:
+    # must drop under the burst phases of the trace
+    arrivals = [i * 0.005 for i in range(150)]
+    replay_workload(engine, arrivals, time_scale=1.0)
+    report = engine.drain_and_stop()
+    assert report.total_requests == 150
+    assert report.total_requests == len(report.records) + report.dropped
+    assert report.dropped > 0
+    ids = [r.request_id for r in report.records]
+    assert len(set(ids)) == len(ids)
+    assert report.num_workers == 2
+    assert report.goodput(10.0) <= report.slo_compliance(10.0)
