@@ -11,7 +11,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.compass_v import CompassV, exhaustive_search
 from repro.core.elastico import ElasticoController
 from repro.core.planner import Planner
-from repro.serving.simulator import ServingSimulator
+from repro.serving import fastsim
 from repro.serving.workload import (
     bursty_pattern,
     diurnal_pattern,
@@ -82,17 +82,22 @@ def make_sampler(surrogate, ladder):
 
 def simulate(surrogate, plan, arrivals, duration_s, *, controller=None, static=0,
              seed=0, num_servers=1):
+    """One serving run via the :func:`repro.serving.fastsim.simulate`
+    dispatcher: static baselines take the vectorized Lindley fast path
+    (bit-for-bit identical to the event heap), controller runs fall back
+    to the event-heap oracle."""
     ladder = plan.table.policies
-    sim = ServingSimulator(
+    out = fastsim.simulate(
         make_sampler(surrogate, ladder),
+        arrivals,
+        duration_s,
         controller=controller,
         static_index=static,
         seed=seed,
         num_servers=num_servers,
     )
-    out = sim.run(arrivals, duration_s)
-    accs = [ladder[r.config_index].point.accuracy for r in out.completed]
-    mean_acc = sum(accs) / len(accs) if accs else 0.0
+    rung_accs = [pol.point.accuracy for pol in ladder]
+    mean_acc = out.mean_accuracy(rung_accs)   # 0.0 when nothing completed
     return out, mean_acc
 
 

@@ -8,8 +8,6 @@ accuracy — the cost story mirrors the latency story.
 
 from __future__ import annotations
 
-from collections import Counter
-
 from repro.core.cost import annotate_costs, timeline_cost
 from repro.core.elastico import ElasticoController
 
@@ -36,7 +34,9 @@ def run() -> dict:
         ]:
             out, acc = simulate(sur, plan, arrivals, 180.0,
                                 controller=ctrl, static=static)
-            per_rung = Counter(r.config_index for r in out.completed)
+            # config_counts() is array-backed on the fast path (the static
+            # baselines) and a plain histogram on the event-heap oracle
+            per_rung = out.config_counts()
             cost = timeline_cost(out.config_timeline, per_rung, rungs)
             rows.append({
                 "variant": name,

@@ -1,0 +1,252 @@
+"""Fast-path simulation microbenchmark: vectorized sweeps vs the event heap.
+
+Measures simulated-requests-per-second on the *same* static M/G/c sweep —
+K ladder configurations x L Poisson loads x R replications at c in
+{1, 4} — three ways:
+
+- **event heap**: :class:`repro.serving.simulator.ServingSimulator`, the
+  exact per-event oracle (one scenario at a time, reduced replication
+  count so the baseline stays affordable);
+- **fast single**: :func:`repro.serving.fastsim.simulate`, the dispatcher's
+  bit-for-bit sequential fast path (one scenario at a time);
+- **fast batch**: :func:`repro.serving.fastsim.simulate_batch`, the batched
+  Lindley / Kiefer-Wolfowitz sweep (all scenarios as one grid of array
+  ops) — the engine Planner validation and the figure sweeps run on.
+
+Also tracks the vectorized surrogate scoring rate
+(:meth:`repro.workflows.surrogate.SurrogateWorkflow.evaluate_samples`),
+the other offline hot loop this PR vectorized.
+
+Writes ``experiments/fastsim_bench.json`` with a ``gate`` section measured
+at the small fixed gate configuration; ``python -m benchmarks.run
+--perf-gate`` re-measures that section fresh and fails on a >30%
+throughput regression against the committed baseline.  The PR acceptance
+criterion is ``fast batch >= 20x event heap`` on this sweep.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.serving import fastsim
+from repro.serving.simulator import (
+    ServingSimulator,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import constant_rate, generate_arrivals
+from repro.workflows.surrogate import RagSurrogate
+
+from .common import Timer, save_json
+
+# the synthetic three-rung ladder shared with multi_server_bench
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+SLO_S = 1.0
+
+# full sweep (the committed-artifact measurement)
+FULL = dict(duration_s=600.0, rates=(2.0, 5.0, 8.0), replications=16,
+            heap_replications=2)
+# gate sweep: fixed and re-measured fresh by --perf-gate.  Sized so one
+# batched-sweep call simulates ~2M requests (~0.5 s) — with smaller
+# measurements, allocator/timer noise dominates and cross-process medians
+# spread by 30%+, flapping the gate; at this size the median-of-5 is
+# reproducible to a few percent across fresh processes.
+GATE = dict(duration_s=480.0, rates=(2.0, 5.0, 8.0), replications=64,
+            heap_replications=1)
+
+
+def _sweep_sizes(cfg: dict):
+    return len(MEANS), len(cfg["rates"]), cfg["replications"]
+
+
+def measure_heap(cfg: dict, num_servers: int) -> dict:
+    """Event-heap oracle over the sweep grid, one scenario at a time.
+    ``heap_replications`` bounds the (slow) baseline; the rate is
+    per-request, so fewer replications do not bias it."""
+    total = 0
+    t0 = time.perf_counter()
+    for r in range(cfg["heap_replications"]):
+        for l, rate in enumerate(cfg["rates"]):
+            arrivals = generate_arrivals(
+                constant_rate(rate), cfg["duration_s"], seed=1000 + 17 * r + l)
+            for k in range(len(MEANS)):
+                sim = ServingSimulator(
+                    lognormal_sampler_from_profile(MEANS, P95S),
+                    static_index=k, seed=r, num_servers=num_servers)
+                out = sim.run(arrivals, cfg["duration_s"])
+                total += len(out.completed)
+    wall = time.perf_counter() - t0
+    return {"requests": total, "wall_s": wall, "rps": total / wall}
+
+
+def measure_fast_single(cfg: dict, num_servers: int) -> dict:
+    """The dispatcher's sequential (bit-for-bit) fast path on the same
+    per-scenario workload as the heap baseline."""
+    total = 0
+    t0 = time.perf_counter()
+    for r in range(cfg["heap_replications"]):
+        for l, rate in enumerate(cfg["rates"]):
+            arrivals = generate_arrivals(
+                constant_rate(rate), cfg["duration_s"], seed=1000 + 17 * r + l)
+            for k in range(len(MEANS)):
+                out = fastsim.simulate(
+                    lognormal_sampler_from_profile(MEANS, P95S),
+                    arrivals, cfg["duration_s"],
+                    static_index=k, seed=r, num_servers=num_servers)
+                total += out.num_completed
+    wall = time.perf_counter() - t0
+    return {"requests": total, "wall_s": wall, "rps": total / wall}
+
+
+def measure_batch(cfg: dict, num_servers: int) -> dict:
+    """The batched sweep: the full R x K x L grid as one call."""
+    t0 = time.perf_counter()
+    res = fastsim.simulate_batch(
+        MEANS, P95S,
+        arrival_rates_qps=list(cfg["rates"]),
+        duration_s=cfg["duration_s"],
+        num_servers=num_servers,
+        replications=cfg["replications"],
+        slo_s=SLO_S,
+        seed=0,
+    )
+    wall = time.perf_counter() - t0
+    return {"requests": res.total_requests, "wall_s": wall,
+            "rps": res.total_requests / wall}
+
+
+def measure_surrogate(num_configs: int = 40, samples: int = 200) -> dict:
+    """Vectorized surrogate scoring rate (samples/s)."""
+    sur = RagSurrogate()
+    configs = list(sur.space.enumerate())[:num_configs]
+    t0 = time.perf_counter()
+    total = 0
+    for c in configs:
+        total += len(sur.evaluate_samples(c, range(samples)))
+    wall = time.perf_counter() - t0
+    return {"samples": total, "wall_s": wall, "sps": total / wall}
+
+
+def measure_gate_section(cfg: dict, *, repeats: int = 5) -> dict:
+    """The numbers --perf-gate compares: median-of-``repeats`` throughput
+    for the batched sweep at c in {1, 4}, after one untimed warmup call
+    (first-touch page faults and lazy numpy imports otherwise land in the
+    first sample).  The median damps allocator/scheduler outliers on a
+    loaded CI box far better than best-of."""
+    import statistics
+
+    out = {}
+    for c in (1, 4):
+        measure_batch(cfg, c)   # warmup, untimed
+        samples = sorted(measure_batch(cfg, c)["rps"]
+                         for _ in range(repeats))
+        out[f"fast_batch_rps_c{c}"] = statistics.median(samples)
+    return out
+
+
+def _measure_batch_stable(cfg: dict, num_servers: int,
+                          repeats: int = 3) -> dict:
+    """Warmed-up median-of-``repeats`` batched-sweep measurement — a single
+    cold call pays first-touch page faults and reads up to ~3x slow."""
+    measure_batch(cfg, num_servers)   # warmup, untimed
+    samples = sorted((measure_batch(cfg, num_servers) for _ in range(repeats)),
+                     key=lambda s: s["rps"])
+    return samples[len(samples) // 2]
+
+
+def _section(cfg: dict) -> dict:
+    K, L, R = _sweep_sizes(cfg)
+    section = {"grid": {"configs": K, "loads": L, "replications": R,
+                        "duration_s": cfg["duration_s"]}}
+    for c in (1, 4):
+        heap = measure_heap(cfg, c)
+        single = measure_fast_single(cfg, c)
+        batch = _measure_batch_stable(cfg, c)
+        section[f"c{c}"] = {
+            "event_heap": heap,
+            "fast_single": single,
+            "fast_batch": batch,
+            "single_speedup": single["rps"] / heap["rps"],
+            "batch_speedup": batch["rps"] / heap["rps"],
+        }
+    return section
+
+
+def _run(cfg: dict, artifact: str) -> dict:
+    with Timer() as t:
+        payload = {
+            "sweep": _section(cfg),
+            "gate": measure_gate_section(GATE),
+            "surrogate": measure_surrogate(),
+        }
+    save_json(artifact, payload)
+    c1 = payload["sweep"]["c1"]
+    c4 = payload["sweep"]["c4"]
+    worst_speedup = min(c1["batch_speedup"], c4["batch_speedup"])
+    return {
+        "name": "fastsim_bench",
+        "us_per_call": t.elapsed * 1e6,
+        "derived": (
+            f"heap={c1['event_heap']['rps']:.0f}/s "
+            f"batch_c1={c1['fast_batch']['rps']:.0f}/s "
+            f"batch_c4={c4['fast_batch']['rps']:.0f}/s "
+            f"speedup_c1={c1['batch_speedup']:.0f}x "
+            f"c4={c4['batch_speedup']:.0f}x "
+            f"surrogate={payload['surrogate']['sps']:.0f} samples/s"
+            + ("" if worst_speedup >= 20.0
+               else " [<20x: acceptance FAILED]")
+        ),
+    }
+
+
+def run() -> dict:
+    return _run(FULL, "fastsim_bench.json")
+
+
+def run_smoke() -> dict:
+    """Gate-sized sweep; separate artifact so the smoke gate never
+    overwrites the committed baseline --perf-gate compares against."""
+    return _run(GATE, "fastsim_bench_smoke.json")
+
+
+def perf_gate(baseline_path: str, *, max_regression: float = 0.30) -> int:
+    """Compare a fresh gate measurement against the committed baseline.
+
+    Returns a process exit code: 0 when every gate metric is within
+    ``max_regression`` of the committed value, 1 otherwise (or when the
+    baseline artifact is missing/malformed)."""
+    import json
+    import os
+
+    if not os.path.exists(baseline_path):
+        print(f"perf-gate: missing baseline {baseline_path} "
+              "(run: python -m benchmarks.run fastsim_bench)")
+        return 1
+    with open(baseline_path) as f:
+        baseline = json.load(f).get("gate", {})
+    if not baseline:
+        print("perf-gate: baseline artifact has no 'gate' section")
+        return 1
+    fresh = measure_gate_section(GATE)
+    failed = False
+    for key, base in sorted(baseline.items()):
+        now = fresh.get(key)
+        if now is None:
+            print(f"perf-gate: metric {key} missing from fresh run")
+            failed = True
+            continue
+        ratio = now / base
+        status = "OK" if ratio >= 1.0 - max_regression else "REGRESSION"
+        if status != "OK":
+            failed = True
+        print(f"perf-gate: {key} baseline={base:.0f}/s fresh={now:.0f}/s "
+              f"({ratio:.2f}x) {status}")
+    if failed:
+        print(f"perf-gate: FAILED (>{max_regression:.0%} regression)")
+        return 1
+    print("perf-gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    print(run())

@@ -20,7 +20,14 @@ from .common import save_json
 
 
 def time_fn(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    # warmup: trigger compilation ONCE and block on that same result
+    # (the old one-liner evaluated fn(*args) twice — once for the
+    # isinstance check, once for the chosen branch)
+    out = fn(*args)
+    if isinstance(out, tuple):
+        out[0].block_until_ready()
+    else:
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

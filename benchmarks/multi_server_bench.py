@@ -40,6 +40,13 @@ sustained-overload goodput.
 
 ``run_smoke()`` runs the same sweeps at the smallest useful setting
 (short horizon, pool sizes {1, 4}) for the ``--smoke`` CI gate.
+
+Since the fast-path PR every scenario goes through the
+:func:`repro.serving.fastsim.simulate` dispatcher: the static sweeps
+(part 2's static mixes, part 4's shared-queue ideal) run on the
+vectorized Lindley/Kiefer-Wolfowitz engine — bit-for-bit identical
+results — while controller / batching / stealing scenarios keep the
+event-heap oracle.
 """
 
 from __future__ import annotations
@@ -52,7 +59,8 @@ from repro.core.aqm import (
 )
 from repro.core.elastico import ElasticoController, ElasticoMixController
 from repro.core.pareto import BatchProfile, LatencyProfile, ParetoPoint
-from repro.serving.simulator import ServingSimulator, lognormal_sampler_from_profile
+from repro.serving import fastsim
+from repro.serving.simulator import lognormal_sampler_from_profile
 from repro.serving.workload import (
     flash_crowd_pattern,
     generate_arrivals,
@@ -110,20 +118,20 @@ def _traces(duration_s: float, seed: int = 1):
 
 def _row(pattern, mode, c, arrivals, out, duration_s, extra=None):
     util = out.per_server_utilization()
-    ok = sum(1 for r in out.completed if r.latency_s <= SLO_S)
+    n_done = out.num_completed
     row = {
         "pattern": pattern,
         "mode": mode,
         "num_servers": c,
         "offered": len(arrivals),
-        "completed": len(out.completed),
-        "throughput_qps": len(out.completed) / duration_s,
+        "completed": n_done,
+        "throughput_qps": n_done / duration_s,
         "compliance": out.slo_compliance(SLO_S),
         # fraction of *offered* load served within the SLO.  The no-drop
         # simulator completes every arrival, so today this coincides with
         # compliance; it is charged against offered load (not completions)
         # so the column stays honest if a variant ever drops or truncates.
-        "goodput": ok / max(1, len(arrivals)),
+        "goodput": out.goodput(SLO_S),
         "p95_latency_s": out.p95_latency(),
         "mean_wait_s": out.mean_wait(),
         "mean_accuracy": out.mean_accuracy(ACCS),
@@ -151,14 +159,13 @@ def _run(duration_s: float, pool_sizes,
                 table = derive_policies(
                     _front(), slo_p95_s=SLO_S, hysteresis=hyst, num_servers=c,
                 )
-                sim = ServingSimulator(
-                    sampler,
+                out = fastsim.simulate(
+                    sampler, arrivals, duration_s,
                     controller=ElasticoController(table),
                     seed=0,
                     num_servers=c,
                 )
-                out = sim.run(arrivals, duration_s)
-                total_completed += len(out.completed)
+                total_completed += out.num_completed
                 rows.append(_row(pattern, "homogeneous-switching", c, arrivals,
                                  out, duration_s))
 
@@ -168,27 +175,28 @@ def _run(duration_s: float, pool_sizes,
         )
         for pattern, arrivals in traces.items():
             # mix-shifting controller: one worker repinned per decision
-            sim = ServingSimulator(
-                sampler,
+            out = fastsim.simulate(
+                sampler, arrivals, duration_s,
                 controller=ElasticoMixController(mix_table),
                 seed=0,
                 num_servers=MIX_C,
             )
-            out = sim.run(arrivals, duration_s)
-            total_completed += len(out.completed)
+            total_completed += out.num_completed
             # assignment_timeline[0] is the initial t=0 pinning, not a repin
             rows.append(_row(pattern, "mix-shifting", MIX_C, arrivals, out,
                              duration_s,
                              {"repin_events": max(0, len(out.assignment_timeline) - 1)}))
 
-            # every static mix on the ladder: accuracy/compliance per mix
+            # every static mix on the ladder: accuracy/compliance per mix —
+            # these are exactly the static shared-FIFO scenarios the
+            # dispatcher routes to the vectorized fast path
             for mp in mix_table.policies:
-                sim = ServingSimulator(
-                    sampler, assignment=list(mp.assignment),
+                out = fastsim.simulate(
+                    sampler, arrivals, duration_s,
+                    assignment=list(mp.assignment),
                     seed=0, num_servers=MIX_C,
                 )
-                out = sim.run(arrivals, duration_s)
-                total_completed += len(out.completed)
+                total_completed += out.num_completed
                 rows.append(_row(
                     pattern, "static-mix", MIX_C, arrivals, out, duration_s,
                     {
@@ -219,12 +227,12 @@ def _run(duration_s: float, pool_sizes,
                                             batch_timeout_s=BATCH_LINGER_S,
                                             batch_profiles=BATCH_PROFILES)),
         ]:
-            sim = ServingSimulator(
-                sampler, controller=ElasticoController(table), seed=0,
+            out = fastsim.simulate(
+                sampler, batch_arr, duration_s,
+                controller=ElasticoController(table), seed=0,
                 num_servers=BATCH_C, **kw,
             )
-            out = sim.run(batch_arr, duration_s)
-            total_completed += len(out.completed)
+            total_completed += out.num_completed
             rows.append(_row(
                 f"batch-overload-{BATCH_OVERLOAD:g}x", mode, BATCH_C,
                 batch_arr, out, duration_s,
@@ -246,12 +254,14 @@ def _run(duration_s: float, pool_sizes,
                                   steal_threshold=n_steal)),
             ("pinned-shared", {}),   # shared-queue ideal, same pinning
         ]:
-            sim = ServingSimulator(
-                sampler, assignment=list(STEAL_ASSIGNMENT), seed=0,
+            # the shared-queue ideal takes the fast path; per-worker and
+            # stealing disciplines fall back to the event-heap oracle
+            out = fastsim.simulate(
+                sampler, steal_arr, duration_s,
+                assignment=list(STEAL_ASSIGNMENT), seed=0,
                 num_servers=STEAL_C, **kw,
             )
-            out = sim.run(steal_arr, duration_s)
-            total_completed += len(out.completed)
+            total_completed += out.num_completed
             rows.append(_row(
                 f"steal-overload-{STEAL_OVERLOAD:g}x", mode, STEAL_C,
                 steal_arr, out, duration_s,

@@ -2,6 +2,7 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
         PYTHONPATH=src python -m benchmarks.run --check-docs
+        PYTHONPATH=src python -m benchmarks.run --perf-gate
 
 Prints ``name,us_per_call,derived`` CSV and writes per-benchmark JSON
 artifacts into experiments/.  ``--check-docs`` runs the documentation
@@ -13,6 +14,13 @@ that defines ``run_smoke()`` (reduced durations / sweep sizes, same code
 paths) runs that; modules without one run their normal ``run()`` — the
 fallback keeps the smoke sweep total, so a bit-rotted benchmark fails fast
 either way.  CI uses this as a cheap all-benchmarks gate.
+
+``--perf-gate`` re-measures the fast-path simulation throughput at the
+small fixed gate configuration (:mod:`benchmarks.fastsim_bench`) and
+compares it against the committed ``experiments/fastsim_bench.json``
+baseline, exiting non-zero on a >30% regression — the guard that keeps
+the vectorized engine from quietly rotting back toward event-heap speed.
+Run as a tier-1 subprocess gate by ``tests/test_benchmarks.py``.
 """
 
 from __future__ import annotations
@@ -22,6 +30,7 @@ import traceback
 
 from . import (
     cost_objective,
+    fastsim_bench,
     fig1_pareto,
     predictive_ablation,
     fig3_convergence,
@@ -50,6 +59,7 @@ MODULES = {
     "multi_server": multi_server_bench,
     "cost_objective": cost_objective,
     "roofline_table": roofline_table,
+    "fastsim_bench": fastsim_bench,
 }
 
 BENCHES = {name: mod.run for name, mod in MODULES.items()}
@@ -57,19 +67,25 @@ BENCHES = {name: mod.run for name, mod in MODULES.items()}
 
 def main() -> None:
     args = sys.argv[1:]
-    known_flags = {"--smoke", "--check-docs"}
+    known_flags = {"--smoke", "--check-docs", "--perf-gate"}
     unknown = [a for a in args if a.startswith("--") and a not in known_flags]
     if unknown:
         # a typo'd gate flag must fail loudly, not fall through to a
         # full-settings run of every benchmark with exit code 0.
         print(f"unknown flag(s): {' '.join(unknown)}", file=sys.stderr)
         print("usage: python -m benchmarks.run [--smoke] [name ...] | "
-              "--check-docs", file=sys.stderr)
+              "--check-docs | --perf-gate", file=sys.stderr)
         sys.exit(2)
     if "--check-docs" in args:
         from repro.tools.docscheck import main as docscheck_main
 
         sys.exit(docscheck_main())
+    if "--perf-gate" in args:
+        import os
+
+        baseline = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "fastsim_bench.json")
+        sys.exit(fastsim_bench.perf_gate(baseline))
     smoke = "--smoke" in args
     names = [a for a in args if not a.startswith("--")] or list(BENCHES)
     print("name,us_per_call,derived")

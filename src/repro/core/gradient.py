@@ -15,6 +15,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
+import numpy as np
+
 from .space import Config, ConfigSpace
 
 
@@ -49,35 +51,44 @@ def idw_gradient(
         raise KeyError("config must itself be evaluated to take differences")
     acc_c = evaluated[config]
     xc = space.normalize(config)
-
-    neighbors: List[Tuple[float, Config]] = []
-    for other, acc in evaluated.items():
-        if other == config:
-            continue
-        d = space.distance(config, other)
-        if d > eps:
-            neighbors.append((d, other))
-    neighbors.sort(key=lambda t: t[0])
-    neighbors = neighbors[:k]
-
     n_axes = space.num_parameters
-    if not neighbors:
+
+    # Vectorized nearest-neighbor selection.  The distance math accumulates
+    # axis-by-axis columns in the same order as the scalar
+    # ``sum((x - y) ** 2 ...)`` (and the embeddings come from the same
+    # memoized normalize()), so distances — and therefore the selected
+    # neighbor set, the stable tie-break, and the final gradient — are
+    # bit-identical to the historical per-pair Python loop.
+    others: List[Config] = [c for c in evaluated.keys() if c != config]
+    if not others:
         return GradientEstimate(vector=(0.0,) * n_axes, support=0)
+    emb = np.array([space.normalize(c) for c in others], dtype=float)
+    d2 = np.zeros(len(others), dtype=float)
+    for i in range(n_axes):
+        diff = emb[:, i] - xc[i]
+        d2 += diff * diff
+    dist = np.sqrt(d2)
+    kept = np.flatnonzero(dist > eps)
+    if kept.size == 0:
+        return GradientEstimate(vector=(0.0,) * n_axes, support=0)
+    sel = kept[np.argsort(dist[kept], kind="stable")[:k]]
 
     num = [0.0] * n_axes
     den = 0.0
-    for d, other in neighbors:
+    for t in sel:
+        d = float(dist[t])
+        other = others[t]
         w = d ** (-power)
         xo = space.normalize(other)
         dacc = evaluated[other] - acc_c
-        d2 = d * d
+        d2s = d * d
         for i in range(n_axes):
             dx = xo[i] - xc[i]
             if abs(dx) > eps:
-                num[i] += w * dacc * dx / d2
+                num[i] += w * dacc * dx / d2s
         den += w
     vec = tuple(v / den for v in num)
-    return GradientEstimate(vector=vec, support=len(neighbors))
+    return GradientEstimate(vector=vec, support=int(sel.size))
 
 
 def low_gradient_axes(grad: GradientEstimate, *, fraction: float = 0.5) -> List[int]:

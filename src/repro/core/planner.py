@@ -6,6 +6,15 @@ representative inputs from the dataset, constructs the Pareto front over
 (accuracy, latency), and derives AQM switching policies for the latency SLO.
 Task optimization is hardware-independent and reusable; only this stage
 re-runs when the deployment target changes.
+
+Switching-policy validation (§V): :meth:`Planner.validate` stress-tests a
+derived plan by replaying every ladder rung against a grid of arrival
+rates via the vectorized batched sweep
+(:func:`repro.serving.fastsim.simulate_batch` — R replications x K rungs
+x L loads as one set of array ops), comparing simulated waits against the
+Allen-Cunneen M/G/c prediction each threshold was derived from and
+reporting the per-rung SLO-compliance surface.  At fast-path throughput
+this makes thousands of validation scenarios per plan affordable.
 """
 
 from __future__ import annotations
@@ -108,6 +117,60 @@ class DeploymentPlan:
                     f"acc~{mp.expected_accuracy:.3f} N_up={mp.upscale_threshold} "
                     f"N_dn={mp.downscale_threshold} N_steal={mp.steal_threshold}"
                 )
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class PlanValidation:
+    """Result of :meth:`Planner.validate`: replication-averaged metric
+    grids, one row per ladder rung (K) and one column per arrival rate
+    (L).  ``predicted_wait_s`` is the Allen-Cunneen M/G/c wait the
+    switching thresholds were derived from; ``wait_model_error`` is the
+    relative |simulated - predicted| / predicted where the prediction is
+    finite and positive (unstable cells report ``inf`` prediction and are
+    excluded from the summary)."""
+
+    arrival_rates_qps: Tuple[float, ...]
+    replications: int
+    duration_s: float
+    slo_p95_s: float
+    mean_wait_s: Tuple[Tuple[float, ...], ...]          # (K, L)
+    p95_latency_s: Tuple[Tuple[float, ...], ...]
+    slo_compliance: Tuple[Tuple[float, ...], ...]
+    predicted_wait_s: Tuple[Tuple[float, ...], ...]
+    num_requests: int
+
+    def wait_model_error(self) -> float:
+        """Max relative error of the Allen-Cunneen wait model over stable
+        cells with a meaningful predicted wait (> 1 ms)."""
+        worst = 0.0
+        for sim_row, pred_row in zip(self.mean_wait_s, self.predicted_wait_s):
+            for sim, pred in zip(sim_row, pred_row):
+                if math.isfinite(pred) and pred > 1e-3:
+                    worst = max(worst, abs(sim - pred) / pred)
+        return worst
+
+    def compliant_rungs(self, rate_qps: float, *,
+                        target: float = 0.95) -> List[int]:
+        """Ladder rungs whose replication-mean compliance meets ``target``
+        at the given arrival rate (must be one of the validated rates)."""
+        l = self.arrival_rates_qps.index(rate_qps)
+        return [k for k, row in enumerate(self.slo_compliance)
+                if row[l] >= target]
+
+    def describe(self) -> str:
+        lines = [
+            f"validated {len(self.mean_wait_s)} rungs x "
+            f"{len(self.arrival_rates_qps)} rates x "
+            f"{self.replications} replications "
+            f"({self.num_requests} simulated requests, "
+            f"wait-model max rel err {self.wait_model_error():.2f})"
+        ]
+        for k, comp_row in enumerate(self.slo_compliance):
+            cells = " ".join(
+                f"{rate:g}/s:{comp:.2f}"
+                for rate, comp in zip(self.arrival_rates_qps, comp_row))
+            lines.append(f"  rung {k}: compliance {cells}")
         return "\n".join(lines)
 
 
@@ -239,4 +302,73 @@ class Planner:
             profiled=profiled,
             dominated=dominated,
             mix_table=mix_table,
+        )
+
+    def validate(
+        self,
+        plan: DeploymentPlan,
+        *,
+        arrival_rates_qps: Optional[Sequence[float]] = None,
+        load_fractions: Sequence[float] = (0.5, 0.75, 0.9),
+        duration_s: float = 120.0,
+        replications: int = 8,
+        seed: int = 0,
+    ) -> PlanValidation:
+        """Validate a derived plan's switching ladder against simulation.
+
+        Replays every admitted rung (statically pinned, the regime each
+        AQM threshold is stated in) against a grid of Poisson arrival
+        rates — by default ``load_fractions`` of the *fastest* rung's pool
+        drain rate ``c / s-bar_0``, the range the switching ladder is
+        supposed to cover — with R stochastic replications, evaluated in
+        one vectorized batched sweep
+        (:func:`repro.serving.fastsim.simulate_batch`).  Returns the
+        replication-averaged wait / p95 / compliance grids next to the
+        Allen-Cunneen predictions, so a plan whose queueing model is off
+        (or whose SLO is infeasible at the loads it claims to cover) is
+        caught *offline*, before deployment.
+        """
+        from ..serving.fastsim import simulate_batch
+        from .aqm import allen_cunneen_mean_wait
+
+        ladder = plan.table.policies
+        if not ladder:
+            raise ValueError("plan has no admitted rungs to validate")
+        means = [pol.point.profile.mean for pol in ladder]
+        p95s = [pol.point.profile.p95 for pol in ladder]
+        scvs = [pol.point.profile.scv for pol in ladder]
+        c = self.num_servers
+        if arrival_rates_qps is None:
+            cap = c / means[0]
+            arrival_rates_qps = [f * cap for f in load_fractions]
+        rates = [float(r) for r in arrival_rates_qps]
+
+        sweep = simulate_batch(
+            means,
+            p95s,
+            arrival_rates_qps=rates,
+            duration_s=duration_s,
+            num_servers=c,
+            replications=replications,
+            slo_s=plan.table.slo_p95_s,
+            seed=seed,
+        )
+        grids = sweep.over_replications()
+        predicted = tuple(
+            tuple(
+                allen_cunneen_mean_wait(c, rate, m, scv_service=scv)
+                for rate in rates
+            )
+            for m, scv in zip(means, scvs)
+        )
+        return PlanValidation(
+            arrival_rates_qps=tuple(rates),
+            replications=replications,
+            duration_s=duration_s,
+            slo_p95_s=plan.table.slo_p95_s,
+            mean_wait_s=tuple(map(tuple, grids["mean_wait_s"])),
+            p95_latency_s=tuple(map(tuple, grids["p95_latency_s"])),
+            slo_compliance=tuple(map(tuple, grids["slo_compliance"])),
+            predicted_wait_s=predicted,
+            num_requests=sweep.total_requests,
         )

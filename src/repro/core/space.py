@@ -44,12 +44,28 @@ class Parameter:
             raise ValueError(f"unknown parameter kind {self.kind!r}")
         if len(set(map(repr, self.values))) != len(self.values):
             raise ValueError(f"parameter {self.name!r} has duplicate values")
+        # value -> index lookup table (the dataclass is frozen, hence the
+        # object.__setattr__); index_of() used to linear-scan the tuple and
+        # was the inner loop of every distance/gradient computation.
+        try:
+            lookup = {v: i for i, v in enumerate(self.values)}
+            if len(lookup) != len(self.values):   # e.g. 1 vs True collide
+                lookup = None
+        except TypeError:        # unhashable values: fall back to scanning
+            lookup = None
+        object.__setattr__(self, "_lookup", lookup)
 
     @property
     def cardinality(self) -> int:
         return len(self.values)
 
     def index_of(self, value: Any) -> int:
+        lookup = self._lookup
+        if lookup is not None:
+            try:
+                return lookup[value]
+            except KeyError:
+                raise KeyError(f"{value!r} not a valid value for {self.name!r}")
         try:
             return self.values.index(value)
         except ValueError:
@@ -81,6 +97,10 @@ class ConfigSpace:
             raise ValueError("duplicate parameter names")
         self.parameters: Tuple[Parameter, ...] = tuple(parameters)
         self._index = {p.name: i for i, p in enumerate(self.parameters)}
+        # memoized [0,1]^n embeddings: COMPASS-V's gradient estimator
+        # normalizes the same configurations thousands of times per search
+        # (the space is finite, so the memo is bounded by |C|).
+        self._norm_cache: Dict[Config, Tuple[float, ...]] = {}
 
     # -- basic structure ----------------------------------------------------
 
@@ -126,7 +146,12 @@ class ConfigSpace:
     # -- geometry -----------------------------------------------------------
 
     def normalize(self, config: Config) -> Tuple[float, ...]:
-        return tuple(p.normalized(v) for p, v in zip(self.parameters, config))
+        cached = self._norm_cache.get(config)
+        if cached is None:
+            cached = tuple(
+                p.normalized(v) for p, v in zip(self.parameters, config))
+            self._norm_cache[config] = cached
+        return cached
 
     def distance(self, a: Config, b: Config) -> float:
         """Euclidean distance in the normalized embedding."""

@@ -59,10 +59,25 @@ pool bit-for-bit, and ``max_batch_size = 1`` the unbatched runtime.
 Elastico always observes the *buffered* queue depth (requests waiting for
 dispatch, excluding those in service), the depth the thresholds are stated
 in.
+
+Fast path (:mod:`repro.serving.fastsim`): static shared-FIFO scenarios can
+skip the event heap entirely — :func:`simulate` routes eligible cases to a
+vectorized Lindley / Kiefer-Wolfowitz recursion (bit-for-bit identical at
+c = 1), and :func:`simulate_batch` sweeps R replications x K configs x L
+loads as one set of numpy array ops for Planner validation and the
+benchmark suite.  The event-heap :class:`ServingSimulator` remains the
+exact oracle every fast-path result is tested against.
 """
 
 from .engine import EngineReport, ServingEngine, replay_workload
 from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
+from .fastsim import (
+    FastSimulationResult,
+    SweepResult,
+    fast_path_eligible,
+    simulate,
+    simulate_batch,
+)
 from .monitor import LoadMonitor, LoadSnapshot
 from .scheduler import AdmissionDecision, Dispatch, Linger, Scheduler
 from .simulator import (
@@ -91,6 +106,11 @@ __all__ = [
     "ExecutionRecord",
     "WorkerPool",
     "WorkflowExecutor",
+    "FastSimulationResult",
+    "SweepResult",
+    "fast_path_eligible",
+    "simulate",
+    "simulate_batch",
     "LoadMonitor",
     "LoadSnapshot",
     "AdmissionDecision",

@@ -1,0 +1,739 @@
+"""Vectorized fast-path simulation engine: batched Lindley-recursion sweeps.
+
+Compass's offline stage (Planner profiling, switching-policy validation,
+paper §V) and the entire benchmark suite evaluate *thousands* of
+(configuration, load, pool-size) scenarios against the serving model.  The
+event-heap :class:`repro.serving.simulator.ServingSimulator` is exact but
+pure-Python-per-event: every simulated request pays a heap push/pop, a
+scheduler poll, and a dataclass allocation, which caps it around ~5e4
+simulated requests/s and makes large sweeps minutes of wall clock.
+
+This module is the fast path.  For the *static* sub-family of scenarios —
+fixed configuration or fixed per-server assignment, one shared FIFO queue,
+no batching, no stealing, no admission control, no controller — an M/G/c
+FIFO system is fully described by the Lindley (c = 1) / Kiefer–Wolfowitz
+(c > 1) recursion over the arrival and service sequences:
+
+    c = 1:   C_i = max(A_i, C_{i-1}) + S_i            (Lindley)
+    c > 1:   start_i = max(A_i, min_s F[s]);  F[s*] = start_i + S_i
+             where s* is the lowest-numbered server with F[s*] <= start_i
+             (the Kiefer–Wolfowitz workload-vector recursion, with the
+             event-heap's deterministic lowest-free-server tie-break)
+
+so per-request waits can be computed directly from pre-drawn arrival /
+service arrays with no event heap at all.  Two entry points:
+
+- :func:`simulate` — drop-in scenario runner mirroring
+  :class:`ServingSimulator`'s constructor + ``run`` signature.  Eligible
+  cases (:func:`fast_path_eligible`) take the fast path and reproduce the
+  event-heap simulator **bit-for-bit** at c = 1 (same ``random.Random``
+  draw order, same float operations — the golden test in
+  ``tests/test_fastsim.py``); everything else (controllers, batching,
+  stealing, admission bounds, per-worker queues) transparently falls back
+  to the event-heap simulator, which is kept as the exact oracle.
+- :func:`simulate_batch` — the batched sweep API: R replications x
+  K configurations x L load patterns evaluated as one set of numpy array
+  operations over a padded ``(R*K*L, N_max)`` request grid, returning a
+  result grid of mean wait / p95 latency / SLO compliance / throughput.
+  Every cell is an independent, deterministic function of ``(seed, cell
+  coordinates, cell inputs)``: arrival streams are keyed by (replication,
+  load) and service streams by (config, arrival-trace fingerprint), so a
+  cell's result never depends on which other cells share the batch — the
+  permutation/slicing-invariance property tests rely on this.
+
+Throughput: the batched sweep runs ~1e6-1e8 simulated requests/s
+(scenario-count dependent; ``benchmarks/fastsim_bench.py`` tracks the
+measured number in ``experiments/fastsim_bench.json``), vs ~5e4 for the
+event heap — the >= 20x fast-path acceptance criterion of the PR that
+introduced this module.  The event heap remains authoritative: fast-path
+agreement is enforced by golden (c = 1) and statistical (c > 1) tests
+against it, plus the Allen-Cunneen M/G/c prediction
+(:func:`repro.core.aqm.allen_cunneen_mean_wait`).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.pareto import BatchProfile
+from .simulator import (
+    CompletedRequest,
+    ServiceSampler,
+    ServingSimulator,
+    SimulationResult,
+)
+
+__all__ = [
+    "fast_path_eligible",
+    "simulate",
+    "simulate_batch",
+    "FastSimulationResult",
+    "SweepResult",
+    "lognormal_params",
+]
+
+_Z95 = 1.6448536269514722
+
+
+def lognormal_params(mean_s: float, p95_s: float) -> Tuple[float, float]:
+    """(mu, sigma) of the lognormal matched to (mean, p95) — the same solve
+    :func:`repro.serving.simulator.lognormal_sampler_from_profile` uses, so
+    batched sweeps and the event-heap oracle share one service model."""
+    if not (p95_s > 0 and mean_s > 0):
+        raise ValueError("profile stats must be positive")
+    ratio = max(p95_s / mean_s, 1.001)
+    c = math.log(ratio)
+    disc = _Z95 * _Z95 - 2.0 * c
+    sigma = _Z95 - math.sqrt(disc) if disc > 0 else _Z95
+    mu = math.log(mean_s) - sigma * sigma / 2.0
+    return mu, sigma
+
+
+# --------------------------------------------------------------------------
+# eligibility
+# --------------------------------------------------------------------------
+
+
+def fast_path_eligible(
+    *,
+    controller: Any = None,
+    num_servers: int = 1,
+    assignment: Optional[Sequence[int]] = None,
+    max_batch_size: int = 1,
+    batch_timeout_s: float = 0.0,
+    batch_profiles: Optional[Sequence[BatchProfile]] = None,
+    max_queue_depth: Optional[int] = None,
+    admission_reroute: bool = False,
+    queue_discipline: str = "shared",
+    steal: bool = False,
+    steal_threshold: Optional[int] = None,
+) -> bool:
+    """Can this scenario take the vectorized fast path?
+
+    The Lindley / Kiefer-Wolfowitz recursion describes exactly the static
+    shared-FIFO M/G/c system: a fixed configuration (or fixed per-server
+    assignment), every arrival admitted, one request per dispatch.  Any
+    dynamic-policy feature — an Elastico controller, in-worker batching
+    (B > 1; a linger window at B = 1 never forms, so ``batch_timeout_s``
+    alone does not disqualify), admission control, per-worker backlogs,
+    work stealing — changes which request runs where/when in ways the
+    closed-form recursion does not capture, so those scenarios go to the
+    event-heap oracle."""
+    return (
+        controller is None
+        and max_batch_size == 1
+        and queue_discipline == "shared"
+        and not steal
+        and max_queue_depth is None
+        and not admission_reroute
+        and num_servers >= 1
+    )
+
+
+# --------------------------------------------------------------------------
+# fast-path result (SimulationResult-compatible, array-backed)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class FastSimulationResult:
+    """Array-backed drop-in for :class:`SimulationResult`.
+
+    Exposes the same metric surface (``mean_wait`` / ``slo_compliance`` /
+    ``goodput`` / ``p95_latency`` / ``mean_accuracy`` / ``latencies`` /
+    ``per_server_utilization`` / ``mean_batch_size`` and the bookkeeping
+    attributes) computed from numpy arrays, and materializes the
+    per-request :class:`CompletedRequest` list lazily on first access to
+    ``.completed`` — consumers that only read aggregate metrics never pay
+    for N dataclass allocations."""
+
+    arrival_s: np.ndarray
+    start_s: np.ndarray
+    completion_s: np.ndarray
+    config_index: np.ndarray          # per-request config (int array)
+    server_id: np.ndarray             # per-request serving worker
+    duration_s: float
+    num_servers: int = 1
+    per_server_busy_s: List[float] = field(default_factory=lambda: [0.0])
+    config_timeline: List[Tuple[float, int]] = field(default_factory=list)
+    queue_depth_samples: List[Tuple[float, int]] = field(default_factory=list)
+    assignment_timeline: List[Tuple[float, Tuple[int, ...]]] = field(
+        default_factory=list)
+    switch_events: List = field(default_factory=list)
+    offered: int = 0
+    dropped: int = 0
+    rerouted: int = 0
+    stolen_batches: int = 0
+    _completed: Optional[List[CompletedRequest]] = field(
+        default=None, repr=False)
+
+    @property
+    def num_batches(self) -> int:
+        return int(self.arrival_s.size)   # unbatched: one dispatch per request
+
+    @property
+    def completed(self) -> List[CompletedRequest]:
+        """Per-request records, materialized on first access (the fast path
+        keeps everything in arrays until a consumer actually wants them)."""
+        if self._completed is None:
+            self._completed = [
+                CompletedRequest(
+                    request_id=i,
+                    arrival_s=float(self.arrival_s[i]),
+                    start_s=float(self.start_s[i]),
+                    completion_s=float(self.completion_s[i]),
+                    config_index=int(self.config_index[i]),
+                    server_id=int(self.server_id[i]),
+                    batch_size=1,
+                )
+                for i in range(self.arrival_s.size)
+            ]
+        return self._completed
+
+    def __len__(self) -> int:  # len(result.completed) without materializing
+        return int(self.arrival_s.size)
+
+    @property
+    def num_completed(self) -> int:
+        return int(self.arrival_s.size)
+
+    # -- vectorized metric surface (mirrors SimulationResult) ---------------
+
+    def waits(self) -> np.ndarray:
+        return self.start_s - self.arrival_s
+
+    def latencies_array(self) -> np.ndarray:
+        return self.completion_s - self.arrival_s
+
+    def latencies(self) -> List[float]:
+        return self.latencies_array().tolist()
+
+    def mean_wait(self) -> float:
+        if self.arrival_s.size == 0:
+            return 0.0
+        return float(self.waits().mean())
+
+    def slo_compliance(self, slo_s: float) -> float:
+        if self.arrival_s.size == 0:
+            return 1.0
+        lat = self.latencies_array()
+        return float(np.count_nonzero(lat <= slo_s)) / lat.size
+
+    def goodput(self, slo_s: float) -> float:
+        if self.offered == 0:
+            return 1.0
+        lat = self.latencies_array()
+        return float(np.count_nonzero(lat <= slo_s)) / self.offered
+
+    def mean_accuracy(self, accuracies: Sequence[float]) -> float:
+        if self.arrival_s.size == 0:
+            return 0.0
+        acc = np.asarray(accuracies, dtype=float)
+        return float(acc[self.config_index].mean())
+
+    def config_counts(self) -> dict:
+        """{config_index: served count} — the per-rung usage histogram."""
+        idx, counts = np.unique(self.config_index, return_counts=True)
+        return {int(i): int(n) for i, n in zip(idx, counts)}
+
+    def p95_latency(self) -> float:
+        lat = self.latencies_array()
+        if lat.size == 0:
+            return 0.0
+        xs = np.sort(lat)
+        pos = 0.95 * (lat.size - 1)
+        lo = int(pos)
+        hi = min(lo + 1, lat.size - 1)
+        # identical interpolation arithmetic to SimulationResult.p95_latency
+        return float(xs[lo] + (xs[hi] - xs[lo]) * (pos - lo))
+
+    def per_server_utilization(self) -> List[float]:
+        horizon = max(self.duration_s, 1e-12)
+        return [b / horizon for b in self.per_server_busy_s]
+
+    def mean_batch_size(self) -> float:
+        return 1.0
+
+
+# --------------------------------------------------------------------------
+# single-scenario fast path (exact: same RNG draw order as the event heap)
+# --------------------------------------------------------------------------
+
+
+def _tick_depth_samples(arrivals: np.ndarray, starts: np.ndarray,
+                        duration_s: float,
+                        control_tick_s: float) -> List[Tuple[float, int]]:
+    """Buffered queue depth at every control tick, computed by counting:
+    depth(t) = #{arrived at or before t} - #{dispatched at or before t}.
+
+    Matches the event-heap driver's sampling points (ticks at 0,
+    tick, 2*tick, ... < duration) and its convention that arrival /
+    dispatch events at exactly the tick time are processed before the tick
+    observes (the heap orders equal-time events by push order, and ticks
+    are pushed first — but a tick pushed at t sorts before same-t arrivals
+    ... by *order*, which increments per push: all ticks are pushed after
+    arrivals, so same-time arrivals are processed first)."""
+    if duration_s <= 0 or control_tick_s <= 0:
+        return []
+    # accumulate t += tick exactly like the event heap's tick loop —
+    # np.arange's i*tick grid diverges for ticks not representable in
+    # binary (e.g. 0.1: the accumulated 10th tick is 0.9999... < 1.0 and
+    # the heap emits one more sample than the arange grid)
+    tick_list: List[float] = []
+    t = 0.0
+    while t < duration_s:
+        tick_list.append(t)
+        t += control_tick_s
+    ticks = np.asarray(tick_list, dtype=float)
+    arrived = np.searchsorted(arrivals, ticks, side="right")
+    started = np.searchsorted(np.sort(starts), ticks, side="right") \
+        if starts.size else np.zeros_like(ticks, dtype=int)
+    return [(float(t), int(a - s)) for t, a, s in zip(ticks, arrived, started)]
+
+
+def _run_fast_single(
+    service_sampler: ServiceSampler,
+    arrivals: Sequence[float],
+    duration_s: float,
+    *,
+    static_index: int,
+    seed: int,
+    num_servers: int,
+    assignment: Optional[Sequence[int]],
+    control_tick_s: float,
+) -> FastSimulationResult:
+    """Exact sequential recursion with the event-heap's RNG draw order.
+
+    Service times are drawn from the same ``random.Random(seed)`` stream in
+    dispatch order — which for a shared FIFO queue *is* arrival order — so
+    the per-request schedule reproduces :class:`ServingSimulator` to the
+    bit at c = 1 (the golden test) and matches its draw sequence at any c.
+    """
+    rng = random.Random(seed)
+    n = len(arrivals)
+    c = num_servers
+    A = np.asarray(arrivals, dtype=float)
+    if n > 1 and not np.all(A[1:] >= A[:-1]):
+        raise ValueError(
+            "fast path requires arrivals in non-decreasing time order "
+            "(the FIFO recursion and the event heap would diverge "
+            "silently otherwise)")
+    starts = np.empty(n, dtype=float)
+    comps = np.empty(n, dtype=float)
+    servers = np.zeros(n, dtype=np.int64)
+    cfgs = np.empty(n, dtype=np.int64)
+    busy = [0.0] * c
+
+    if assignment is not None:
+        assign = [int(a) for a in assignment]
+        if len(assign) != c:
+            raise ValueError(
+                f"assignment length {len(assign)} != num_servers {c}")
+    else:
+        assign = None
+
+    if c == 1:
+        # pure Lindley recursion; start = max(A_i, C_{i-1}) picks one of the
+        # two floats and C_i = start + draw reuses the event heap's exact
+        # operand order, so the schedule is bit-for-bit identical.
+        cfg0 = int(assign[0]) if assign is not None else int(static_index)
+        free = 0.0
+        for i in range(n):
+            a = A[i]
+            st = a if a >= free else free
+            svc = service_sampler(cfg0, rng)
+            ct = st + svc
+            starts[i] = st
+            comps[i] = ct
+            free = ct
+            busy[0] += ct - st
+        cfgs.fill(cfg0)
+    else:
+        # Kiefer-Wolfowitz workload recursion with the deterministic
+        # lowest-numbered-free-server tie-break both runtimes share.
+        F = [0.0] * c
+        cfg0 = int(static_index)
+        for i in range(n):
+            a = A[i]
+            fmin = min(F)
+            st = a if a >= fmin else fmin
+            s = 0
+            while F[s] > st:       # lowest-numbered free server
+                s += 1
+            cfg = assign[s] if assign is not None else cfg0
+            svc = service_sampler(cfg, rng)
+            ct = st + svc
+            F[s] = ct
+            starts[i] = st
+            comps[i] = ct
+            servers[i] = s
+            cfgs[i] = cfg
+            busy[s] += ct - st
+
+    timeline_index = int(assign[0]) if (assign is not None and c == 1) \
+        else int(static_index)
+    # the scheduler records (0.0, active_index) at reset; a static assignment
+    # additionally seeds the assignment timeline
+    result = FastSimulationResult(
+        arrival_s=A,
+        start_s=starts,
+        completion_s=comps,
+        config_index=cfgs,
+        server_id=servers,
+        duration_s=duration_s,
+        num_servers=c,
+        per_server_busy_s=busy,
+        config_timeline=[(0.0, static_index)],
+        queue_depth_samples=_tick_depth_samples(A, starts, duration_s,
+                                                control_tick_s),
+        assignment_timeline=(
+            [(0.0, tuple(assign))] if assign is not None else []),
+        offered=n,
+    )
+    return result
+
+
+def simulate(
+    service_sampler: ServiceSampler,
+    arrivals: Sequence[float],
+    duration_s: float,
+    *,
+    controller: Any = None,
+    static_index: int = 0,
+    control_tick_s: float = 0.25,
+    switch_latency_s: float = 0.010,
+    seed: int = 0,
+    num_servers: int = 1,
+    assignment: Optional[Sequence[int]] = None,
+    max_batch_size: int = 1,
+    batch_timeout_s: float = 0.0,
+    batch_profiles: Optional[Sequence[BatchProfile]] = None,
+    max_queue_depth: Optional[int] = None,
+    admission_reroute: bool = False,
+    queue_discipline: str = "shared",
+    steal: bool = False,
+    steal_threshold: Optional[int] = None,
+):
+    """Dispatcher: one serving scenario, fastest engine that is still exact.
+
+    Mirrors ``ServingSimulator(...).run(arrivals, duration_s)``.  Scenarios
+    :func:`fast_path_eligible` run the vectorized Lindley / Kiefer-Wolfowitz
+    recursion (bit-for-bit identical schedules at c = 1, identical RNG draw
+    sequence at any c); everything else constructs the event-heap
+    :class:`ServingSimulator` — the exact oracle — with identical
+    parameters.  Returns a :class:`FastSimulationResult` or
+    :class:`SimulationResult`; both expose the same metric surface.
+    """
+    arr = np.asarray(arrivals, dtype=float)
+    sorted_arrivals = arr.size <= 1 or bool(np.all(arr[1:] >= arr[:-1]))
+    if sorted_arrivals and fast_path_eligible(
+        controller=controller,
+        num_servers=num_servers,
+        assignment=assignment,
+        max_batch_size=max_batch_size,
+        batch_timeout_s=batch_timeout_s,
+        batch_profiles=batch_profiles,
+        max_queue_depth=max_queue_depth,
+        admission_reroute=admission_reroute,
+        queue_discipline=queue_discipline,
+        steal=steal,
+        steal_threshold=steal_threshold,
+    ):
+        return _run_fast_single(
+            service_sampler,
+            arrivals,
+            duration_s,
+            static_index=static_index,
+            seed=seed,
+            num_servers=num_servers,
+            assignment=assignment,
+            control_tick_s=control_tick_s,
+        )
+    return ServingSimulator(
+        service_sampler,
+        controller=controller,
+        static_index=static_index,
+        control_tick_s=control_tick_s,
+        switch_latency_s=switch_latency_s,
+        seed=seed,
+        num_servers=num_servers,
+        assignment=assignment,
+        max_batch_size=max_batch_size,
+        batch_timeout_s=batch_timeout_s,
+        batch_profiles=batch_profiles,
+        max_queue_depth=max_queue_depth,
+        admission_reroute=admission_reroute,
+        queue_discipline=queue_discipline,
+        steal=steal,
+        steal_threshold=steal_threshold,
+    ).run(arrivals, duration_s)
+
+
+# --------------------------------------------------------------------------
+# batched sweep API
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SweepResult:
+    """One metric grid per statistic, all shaped (R, K, L) =
+    (replications, configs, loads)."""
+
+    mean_wait_s: np.ndarray
+    mean_latency_s: np.ndarray
+    p95_latency_s: np.ndarray
+    slo_compliance: np.ndarray
+    throughput_qps: np.ndarray
+    num_requests: np.ndarray          # arrivals simulated per cell
+    duration_s: float
+    slo_s: Optional[float]
+
+    @property
+    def total_requests(self) -> int:
+        return int(self.num_requests.sum())
+
+    def over_replications(self) -> dict:
+        """Replication-averaged (K, L) grids — the Planner's view."""
+        return {
+            "mean_wait_s": self.mean_wait_s.mean(axis=0),
+            "mean_latency_s": self.mean_latency_s.mean(axis=0),
+            "p95_latency_s": self.p95_latency_s.mean(axis=0),
+            "slo_compliance": self.slo_compliance.mean(axis=0),
+            "throughput_qps": self.throughput_qps.mean(axis=0),
+        }
+
+
+def _fingerprint(payload: bytes) -> int:
+    """64-bit content fingerprint — the RNG-stream key material.
+
+    Sweep streams are keyed by cell *content* (the arrival trace's bytes,
+    the config's (mean, p95) bits, the rate's bits) rather than by batch
+    position, which is what makes every sweep cell a pure function of its
+    inputs: permuting configs/loads permutes the result grid identically,
+    and evaluating a cell in a smaller batch reproduces it exactly (the
+    purity property tests in tests/test_fastsim.py)."""
+    h = hashlib.blake2b(payload, digest_size=8).digest()
+    return int.from_bytes(h, "little")
+
+
+def _poisson_trace(rng: np.random.Generator, rate_qps: float,
+                   duration_s: float) -> np.ndarray:
+    """One homogeneous-Poisson arrival trace: N ~ Poisson(rate * T), times
+    are the order statistics of N uniforms on [0, T)."""
+    n = int(rng.poisson(rate_qps * duration_s))
+    return np.sort(rng.uniform(0.0, duration_s, size=n))
+
+
+def simulate_batch(
+    service_mean_s: Sequence[float],
+    service_p95_s: Optional[Sequence[float]] = None,
+    *,
+    arrival_rates_qps: Optional[Sequence[float]] = None,
+    arrival_traces: Optional[Sequence[Sequence[float]]] = None,
+    duration_s: float,
+    num_servers: int = 1,
+    replications: int = 1,
+    slo_s: Optional[float] = None,
+    seed: int = 0,
+) -> SweepResult:
+    """Batched Lindley / Kiefer-Wolfowitz sweep: R replications x K configs
+    x L load patterns evaluated as numpy array ops, one result grid out.
+
+    Parameters
+    ----------
+    service_mean_s: per-config mean service time (the K axis).
+    service_p95_s: per-config p95; when given, service times are lognormal
+        matched to (mean, p95) exactly as
+        :func:`repro.serving.simulator.lognormal_sampler_from_profile`;
+        when None, exponential with the given mean (the M/M/c case, where
+        the sweep converges to the Erlang-C prediction).
+    arrival_rates_qps: the L axis as homogeneous Poisson rates — each
+        (replication r, load l) cell draws its own trace.  Mutually
+        exclusive with ``arrival_traces``.
+    arrival_traces: the L axis as explicit arrival-time traces, replayed
+        identically across replications and configs (common random
+        numbers on the arrival process); service draws still differ per
+        (replication, config).
+    num_servers: pool size c (the recursion handles any c >= 1).
+    replications: independent stochastic repeats R.
+    slo_s: latency SLO for the compliance grid (compliance is 1.0 where
+        ``slo_s`` is None).
+
+    Determinism: cell (r, k, l) depends only on ``seed``, the replication
+    index r, and its coordinates' *inputs* (rate or trace content, config
+    stats, c, duration) — never on the batch composition.  Arrival streams
+    are keyed ``(seed, r, rate-bits)`` and service streams ``(seed, r,
+    config-fingerprint, trace-fingerprint)``, so permuting or slicing the
+    config/load axes permutes or slices the result grid identically, and
+    growing ``replications`` never changes the earlier replications'
+    cells.  (Two loads with the *same* rate share a trace per replication
+    — common random numbers by content, by design.)
+    """
+    means = np.asarray(service_mean_s, dtype=float)
+    if means.ndim != 1 or means.size == 0:
+        raise ValueError("service_mean_s must be a non-empty 1-D sequence")
+    if np.any(means <= 0):
+        raise ValueError("service means must be positive")
+    K = means.size
+    if service_p95_s is not None:
+        p95s = np.asarray(service_p95_s, dtype=float)
+        if p95s.shape != means.shape:
+            raise ValueError("service_p95_s must match service_mean_s")
+        ln_params = [lognormal_params(m, p) for m, p in zip(means, p95s)]
+    else:
+        ln_params = None
+    if (arrival_rates_qps is None) == (arrival_traces is None):
+        raise ValueError(
+            "exactly one of arrival_rates_qps / arrival_traces is required")
+    if duration_s <= 0:
+        raise ValueError("duration_s must be positive")
+    if replications < 1 or num_servers < 1:
+        raise ValueError("replications and num_servers must be >= 1")
+    R, c = int(replications), int(num_servers)
+
+    # -- per-(r, l) arrival traces ------------------------------------------
+    base_seed = seed & 0x7FFFFFFF
+    if arrival_traces is not None:
+        fixed = [np.asarray(t, dtype=float) for t in arrival_traces]
+        L = len(fixed)
+        traces = [[fixed[l] for l in range(L)] for _ in range(R)]
+    else:
+        rates = [float(x) for x in arrival_rates_qps]
+        L = len(rates)
+        traces = []
+        for r in range(R):
+            row = []
+            for rate in rates:
+                rate_fp = _fingerprint(np.float64(rate).tobytes()
+                                       + np.float64(duration_s).tobytes())
+                g = np.random.Generator(np.random.PCG64(
+                    np.random.SeedSequence([base_seed, 1, r, rate_fp])))
+                row.append(_poisson_trace(g, rate, duration_s))
+            traces.append(row)
+    if L == 0:
+        raise ValueError("need at least one load pattern")
+
+    # config content fingerprints (service-stream keys)
+    if ln_params is not None:
+        cfg_fps = [_fingerprint(b"ln" + np.float64(m).tobytes()
+                                + np.float64(p).tobytes())
+                   for m, p in zip(means, p95s)]
+    else:
+        cfg_fps = [_fingerprint(b"exp" + np.float64(m).tobytes())
+                   for m in means]
+
+    counts = np.array([[traces[r][l].size for l in range(L)]
+                       for r in range(R)], dtype=np.int64)
+    n_max = int(counts.max()) if counts.size else 0
+
+    # -- assemble the padded request grid, B = R*K*L scenarios --------------
+    # Layout is (N, B): step i of the recursion reads/writes contiguous
+    # rows.  Padding is *zeros* (arrival 0, service 0), which makes the
+    # recursion self-masking — a padded slot dispatches instantly with zero
+    # service and leaves every workload register unchanged — so the inner
+    # loop needs no masking at all; padded waits/latencies are zeroed once
+    # after the loop.
+    B = R * K * L
+    A = np.zeros((B, n_max), dtype=float)
+    S = np.zeros((B, n_max), dtype=float)
+    cell_counts = np.zeros(B, dtype=np.int64)
+
+    def cell(r: int, k: int, l: int) -> int:
+        return (r * K + k) * L + l
+
+    for r in range(R):
+        for l in range(L):
+            trace = traces[r][l]
+            n = trace.size
+            trace_fp = _fingerprint(trace.tobytes())
+            for k in range(K):
+                b = cell(r, k, l)
+                cell_counts[b] = n
+                if n == 0:
+                    continue
+                A[b, :n] = trace
+                g = np.random.Generator(np.random.PCG64(np.random.SeedSequence(
+                    [base_seed, 2, r, cfg_fps[k], trace_fp])))
+                if ln_params is not None:
+                    mu, sigma = ln_params[k]
+                    S[b, :n] = g.lognormal(mean=mu, sigma=sigma, size=n)
+                else:
+                    S[b, :n] = g.exponential(scale=means[k], size=n)
+
+    A = np.ascontiguousarray(A.T)      # (N, B)
+    S = np.ascontiguousarray(S.T)
+
+    # -- the vectorized recursion (sequential in i, batched over scenarios) -
+    waits = np.empty((n_max, B), dtype=float)
+    lats = np.empty((n_max, B), dtype=float)
+    if c == 1:
+        comp = np.zeros(B, dtype=float)
+        for i in range(n_max):
+            a = A[i]
+            st = np.maximum(a, comp)                # Lindley step
+            comp = st + S[i]
+            waits[i] = st - a
+            lats[i] = comp - a
+    else:
+        # Kiefer-Wolfowitz sorted-workload form: each cell's service law is
+        # server-independent, so only the multiset of server free times
+        # matters — keep it sorted ascending, serve on the earliest-free
+        # (column 0), re-sort.  Identical waits to the event heap's
+        # lowest-free-id dispatch, without tracking server identities.
+        F = np.zeros((B, c), dtype=float)
+        for i in range(n_max):
+            a = A[i]
+            st = np.maximum(a, F[:, 0])
+            ct = st + S[i]
+            F[:, 0] = ct
+            F.sort(axis=1)
+            waits[i] = st - a
+            lats[i] = ct - a
+
+    active = np.arange(n_max)[:, None] < cell_counts[None, :]   # (N, B)
+    if n_max > 0:
+        waits *= active
+        lats *= active
+
+    # -- per-cell statistics -------------------------------------------------
+    n_eff = np.maximum(cell_counts, 1).astype(float)
+    mean_wait = waits.sum(axis=0) / n_eff
+    mean_lat = lats.sum(axis=0) / n_eff
+    if slo_s is not None and n_max > 0:
+        ok = np.count_nonzero((lats <= slo_s) & active, axis=0)
+        compliance = np.where(cell_counts > 0, ok / n_eff, 1.0)
+    else:
+        compliance = np.ones(B, dtype=float)
+
+    # p95 with the repo-wide interpolation convention: sort each column (inf
+    # padding sinks to the tail), index pos = 0.95 * (n - 1).
+    p95 = np.zeros(B, dtype=float)
+    if n_max > 0:
+        padded = np.where(active, lats, np.inf)
+        srt = np.sort(padded, axis=0)
+        nz = cell_counts > 0
+        pos = 0.95 * (cell_counts[nz] - 1)
+        lo = pos.astype(np.int64)
+        hi = np.minimum(lo + 1, cell_counts[nz] - 1)
+        cols_nz = np.flatnonzero(nz)
+        xlo = srt[lo, cols_nz]
+        xhi = srt[hi, cols_nz]
+        p95[cols_nz] = xlo + (xhi - xlo) * (pos - lo)
+
+    shape = (R, K, L)
+    return SweepResult(
+        mean_wait_s=mean_wait.reshape(shape),
+        mean_latency_s=mean_lat.reshape(shape),
+        p95_latency_s=p95.reshape(shape),
+        slo_compliance=compliance.reshape(shape),
+        throughput_qps=(cell_counts / duration_s).reshape(shape),
+        num_requests=cell_counts.reshape(shape),
+        duration_s=duration_s,
+        slo_s=slo_s,
+    )

@@ -75,8 +75,9 @@ same policy code.
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 
 from ..core.elastico import ElasticoController, ElasticoMixController, SwitchEvent
 
@@ -251,9 +252,12 @@ class Scheduler:
             self._assign = list(self._initial_assignment)
         self._switch_ready_s = 0.0
         self._closed = False
-        # shared FIFO or per-worker backlogs
-        self._waiting: List[Any] = []
-        self._queues: List[List[Any]] = [[] for _ in range(self.num_workers)]
+        # shared FIFO or per-worker backlogs (deques: dequeueing the head
+        # with list.pop(0) is O(n) and turns sustained-overload runs —
+        # thousands of buffered requests — quadratic)
+        self._waiting: Deque[Any] = deque()
+        self._queues: List[Deque[Any]] = [deque()
+                                          for _ in range(self.num_workers)]
         self._rr = 0                      # round-robin routing cursor
         self._free: List[int] = list(range(self.num_workers))  # min-heap
         # one forming batch lingers at a time (shared discipline); the token
@@ -479,7 +483,7 @@ class Scheduler:
                 return dispatches, lingers
             b = min(B, avail)
             worker = heapq.heappop(self._free)
-            batch = tuple(self._waiting.pop(0) for _ in range(b))
+            batch = tuple(self._waiting.popleft() for _ in range(b))
             if self._linger_pending:
                 # whatever was lingering just dispatched (filled or
                 # flushed); invalidate the scheduled timeout event.
@@ -506,7 +510,7 @@ class Scheduler:
                 still_free.append(worker)
                 continue
             b = min(self.max_batch_size, len(source))
-            batch = tuple(source.pop(0) for _ in range(b))
+            batch = tuple(source.popleft() for _ in range(b))
             dispatches.append(self._dispatch(worker, batch, now, stolen=stolen))
         if dispatches:
             self._free = still_free

@@ -58,6 +58,15 @@ Deterministic given seeds, which is what lets EXPERIMENTS.md reproduce the
 paper's Figures 5-7 bit-for-bit across runs; ``max_batch_size=1`` (the
 default) draws service times in the exact pre-batching order and
 reproduces the unbatched schedule bit-for-bit.
+
+Role since the fast-path PR: this event-heap simulator is the **exact
+oracle**.  Static shared-FIFO scenarios (no controller, B = 1, no
+stealing, no admission bound) are served by the vectorized
+:mod:`repro.serving.fastsim` engine instead — dispatched via
+:func:`repro.serving.fastsim.simulate`, which reproduces this simulator
+bit-for-bit at c = 1 and draws from the identical RNG sequence at any c —
+while every dynamic-policy scenario, and every agreement test, still runs
+here.
 """
 
 from __future__ import annotations
@@ -170,6 +179,20 @@ class SimulationResult:
         if self.num_batches == 0:
             return 1.0
         return len(self.completed) / self.num_batches
+
+    @property
+    def num_completed(self) -> int:
+        """Served-request count — part of the metric surface shared with
+        :class:`repro.serving.fastsim.FastSimulationResult` (which computes
+        it without materializing per-request records)."""
+        return len(self.completed)
+
+    def config_counts(self) -> Dict[int, int]:
+        """{config_index: served count} — the per-rung usage histogram."""
+        counts: Dict[int, int] = {}
+        for r in self.completed:
+            counts[r.config_index] = counts.get(r.config_index, 0) + 1
+        return counts
 
     def per_server_utilization(self) -> List[float]:
         """Busy fraction of each server over the horizon (index = server id).

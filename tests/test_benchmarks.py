@@ -96,3 +96,14 @@ def test_check_docs_gate_exits_zero():
     proc = _run_gate("--check-docs")
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "docscheck: OK" in proc.stdout
+
+
+def test_perf_gate_exits_zero():
+    """The fast-path throughput guard: a fresh gate-sized fastsim_bench
+    measurement must stay within 30% of the committed
+    ``experiments/fastsim_bench.json`` baseline.  Keeps the vectorized
+    engine from quietly rotting back toward event-heap speed."""
+    proc = _run_gate("--perf-gate")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "perf-gate: OK" in proc.stdout
+    assert "REGRESSION" not in proc.stdout

@@ -1,0 +1,423 @@
+"""Fast-path simulation engine (repro/serving/fastsim.py).
+
+The contract under test, in order of strictness:
+
+1. **c = 1 golden, bit-for-bit**: the dispatcher's fast path reproduces the
+   event-heap ``ServingSimulator`` *exactly* — same RNG draw order, same
+   float operations, identical per-request waits/starts/completions.
+2. **c > 1 exactness and statistics**: the Kiefer-Wolfowitz recursion with
+   the lowest-free-server tie-break matches the event heap per-request at
+   c in {2, 4}, and ``simulate_batch`` agrees statistically with both the
+   oracle and the Erlang-C / Allen-Cunneen predictions.
+3. **Dispatcher eligibility**: every dynamic-policy feature (controller,
+   batching, stealing, per-worker queues, admission bounds) must fall back
+   to the event-heap oracle.
+4. **Batch-cell purity**: a sweep cell is a pure function of its inputs —
+   permuting traces along an axis permutes the result grid identically,
+   and sub-batches reproduce the same cells (no vectorization cross-talk).
+
+Property tests run through the ``tests/proptest.py`` hypothesis shim.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    allen_cunneen_mean_wait,
+    derive_policies,
+    erlang_c_mean_wait,
+)
+from repro.core.elastico import ElasticoController
+from repro.core.pareto import LatencyProfile, ParetoPoint
+from repro.serving import fastsim
+from repro.serving.fastsim import (
+    FastSimulationResult,
+    fast_path_eligible,
+    simulate,
+    simulate_batch,
+)
+from repro.serving.simulator import (
+    ServingSimulator,
+    SimulationResult,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    constant_rate,
+    generate_arrivals,
+    spike_pattern,
+)
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+SLO_S = 1.0
+DURATION_S = 120.0
+
+
+def _front():
+    return [
+        ParetoPoint(config=("rung", i), accuracy=a,
+                    profile=LatencyProfile(mean=m, p95=p))
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def _arrivals(seed=1, qps=3.0):
+    return generate_arrivals(spike_pattern(qps, duration_s=DURATION_S),
+                             DURATION_S, seed=seed)
+
+
+def _oracle(arrivals, **kw):
+    return ServingSimulator(
+        lognormal_sampler_from_profile(MEANS, P95S), **kw
+    ).run(arrivals, DURATION_S)
+
+
+def _fast(arrivals, **kw):
+    return simulate(
+        lognormal_sampler_from_profile(MEANS, P95S), arrivals, DURATION_S,
+        **kw)
+
+
+def _schedule(result):
+    """(arrival, start, completion, config, server) rows in request order."""
+    rows = sorted(
+        (r.request_id, r.arrival_s, r.start_s, r.completion_s,
+         r.config_index, r.server_id)
+        for r in result.completed
+    )
+    return rows
+
+
+# --------------------------------------------------------------------------
+# 1. golden agreement with the event-heap oracle
+# --------------------------------------------------------------------------
+
+
+def test_c1_golden_bit_for_bit():
+    """The acceptance criterion: identical schedule at c = 1 — same seeds,
+    same RNG draw order, exact float equality on every field."""
+    arrivals = _arrivals()
+    ev = _oracle(arrivals, static_index=1, seed=0, num_servers=1)
+    fa = _fast(arrivals, static_index=1, seed=0, num_servers=1)
+    assert isinstance(fa, FastSimulationResult)
+    assert _schedule(ev) == _schedule(fa)            # bit-for-bit
+    assert ev.per_server_busy_s == fa.per_server_busy_s
+    assert ev.queue_depth_samples == fa.queue_depth_samples
+    assert ev.config_timeline == fa.config_timeline
+    assert ev.p95_latency() == fa.p95_latency()
+    # per-request fields are exactly equal (asserted above); the aggregate
+    # mean differs only by numpy's pairwise vs sequential summation order
+    assert ev.mean_wait() == pytest.approx(fa.mean_wait(), rel=1e-12)
+
+
+@pytest.mark.parametrize("c", [2, 4])
+def test_multi_server_schedule_matches_oracle(c):
+    """c > 1 shares the oracle's RNG draw order and tie-breaks, so the
+    recursion reproduces the event heap exactly there too (the formal
+    requirement is only statistical agreement; exactness is stronger)."""
+    arrivals = _arrivals(qps=3.0 * c)
+    ev = _oracle(arrivals, static_index=0, seed=3, num_servers=c)
+    fa = _fast(arrivals, static_index=0, seed=3, num_servers=c)
+    assert _schedule(ev) == _schedule(fa)
+    assert ev.per_server_busy_s == fa.per_server_busy_s
+
+
+def test_heterogeneous_assignment_matches_oracle():
+    arrivals = _arrivals(qps=6.0)
+    assign = [0, 0, 2, 2]
+    ev = _oracle(arrivals, seed=0, num_servers=4, assignment=assign)
+    fa = _fast(arrivals, seed=0, num_servers=4, assignment=assign)
+    assert isinstance(fa, FastSimulationResult)
+    assert _schedule(ev) == _schedule(fa)
+    assert ev.assignment_timeline == fa.assignment_timeline
+
+
+def test_fast_result_metric_surface_consistent():
+    """Array-backed metrics must equal the list-based computation over the
+    lazily materialized completed records."""
+    arrivals = _arrivals(qps=8.0)
+    fa = _fast(arrivals, static_index=2, seed=1, num_servers=2)
+    recs = fa.completed
+    assert fa.num_completed == len(recs) == len(arrivals)
+    assert fa.mean_wait() == pytest.approx(
+        sum(r.wait_s for r in recs) / len(recs))
+    assert fa.slo_compliance(SLO_S) == pytest.approx(
+        sum(1 for r in recs if r.latency_s <= SLO_S) / len(recs))
+    assert fa.mean_accuracy(ACCS) == pytest.approx(
+        sum(ACCS[r.config_index] for r in recs) / len(recs))
+    counts = fa.config_counts()
+    assert sum(counts.values()) == len(recs)
+    assert fa.latencies() == [r.latency_s for r in recs]
+
+
+# --------------------------------------------------------------------------
+# 2. statistical agreement: simulate_batch vs oracle and queueing theory
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c", [2, 4])
+def test_batch_agrees_with_oracle_statistically(c):
+    """Mean wait / p95 / compliance of the batched sweep agree with the
+    event-heap oracle within sampling tolerance at c in {2, 4}."""
+    rate = 3.0 * c
+    slo = 0.6
+    res = simulate_batch(
+        [MEANS[1]], [P95S[1]],
+        arrival_rates_qps=[rate], duration_s=400.0, num_servers=c,
+        replications=12, slo_s=slo, seed=5)
+    # oracle: a few independent replications of the same scenario
+    waits, p95s, comps = [], [], []
+    for rep in range(4):
+        arrivals = generate_arrivals(constant_rate(rate), 400.0, seed=50 + rep)
+        out = ServingSimulator(
+            lognormal_sampler_from_profile([MEANS[1]], [P95S[1]]),
+            static_index=0, seed=rep, num_servers=c).run(arrivals, 400.0)
+        waits.append(out.mean_wait())
+        p95s.append(out.p95_latency())
+        comps.append(out.slo_compliance(slo))
+    sim_wait = float(res.mean_wait_s.mean())
+    orc_wait = sum(waits) / len(waits)
+    assert sim_wait == pytest.approx(orc_wait, rel=0.25, abs=0.01)
+    assert float(res.p95_latency_s.mean()) == pytest.approx(
+        sum(p95s) / len(p95s), rel=0.25, abs=0.05)
+    assert float(res.slo_compliance.mean()) == pytest.approx(
+        sum(comps) / len(comps), abs=0.05)
+
+
+@pytest.mark.parametrize("c", [1, 2, 4])
+def test_batch_converges_to_erlang_c(c):
+    """Exponential service (no p95s) is M/M/c: the sweep's mean wait must
+    land on the Erlang-C prediction."""
+    rate, mean = 3.0 * c, 0.2
+    res = simulate_batch(
+        [mean], arrival_rates_qps=[rate], duration_s=2000.0,
+        num_servers=c, replications=20, slo_s=SLO_S, seed=7)
+    pred = erlang_c_mean_wait(c, rate, mean)
+    assert float(res.mean_wait_s.mean()) == pytest.approx(pred, rel=0.12)
+
+
+def test_batch_matches_allen_cunneen_for_lognormal():
+    """Lognormal service at c = 1 is M/G/1 where Allen-Cunneen is exact
+    (Pollaczek-Khinchine)."""
+    mean, p95, rate = 0.25, 0.35, 3.0
+    _, sigma = fastsim.lognormal_params(mean, p95)
+    scv = math.exp(sigma * sigma) - 1.0
+    res = simulate_batch(
+        [mean], [p95], arrival_rates_qps=[rate], duration_s=4000.0,
+        num_servers=1, replications=24, slo_s=SLO_S, seed=11)
+    pred = allen_cunneen_mean_wait(1, rate, mean, scv_service=scv)
+    assert float(res.mean_wait_s.mean()) == pytest.approx(pred, rel=0.12)
+
+
+# --------------------------------------------------------------------------
+# 3. dispatcher eligibility
+# --------------------------------------------------------------------------
+
+
+def test_eligible_static_cases():
+    assert fast_path_eligible()
+    assert fast_path_eligible(num_servers=4)
+    assert fast_path_eligible(assignment=[0, 1], num_servers=2)
+    # a linger window never forms at B = 1
+    assert fast_path_eligible(batch_timeout_s=0.005)
+
+
+def test_ineligible_dynamic_cases():
+    table = derive_policies(_front(), slo_p95_s=SLO_S)
+    assert not fast_path_eligible(controller=ElasticoController(table))
+    assert not fast_path_eligible(max_batch_size=8)
+    assert not fast_path_eligible(queue_discipline="per_worker")
+    assert not fast_path_eligible(queue_discipline="per_worker", steal=True)
+    assert not fast_path_eligible(max_queue_depth=64)
+
+
+def test_dispatcher_routes_static_to_fast_path():
+    out = _fast(_arrivals(), static_index=0, seed=0, num_servers=2)
+    assert isinstance(out, FastSimulationResult)
+
+
+def test_dispatcher_falls_back_for_controller():
+    table = derive_policies(_front(), slo_p95_s=SLO_S)
+    out = _fast(_arrivals(), controller=ElasticoController(table), seed=0)
+    assert isinstance(out, SimulationResult)
+    # and the fallback is the *same* event-heap run, bit-for-bit
+    ev = _oracle(_arrivals(), controller=ElasticoController(table), seed=0)
+    assert _schedule(ev) == _schedule(out)
+
+
+def test_dispatcher_falls_back_for_batching():
+    out = _fast(_arrivals(), static_index=0, seed=0, num_servers=2,
+                max_batch_size=4, batch_timeout_s=0.005)
+    assert isinstance(out, SimulationResult)
+    assert out.mean_batch_size() >= 1.0
+
+
+def test_dispatcher_falls_back_for_stealing_and_admission():
+    arr = _arrivals()
+    out = _fast(arr, seed=0, num_servers=2, assignment=[0, 2],
+                queue_discipline="per_worker", steal=True)
+    assert isinstance(out, SimulationResult)
+    out = _fast(arr, static_index=0, seed=0, max_queue_depth=4)
+    assert isinstance(out, SimulationResult)
+    assert out.offered == len(arr)
+
+
+# --------------------------------------------------------------------------
+# 4. sweep-cell purity (permutation / slicing invariance)
+# --------------------------------------------------------------------------
+
+
+def _traces(seeds, n=300):
+    return [np.sort(np.random.default_rng(s).uniform(0.0, 100.0, size=n))
+            for s in seeds]
+
+
+@given(st.lists(st.integers(0, 2 ** 16), min_size=2, max_size=5, unique=True),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_batch_permutation_invariant_across_replication_axis(seeds, seed):
+    """Permuting the arrival traces along the replication axis permutes the
+    result grid identically — each replication's cell is computed from its
+    own trace and config only, never from batch position."""
+    base = _traces(seeds)
+    perm = list(reversed(range(len(base))))
+    # traces replayed identically across replications: use each trace as
+    # its own load column, then permute the columns
+    a = simulate_batch(MEANS, P95S, arrival_traces=base,
+                       duration_s=100.0, num_servers=2, replications=1,
+                       slo_s=SLO_S, seed=seed)
+    b = simulate_batch(MEANS, P95S, arrival_traces=[base[p] for p in perm],
+                       duration_s=100.0, num_servers=2, replications=1,
+                       slo_s=SLO_S, seed=seed)
+    for field in ("mean_wait_s", "p95_latency_s", "slo_compliance",
+                  "throughput_qps"):
+        got = getattr(b, field)[:, :, :]
+        want = getattr(a, field)[:, :, perm]
+        assert np.array_equal(got, want), field
+
+
+def test_batch_cells_independent_of_batch_composition():
+    """A sub-batch reproduces the big batch's cells exactly: dropping a
+    config or a load from the sweep must not change the others."""
+    rates = [2.0, 5.0]
+    big = simulate_batch(MEANS, P95S, arrival_rates_qps=rates,
+                         duration_s=200.0, num_servers=2, replications=3,
+                         slo_s=SLO_S, seed=9)
+    one_cfg = simulate_batch(MEANS[1:2], P95S[1:2], arrival_rates_qps=rates,
+                             duration_s=200.0, num_servers=2, replications=3,
+                             slo_s=SLO_S, seed=9)
+    assert np.array_equal(big.mean_wait_s[:, 1:2, :], one_cfg.mean_wait_s)
+    one_rate = simulate_batch(MEANS, P95S, arrival_rates_qps=rates[1:],
+                              duration_s=200.0, num_servers=2, replications=3,
+                              slo_s=SLO_S, seed=9)
+    assert np.array_equal(big.mean_wait_s[:, :, 1:], one_rate.mean_wait_s)
+    # growing the replication axis never disturbs earlier replications
+    more_reps = simulate_batch(MEANS, P95S, arrival_rates_qps=rates,
+                               duration_s=200.0, num_servers=2,
+                               replications=5, slo_s=SLO_S, seed=9)
+    assert np.array_equal(big.mean_wait_s, more_reps.mean_wait_s[:3])
+    # permuting the config axis permutes the grid identically
+    perm = [2, 0, 1]
+    permuted = simulate_batch([MEANS[p] for p in perm],
+                              [P95S[p] for p in perm],
+                              arrival_rates_qps=rates, duration_s=200.0,
+                              num_servers=2, replications=3,
+                              slo_s=SLO_S, seed=9)
+    assert np.array_equal(big.mean_wait_s[:, perm, :], permuted.mean_wait_s)
+
+
+def test_batch_deterministic():
+    kw = dict(arrival_rates_qps=[3.0], duration_s=150.0, num_servers=1,
+              replications=4, slo_s=SLO_S, seed=13)
+    a = simulate_batch(MEANS, P95S, **kw)
+    b = simulate_batch(MEANS, P95S, **kw)
+    for field in ("mean_wait_s", "p95_latency_s", "slo_compliance"):
+        assert np.array_equal(getattr(a, field), getattr(b, field))
+
+
+def test_batch_validates_inputs():
+    with pytest.raises(ValueError):
+        simulate_batch([], arrival_rates_qps=[1.0], duration_s=10.0)
+    with pytest.raises(ValueError):
+        simulate_batch([0.1], duration_s=10.0)   # no loads at all
+    with pytest.raises(ValueError):
+        simulate_batch([0.1], arrival_rates_qps=[1.0],
+                       arrival_traces=[[0.5]], duration_s=10.0)
+    with pytest.raises(ValueError):
+        simulate_batch([-0.1], arrival_rates_qps=[1.0], duration_s=10.0)
+    with pytest.raises(ValueError):
+        simulate_batch([0.1], [0.2, 0.3], arrival_rates_qps=[1.0],
+                       duration_s=10.0)
+
+
+def test_non_dyadic_tick_grid_matches_oracle():
+    """control_tick_s values not representable in binary (0.1) accumulate
+    differently than an i*tick grid; the fast path must reproduce the
+    event heap's accumulated tick times and sample count exactly."""
+    arrivals = _arrivals()
+    ev = _oracle(arrivals, static_index=0, seed=0, control_tick_s=0.1)
+    fa = _fast(arrivals, static_index=0, seed=0, control_tick_s=0.1)
+    assert isinstance(fa, FastSimulationResult)
+    assert ev.queue_depth_samples == fa.queue_depth_samples
+
+
+def test_unsorted_arrivals_fall_back_to_oracle():
+    """The FIFO recursion requires time-ordered arrivals; unsorted input
+    (which the event heap handles by sorting its heap) must not silently
+    take the fast path."""
+    out = simulate(lognormal_sampler_from_profile(MEANS, P95S),
+                   [2.0, 1.0, 3.0], 10.0, static_index=0, seed=0)
+    assert isinstance(out, SimulationResult)
+    ev = ServingSimulator(
+        lognormal_sampler_from_profile(MEANS, P95S),
+        static_index=0, seed=0).run([2.0, 1.0, 3.0], 10.0)
+    assert _schedule(ev) == _schedule(out)
+
+
+def test_empty_arrivals_fast_path():
+    out = _fast([], static_index=0, seed=0, num_servers=2)
+    assert isinstance(out, FastSimulationResult)
+    assert out.num_completed == 0
+    assert out.mean_wait() == 0.0
+    assert out.slo_compliance(SLO_S) == 1.0
+    assert out.p95_latency() == 0.0
+    # matches the oracle's conventions for the degenerate run
+    ev = _oracle([], static_index=0, seed=0, num_servers=2)
+    assert ev.mean_wait() == out.mean_wait()
+    assert ev.queue_depth_samples == out.queue_depth_samples
+
+
+# --------------------------------------------------------------------------
+# Planner.validate rides on simulate_batch
+# --------------------------------------------------------------------------
+
+
+def test_planner_validate_grids():
+    from repro.core.planner import Planner
+
+    def profiler(config, n):
+        i = config[0]
+        return [MEANS[i] * (1.0 + 0.04 * math.sin(j)) for j in range(n)]
+
+    feasible = {(i,): ACCS[i] for i in range(3)}
+    planner = Planner(profiler=profiler, num_servers=2)
+    plan = planner.plan(feasible, slo_p95_s=SLO_S)
+    val = planner.validate(plan, duration_s=60.0, replications=4, seed=1)
+    K = plan.table.ladder_size
+    assert len(val.mean_wait_s) == K
+    assert len(val.arrival_rates_qps) == 3
+    for row in val.slo_compliance:
+        assert all(0.0 <= x <= 1.0 for x in row)
+    # the load grid is fractions of the fastest rung's capacity: the
+    # fastest rung must be stable (finite predicted wait) on all of them
+    assert all(math.isfinite(w) for w in val.predicted_wait_s[0])
+    # low load: every rung the SLO admits complies comfortably
+    lo_rate = val.arrival_rates_qps[0]
+    assert 0 in val.compliant_rungs(lo_rate, target=0.9)
+    assert val.num_requests > 0
+    assert "rung 0" in val.describe()

@@ -126,12 +126,17 @@ def test_serving_ladder_every_arch():
     from repro.models.registry import arch_ids
 
     for arch in arch_ids():
-        space, res, plan = bench.build_ladder(arch)
+        space, res, plan, validation = bench.build_ladder(
+            arch, validate_duration_s=2.0, validate_replications=2)
         assert res.feasible, arch
         assert plan is not None and plan.table.ladder_size >= 1, arch
         # ladder ordering invariant (Eq. 4)
         means = [p.point.profile.mean for p in plan.table.policies]
         assert means == sorted(means)
+        # the fast-path validation sweep covered every rung at every rate
+        assert validation is not None
+        assert len(validation.mean_wait_s) == plan.table.ladder_size
+        assert validation.num_requests > 0
 
 
 @pytest.mark.slow
