@@ -17,11 +17,26 @@ Also tracks the vectorized surrogate scoring rate
 (:meth:`repro.workflows.surrogate.SurrogateWorkflow.evaluate_samples`),
 the other offline hot loop this PR vectorized.
 
-Writes ``experiments/fastsim_bench.json`` with a ``gate`` section measured
-at the small fixed gate configuration; ``python -m benchmarks.run
---perf-gate`` re-measures that section fresh and fails on a >30%
-throughput regression against the committed baseline.  The PR acceptance
-criterion is ``fast batch >= 20x event heap`` on this sweep.
+With jax importable, every section is additionally measured on the jax
+backend (``simulate_batch(..., backend="jax")`` — same host-generated
+draws, recursion and reductions on the device), and a dedicated
+**large-sweep cell** (``LARGE``: one deep 32 h M/M/1 trace at 8 QPS,
+ladder x 2 replications, ~5.5M requests with N ~ 9e5 sequential steps
+per scenario) compares the two engines where the numpy loop's
+per-step dispatch overhead dominates.  The acceptance criterion for the
+jax backend is **jax >= 5x numpy on the large-sweep cell**; a lognormal
+(M/G/1) variant of the same cell is recorded alongside.  When jax is not
+importable the jax sections and gate metrics are skipped with the logged
+import reason — the numpy numbers are always measured.
+
+Writes ``experiments/fastsim_bench.json`` with a ``metadata`` section
+(backend availability, platform, library versions, timestamp) and a
+``gate`` section measured at the small fixed gate configuration;
+``python -m benchmarks.run --perf-gate`` re-measures the gate fresh and
+fails on a >30% throughput regression against the committed baseline —
+for the numpy metrics always, and for the jax metrics whenever jax is
+importable.  The PR 5 acceptance criterion ``fast batch >= 20x event
+heap`` keeps being checked on the numpy sweep.
 """
 
 from __future__ import annotations
@@ -53,6 +68,45 @@ FULL = dict(duration_s=600.0, rates=(2.0, 5.0, 8.0), replications=16,
 # reproducible to a few percent across fresh processes.
 GATE = dict(duration_s=480.0, rates=(2.0, 5.0, 8.0), replications=64,
             heap_replications=1)
+# large-sweep cell (the jax >= 5x acceptance measurement): one deep trace
+# — 32 h at 8 QPS, the ladder's K = 3 configs x 2 replications — so the
+# recursion runs ~9e5 sequential steps per scenario.  That is the regime
+# the jax backend exists for: the numpy loop pays Python dispatch per
+# step, the jitted scan does not.  M/M/1 (exponential services) keeps
+# the shared host draw cost from masking the engine difference; the
+# lognormal ladder variant of the same cell is recorded alongside.
+LARGE = dict(duration_s=115200.0, rates=(8.0,), replications=2)
+
+
+def run_metadata() -> dict:
+    """Provenance for the committed artifact: which engines were measured,
+    where, with what library versions."""
+    import datetime
+    import os
+    import platform
+
+    import numpy as np
+
+    meta = {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "numpy": np.__version__,
+        "backends": ["numpy"],
+        "jax": None,
+        "jax_platform": None,
+    }
+    if fastsim.jax_available():
+        import jax
+
+        meta["backends"].append("jax")
+        meta["jax"] = jax.__version__
+        meta["jax_platform"] = jax.default_backend()
+    else:
+        meta["jax_unavailable_reason"] = fastsim.jax_unavailable_reason()
+    return meta
 
 
 def _sweep_sizes(cfg: dict):
@@ -98,21 +152,63 @@ def measure_fast_single(cfg: dict, num_servers: int) -> dict:
     return {"requests": total, "wall_s": wall, "rps": total / wall}
 
 
-def measure_batch(cfg: dict, num_servers: int) -> dict:
-    """The batched sweep: the full R x K x L grid as one call."""
+def measure_batch(cfg: dict, num_servers: int, *,
+                  backend: str = "numpy", lognormal: bool = True) -> dict:
+    """The batched sweep: the full R x K x L grid as one call.  ``backend``
+    is pinned (numpy by default) so the committed metrics keep naming the
+    engine they measure even as ``simulate_batch``'s auto selection
+    evolves."""
     t0 = time.perf_counter()
     res = fastsim.simulate_batch(
-        MEANS, P95S,
+        MEANS, P95S if lognormal else None,
         arrival_rates_qps=list(cfg["rates"]),
         duration_s=cfg["duration_s"],
         num_servers=num_servers,
         replications=cfg["replications"],
         slo_s=SLO_S,
         seed=0,
+        backend=backend,
     )
     wall = time.perf_counter() - t0
     return {"requests": res.total_requests, "wall_s": wall,
             "rps": res.total_requests / wall}
+
+
+def measure_large_cell(cfg: dict = LARGE, *, repeats: int = 3) -> dict:
+    """numpy vs jax on the deep large-sweep cell, interleaved
+    median-of-``repeats`` after a jax compile warmup.  Skipped (with the
+    import reason) when jax is unavailable."""
+    import statistics
+
+    out = {"grid": {"configs": len(MEANS), "loads": len(cfg["rates"]),
+                    "replications": cfg["replications"],
+                    "duration_s": cfg["duration_s"]}}
+    if not fastsim.jax_available():
+        out["skipped"] = (f"jax not importable "
+                          f"({fastsim.jax_unavailable_reason()})")
+        print(f"fastsim_bench: large-sweep jax section skipped: "
+              f"{out['skipped']}")
+        return out
+    for tag, lognormal in (("mm1", False), ("mg1_lognormal", True)):
+        warm = dict(cfg, duration_s=60.0, replications=2)
+        measure_batch(warm, 1, backend="jax", lognormal=lognormal)  # compile
+        measure_batch(warm, 1, backend="numpy", lognormal=lognormal)
+        npy, jx = [], []
+        for _ in range(repeats):
+            npy.append(measure_batch(cfg, 1, backend="numpy",
+                                     lognormal=lognormal))
+            jx.append(measure_batch(cfg, 1, backend="jax",
+                                    lognormal=lognormal))
+        n_rps = statistics.median(s["rps"] for s in npy)
+        j_rps = statistics.median(s["rps"] for s in jx)
+        out[tag] = {
+            "requests": npy[0]["requests"],
+            "numpy_rps": n_rps,
+            "jax_rps": j_rps,
+            "jax_speedup": j_rps / n_rps,
+        }
+    out["jax_speedup"] = out["mm1"]["jax_speedup"]
+    return out
 
 
 def measure_surrogate(num_configs: int = 40, samples: int = 200) -> dict:
@@ -141,15 +237,27 @@ def measure_gate_section(cfg: dict, *, repeats: int = 5) -> dict:
         samples = sorted(measure_batch(cfg, c)["rps"]
                          for _ in range(repeats))
         out[f"fast_batch_rps_c{c}"] = statistics.median(samples)
+    if fastsim.jax_available():
+        for c in (1, 4):
+            measure_batch(cfg, c, backend="jax")   # warmup + compile
+            samples = sorted(measure_batch(cfg, c, backend="jax")["rps"]
+                             for _ in range(repeats))
+            out[f"fast_batch_jax_rps_c{c}"] = statistics.median(samples)
+    else:
+        print(f"fastsim_bench: jax gate metrics skipped: jax not "
+              f"importable ({fastsim.jax_unavailable_reason()})")
     return out
 
 
 def _measure_batch_stable(cfg: dict, num_servers: int,
-                          repeats: int = 3) -> dict:
+                          repeats: int = 3, *,
+                          backend: str = "numpy") -> dict:
     """Warmed-up median-of-``repeats`` batched-sweep measurement — a single
-    cold call pays first-touch page faults and reads up to ~3x slow."""
-    measure_batch(cfg, num_servers)   # warmup, untimed
-    samples = sorted((measure_batch(cfg, num_servers) for _ in range(repeats)),
+    cold call pays first-touch page faults (and, for jax, compilation) and
+    reads up to ~3x slow."""
+    measure_batch(cfg, num_servers, backend=backend)   # warmup, untimed
+    samples = sorted((measure_batch(cfg, num_servers, backend=backend)
+                      for _ in range(repeats)),
                      key=lambda s: s["rps"])
     return samples[len(samples) // 2]
 
@@ -162,27 +270,40 @@ def _section(cfg: dict) -> dict:
         heap = measure_heap(cfg, c)
         single = measure_fast_single(cfg, c)
         batch = _measure_batch_stable(cfg, c)
-        section[f"c{c}"] = {
+        row = {
             "event_heap": heap,
             "fast_single": single,
             "fast_batch": batch,
             "single_speedup": single["rps"] / heap["rps"],
             "batch_speedup": batch["rps"] / heap["rps"],
         }
+        if fastsim.jax_available():
+            jax_batch = _measure_batch_stable(cfg, c, backend="jax")
+            row["fast_batch_jax"] = jax_batch
+            row["jax_batch_speedup"] = jax_batch["rps"] / heap["rps"]
+        section[f"c{c}"] = row
     return section
 
 
-def _run(cfg: dict, artifact: str) -> dict:
+def _run(cfg: dict, artifact: str, *, large: bool = True) -> dict:
     with Timer() as t:
         payload = {
+            "metadata": run_metadata(),
             "sweep": _section(cfg),
             "gate": measure_gate_section(GATE),
             "surrogate": measure_surrogate(),
         }
+        if large:
+            payload["large_sweep"] = measure_large_cell(LARGE)
     save_json(artifact, payload)
     c1 = payload["sweep"]["c1"]
     c4 = payload["sweep"]["c4"]
     worst_speedup = min(c1["batch_speedup"], c4["batch_speedup"])
+    jax_note = ""
+    if large and "jax_speedup" in payload.get("large_sweep", {}):
+        jspd = payload["large_sweep"]["jax_speedup"]
+        jax_note = (f" jax_large={jspd:.1f}x"
+                    + ("" if jspd >= 5.0 else " [<5x: acceptance FAILED]"))
     return {
         "name": "fastsim_bench",
         "us_per_call": t.elapsed * 1e6,
@@ -193,6 +314,7 @@ def _run(cfg: dict, artifact: str) -> dict:
             f"speedup_c1={c1['batch_speedup']:.0f}x "
             f"c4={c4['batch_speedup']:.0f}x "
             f"surrogate={payload['surrogate']['sps']:.0f} samples/s"
+            + jax_note
             + ("" if worst_speedup >= 20.0
                else " [<20x: acceptance FAILED]")
         ),
@@ -205,8 +327,9 @@ def run() -> dict:
 
 def run_smoke() -> dict:
     """Gate-sized sweep; separate artifact so the smoke gate never
-    overwrites the committed baseline --perf-gate compares against."""
-    return _run(GATE, "fastsim_bench_smoke.json")
+    overwrites the committed baseline --perf-gate compares against.  The
+    deep large-sweep cell is full-run-only (it alone takes ~15 s)."""
+    return _run(GATE, "fastsim_bench_smoke.json", large=False)
 
 
 def perf_gate(baseline_path: str, *, max_regression: float = 0.30) -> int:
@@ -232,6 +355,12 @@ def perf_gate(baseline_path: str, *, max_regression: float = 0.30) -> int:
     for key, base in sorted(baseline.items()):
         now = fresh.get(key)
         if now is None:
+            if "jax" in key and not fastsim.jax_available():
+                # jax-backend baselines are only comparable where jax can
+                # run; a jax-less install skips them instead of failing
+                print(f"perf-gate: {key} SKIPPED (jax not importable: "
+                      f"{fastsim.jax_unavailable_reason()})")
+                continue
             print(f"perf-gate: metric {key} missing from fresh run")
             failed = True
             continue

@@ -43,6 +43,7 @@ from . import (
     roofline_table,
     serving_ladders_bench,
     table1_baselines,
+    trace_replay_bench,
 )
 
 MODULES = {
@@ -60,6 +61,7 @@ MODULES = {
     "cost_objective": cost_objective,
     "roofline_table": roofline_table,
     "fastsim_bench": fastsim_bench,
+    "trace_replay": trace_replay_bench,
 }
 
 BENCHES = {name: mod.run for name, mod in MODULES.items()}

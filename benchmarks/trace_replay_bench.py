@@ -1,0 +1,172 @@
+"""Million-user trace replay: day-scale chunked traces through the full
+mix ladder, plus the Planner validation the replay feeds.
+
+The paper's serving experiments replay 180 s traces; a real deployment
+decides its ladder against *weeks* of diurnal load.  This benchmark runs
+that scale offline:
+
+- **Diurnal replay** (the headline): a ~29-simulated-day diurnal trace —
+  >= 1e7 requests — generated chunk by chunk
+  (:func:`repro.serving.traces.diurnal_trace`) and replayed through every
+  rung of the RAG plan's switching ladder simultaneously
+  (:func:`repro.serving.traces.replay_mix`).  Memory stays O(chunk); the
+  fast rungs hold the SLO across the daily peak while the accurate rungs
+  saturate — the regime split the switching thresholds exist for.  No
+  event-heap fallback anywhere: the replay runs on the streaming
+  Lindley engines, start to finish.
+- **Flash-crowd and bursty-MMPP replays**: shorter stress traces through
+  the same ladder, exercising the other two chunked generators.
+- **Planner validation**: the same plan is validated with
+  :meth:`repro.core.planner.Planner.validate` at the diurnal trace's
+  base / mean / peak rates (``backend="auto"``, which at this grid size
+  resolves to the jax sweep backend when jax is importable) — the
+  replay supplies the load levels, the Planner confirms its ladder
+  against them.
+
+Writes ``experiments/trace_replay.json`` (metadata, per-rung replay
+statistics, validation summary).  Acceptance: the default run's diurnal
+section replays >= 1e7 requests across the full ladder.
+"""
+
+from __future__ import annotations
+
+from repro.core.planner import Planner
+from repro.serving import fastsim
+from repro.serving.traces import (
+    bursty_mmpp_trace,
+    diurnal_trace,
+    flash_crowd_trace,
+    replay_mix,
+)
+from repro.workflows.surrogate import RagSurrogate
+
+from .common import RAG_BUDGET, Timer, make_profiler, save_json, search
+from .fastsim_bench import run_metadata
+
+TAU = 0.75          # relative-accuracy floor (table1/fig7 setting)
+SLO_S = 1.0         # 1000 ms p95, the paper's serving SLO
+BASE_UTIL = 0.55    # diurnal base load as a fraction of the fastest rung
+AMPLITUDE = 0.65    # daily swing: peak ~ 0.9x the fastest rung's capacity
+
+
+def build_plan():
+    """The RAG switching ladder, planned exactly like the paper-pipeline
+    benchmarks, with the Planner kept for validation."""
+    sur = RagSurrogate()
+    res = search(sur, TAU, RAG_BUDGET)
+    planner = Planner(profiler=make_profiler(sur))
+    plan = planner.plan(res.feasible, slo_p95_s=SLO_S)
+    return sur, planner, plan
+
+
+def _ladder_stats(plan):
+    means = [pol.point.profile.mean for pol in plan.table.policies]
+    p95s = [pol.point.profile.p95 for pol in plan.table.policies]
+    return means, p95s
+
+
+def _replay_section(trace, means, p95s, *, seed: int) -> dict:
+    with Timer() as t:
+        stats = replay_mix(trace, means, p95s, slo_s=SLO_S, seed=seed)
+    n = stats[0].num_requests
+    return {
+        "requests": n,
+        "wall_s": t.elapsed,
+        "rps": n / t.elapsed,
+        "engine": stats[0].engine,
+        "trace_duration_s": trace.duration_s,
+        "rungs": [
+            {
+                "mean_s": means[k],
+                "mean_wait_s": s.mean_wait_s,
+                "p95_latency_s": s.p95_latency_s,
+                "p95_resolution_s": s.p95_resolution_s,
+                "slo_compliance": s.slo_compliance,
+                "max_latency_s": s.max_latency_s,
+            }
+            for k, s in enumerate(stats)
+        ],
+    }
+
+
+def _run(*, target_requests: float, artifact: str) -> dict:
+    sur, planner, plan = build_plan()
+    means, p95s = _ladder_stats(plan)
+    cap = 1.0 / means[0]                     # fastest rung's drain rate
+    base = BASE_UTIL * cap
+    duration = target_requests / base        # mean diurnal rate == base
+
+    with Timer() as t:
+        diurnal = diurnal_trace(base, amplitude=AMPLITUDE,
+                                duration_s=duration, seed=11)
+        sections = {
+            "diurnal": _replay_section(diurnal, means, p95s, seed=11),
+            "flash_crowd": _replay_section(
+                flash_crowd_trace(base, peak_factor=1.8 / BASE_UTIL,
+                                  crowd_start_s=600.0, ramp_s=30.0,
+                                  hold_s=300.0,
+                                  duration_s=min(duration / 8.0, 7200.0),
+                                  seed=12),
+                means, p95s, seed=12),
+            "bursty_mmpp": _replay_section(
+                bursty_mmpp_trace(base * 0.7, burst_factor=1.6 / BASE_UTIL,
+                                  duration_s=min(duration / 8.0, 7200.0),
+                                  seed=13),
+                means, p95s, seed=13),
+        }
+
+        # validate the plan at the load levels the diurnal replay covers:
+        # base, daily mean, daily peak of the fastest rung's capacity
+        rates = [base, base * (1.0 + AMPLITUDE / 2.0),
+                 base * (1.0 + AMPLITUDE)]
+        validation = planner.validate(
+            plan, arrival_rates_qps=rates, duration_s=900.0,
+            replications=8, seed=0, backend="auto")
+        sweep_slots = (8 * len(means) * len(rates)
+                       * int(rates[-1] * 900.0 * 1.1))
+        validation_backend = fastsim.resolve_backend(
+            "auto", num_servers=1, total_slots=sweep_slots)
+
+    payload = {
+        "metadata": run_metadata(),
+        "ladder": {"rungs": len(means), "fastest_mean_s": means[0],
+                   "slowest_mean_s": means[-1], "slo_s": SLO_S},
+        **sections,
+        "validation": {
+            "backend": validation_backend,
+            "arrival_rates_qps": list(validation.arrival_rates_qps),
+            "num_requests": validation.num_requests,
+            "fast_rung_min_compliance": min(validation.slo_compliance[0]),
+            "wait_model_max_rel_err": validation.wait_model_error(),
+        },
+    }
+    save_json(artifact, payload)
+    d = sections["diurnal"]
+    ok = d["requests"] >= 1e7
+    return {
+        "name": "trace_replay",
+        "us_per_call": t.elapsed * 1e6,
+        "derived": (
+            f"diurnal={d['requests']} reqs over {duration / 86400.0:.1f} "
+            f"days @ {d['rps'] / 1e6:.2f}M req/s engine={d['engine']} "
+            f"fast_rung_comp={d['rungs'][0]['slo_compliance']:.4f} "
+            f"validated={payload['validation']['num_requests']} reqs "
+            f"on {validation_backend}"
+            + ("" if ok or "smoke" in artifact
+               else " [<1e7 requests: acceptance FAILED]")
+        ),
+    }
+
+
+def run() -> dict:
+    return _run(target_requests=1.05e7, artifact="trace_replay.json")
+
+
+def run_smoke() -> dict:
+    """Same pipeline at ~1e5 requests (a few simulated hours); separate
+    artifact so the smoke gate never overwrites the full-run evidence."""
+    return _run(target_requests=1e5, artifact="trace_replay_smoke.json")
+
+
+if __name__ == "__main__":
+    print(run())

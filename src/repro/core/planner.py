@@ -313,6 +313,7 @@ class Planner:
         duration_s: float = 120.0,
         replications: int = 8,
         seed: int = 0,
+        backend: str = "auto",
     ) -> PlanValidation:
         """Validate a derived plan's switching ladder against simulation.
 
@@ -327,6 +328,12 @@ class Planner:
         Allen-Cunneen predictions, so a plan whose queueing model is off
         (or whose SLO is infeasible at the loads it claims to cover) is
         caught *offline*, before deployment.
+
+        ``backend`` is forwarded to the sweep engine verbatim: ``"auto"``
+        (default) runs long validations on the jax backend when available
+        and falls back to numpy otherwise; the result grids agree across
+        backends to float64 tolerance (see
+        :func:`repro.serving.fastsim.resolve_backend`).
         """
         from ..serving.fastsim import simulate_batch
         from .aqm import allen_cunneen_mean_wait
@@ -352,6 +359,7 @@ class Planner:
             replications=replications,
             slo_s=plan.table.slo_p95_s,
             seed=seed,
+            backend=backend,
         )
         grids = sweep.over_replications()
         predicted = tuple(

@@ -8,10 +8,12 @@ tiling), ``ops.py`` (jitted wrapper; interpret mode on CPU), ``ref.py``
 - decode_attention: flash-decode GQA single-token attention over KV cache
 - ssm_scan: fused Mamba-style selective-scan recurrence
 - rmsnorm: fused normalization
+- lindley_scan: blocked max-plus Lindley recursion (fastsim's c = 1 sweep)
 """
 
 from .decode_attention import decode_attention, decode_attention_ref
 from .flash_attention import attention_ref, flash_attention
+from .lindley_scan import lindley_scan, lindley_scan_ref, maxplus_combine
 from .rmsnorm import rmsnorm, rmsnorm_ref
 from .ssm_scan import ssm_scan, ssm_scan_ref
 
@@ -20,6 +22,9 @@ __all__ = [
     "decode_attention_ref",
     "attention_ref",
     "flash_attention",
+    "lindley_scan",
+    "lindley_scan_ref",
+    "maxplus_combine",
     "rmsnorm",
     "rmsnorm_ref",
     "ssm_scan",

@@ -1,0 +1,4 @@
+from .ops import lindley_scan
+from .ref import lindley_scan_ref, maxplus_combine
+
+__all__ = ["lindley_scan", "lindley_scan_ref", "maxplus_combine"]

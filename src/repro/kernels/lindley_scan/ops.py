@@ -1,0 +1,32 @@
+"""Jitted wrapper for the blocked Lindley scan (interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import lindley_scan as _kernel
+from .ref import lindley_scan_ref, maxplus_combine
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "time_chunk", "interpret"))
+def lindley_scan(
+    arrivals: jax.Array,
+    services: jax.Array,
+    *,
+    block_b: int = 128,
+    time_chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interp = _on_cpu() if interpret is None else interpret
+    return _kernel(arrivals, services, block_b=block_b,
+                   time_chunk=time_chunk, interpret=interp)
+
+
+__all__ = ["lindley_scan", "lindley_scan_ref", "maxplus_combine"]

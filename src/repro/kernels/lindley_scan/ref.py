@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the blocked Lindley scan kernel.
+
+The c = 1 Lindley recursion over completion times,
+
+    C_i = max(A_i, C_{i-1}) + S_i,
+
+is max-plus linear: writing f_i(x) = max(x + a_i, b_i) with a_i = S_i and
+b_i = A_i + S_i, we have C_i = (f_i o ... o f_1)(0), and the composition
+of two such affine max-plus maps is again one:
+
+    (f2 o f1)(x) = max(x + a1 + a2, max(b1 + a2, b2))
+                 = f_{(a1 + a2, max(b1 + a2, b2))}(x).
+
+Equivalently each f_i is the 2x2 max-plus matrix [[a_i, b_i], [-inf, 0]]
+acting on (x, 0), and composition is the max-plus matrix product — an
+associative operator, so the whole prefix of completion times is one
+``jax.lax.associative_scan`` (the same machinery as the ssm_scan kernel's
+linear recurrence, with (+, max) in place of (*, +)).  The property test
+in ``tests/test_fastsim_jax.py`` checks associativity of
+:func:`maxplus_combine` directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxplus_combine(left, right):
+    """Compose two max-plus affine operators (elementwise over a batch).
+
+    Operands are ``(a, b)`` pairs representing x -> max(x + a, b); the
+    *left* operand is applied first.  Associative by construction (it is a
+    max-plus matrix product), which is what licenses evaluating the
+    Lindley prefix as a parallel scan.
+    """
+    a_l, b_l = left
+    a_r, b_r = right
+    return a_l + a_r, jnp.maximum(b_l + a_r, b_r)
+
+
+def lindley_scan_ref(arrivals: jax.Array, services: jax.Array) -> jax.Array:
+    """Completion times of the c = 1 Lindley system, shape (N, B).
+
+    ``arrivals``/``services``: (N, B) — N requests in FIFO order, B
+    independent scenarios.  Evaluated as an associative max-plus scan over
+    the per-request operators (a_i, b_i) = (S_i, A_i + S_i); starting from
+    an idle server (x0 = 0), C_i = max(acum_i, bcum_i) where (acum, bcum)
+    is the scanned prefix composition (acum_i = sum of services alone, the
+    never-idle lower bound; bcum_i dominates whenever any arrival gate
+    binds).
+    """
+    acum, bcum = jax.lax.associative_scan(
+        maxplus_combine, (services, arrivals + services), axis=0)
+    return jnp.maximum(acum, bcum)

@@ -79,6 +79,17 @@ from .fastsim import (
     simulate_batch,
 )
 from .monitor import LoadMonitor, LoadSnapshot
+from .traces import (
+    ChunkedMMPPTrace,
+    ChunkedPoissonTrace,
+    ReplayStats,
+    StreamingQuantile,
+    bursty_mmpp_trace,
+    diurnal_trace,
+    flash_crowd_trace,
+    replay_mix,
+    replay_trace,
+)
 from .scheduler import AdmissionDecision, Dispatch, Linger, Scheduler
 from .simulator import (
     CompletedRequest,
@@ -113,6 +124,15 @@ __all__ = [
     "simulate_batch",
     "LoadMonitor",
     "LoadSnapshot",
+    "ChunkedMMPPTrace",
+    "ChunkedPoissonTrace",
+    "ReplayStats",
+    "StreamingQuantile",
+    "bursty_mmpp_trace",
+    "diurnal_trace",
+    "flash_crowd_trace",
+    "replay_mix",
+    "replay_trace",
     "AdmissionDecision",
     "Dispatch",
     "Linger",

@@ -49,6 +49,38 @@ introduced this module.  The event heap remains authoritative: fast-path
 agreement is enforced by golden (c = 1) and statistical (c > 1) tests
 against it, plus the Allen-Cunneen M/G/c prediction
 (:func:`repro.core.aqm.allen_cunneen_mean_wait`).
+
+Backends.  ``simulate_batch`` evaluates the recursion on one of two
+backends (``backend="numpy" | "jax" | "auto"``):
+
+- **numpy** — the authoritative reference: the original per-request-index
+  Python loop over vectorized array ops.  Its results are bit-for-bit
+  stable across this PR and remain the values every parity test pins.
+- **jax** — the same pre-drawn (arrival, service) grids pushed through a
+  jitted scan: the c = 1 Lindley recursion as a max-plus
+  ``jax.lax.associative_scan`` over 2x2 operator pairs
+  (:func:`repro.kernels.lindley_scan.maxplus_combine`), or an equivalent
+  sequential ``lax.scan`` that reproduces the numpy loop *bit-exactly*
+  (``scan_impl="auto"`` picks the sequential form on CPU, where XLA's
+  O(N log N) associative materialization loses to the O(N) scan, and the
+  associative form on accelerators, where its log-depth parallelism
+  wins); the c > 1 Kiefer-Wolfowitz recursion as a ``lax.scan`` whose
+  carry is the sorted length-c workload vector, maintained by an unrolled
+  insertion (comparator) network.  ``scan_impl="pallas"`` routes the
+  c = 1 scan through the blocked Pallas kernel
+  (:func:`repro.kernels.lindley_scan.lindley_scan`, CPU-interpreter
+  fallback like ssm_scan).  Arrival and service draws always come from
+  the *same* content-keyed numpy streams as the numpy backend, so the jax
+  grids are held to tight allclose parity (bit-exact schedules for the
+  sequential impl) — only the recursion and reductions move to the
+  accelerator.  The scan math runs in float64 via the scoped
+  ``jax.experimental.enable_x64`` context, which does not leak x64 into
+  the rest of the process.
+- **auto** — jax when it is importable, the pool fits the jax path
+  (c <= ``_JAX_MAX_SERVERS``), and the padded grid is big enough to
+  amortize dispatch (>= ``_JAX_AUTO_MIN_SLOTS`` request slots); numpy
+  otherwise.  Falling back is always silent and safe: both backends
+  compute the same grids.
 """
 
 from __future__ import annotations
@@ -69,6 +101,15 @@ from .simulator import (
     SimulationResult,
 )
 
+try:  # jax is optional at runtime: the numpy backend is always available
+    import jax as _jax
+    import jax.numpy as _jnp
+    _JAX_IMPORT_ERROR: Optional[str] = None
+except Exception as _e:  # pragma: no cover - exercised on jax-less installs
+    _jax = None
+    _jnp = None
+    _JAX_IMPORT_ERROR = f"{type(_e).__name__}: {_e}"
+
 __all__ = [
     "fast_path_eligible",
     "simulate",
@@ -76,6 +117,9 @@ __all__ = [
     "FastSimulationResult",
     "SweepResult",
     "lognormal_params",
+    "jax_available",
+    "jax_unavailable_reason",
+    "resolve_backend",
 ]
 
 _Z95 = 1.6448536269514722
@@ -525,9 +569,206 @@ def _fingerprint(payload: bytes) -> int:
 def _poisson_trace(rng: np.random.Generator, rate_qps: float,
                    duration_s: float) -> np.ndarray:
     """One homogeneous-Poisson arrival trace: N ~ Poisson(rate * T), times
-    are the order statistics of N uniforms on [0, T)."""
+    are the order statistics of N uniforms on [0, T).
+
+    Materializes the full trace — right for sweep cells, whose padded
+    grids need the whole trace anyway.  Huge streamed replays (1e7+
+    requests) should instead use the chunked generators in
+    :mod:`repro.serving.traces`, which keep memory O(chunk)."""
     n = int(rng.poisson(rate_qps * duration_s))
     return np.sort(rng.uniform(0.0, duration_s, size=n))
+
+
+# --------------------------------------------------------------------------
+# jax backend: the same grids, recursion + reductions on the accelerator
+# --------------------------------------------------------------------------
+
+_JAX_AUTO_MIN_SLOTS = 1_000_000   # padded request slots to amortize dispatch
+_JAX_MAX_SERVERS = 32             # unrolled insertion network bound (c > 1)
+_SCAN_IMPLS = ("auto", "sequential", "associative", "pallas")
+
+
+def jax_available() -> bool:
+    """Can the jax backend run in this process?"""
+    return _jax is not None
+
+
+def jax_unavailable_reason() -> Optional[str]:
+    """Why jax is unavailable (None when it is importable) — the reason the
+    benchmark gates log when they skip the jax measurements."""
+    return _JAX_IMPORT_ERROR
+
+
+def resolve_backend(backend: str = "auto", *, num_servers: int = 1,
+                    total_slots: Optional[int] = None) -> str:
+    """Resolve a ``backend`` request to the engine that will actually run.
+
+    ``"numpy"`` and ``"jax"`` are literal (``"jax"`` raises with the
+    import reason when jax is missing, and rejects pools past the
+    insertion-network bound ``_JAX_MAX_SERVERS``).  ``"auto"`` picks jax
+    only when it is importable, the pool qualifies, and the padded grid
+    (``total_slots`` = B x N_max) is big enough to amortize device
+    dispatch and compilation; everything else — including jax-less
+    installs — silently gets the numpy engine, which computes the same
+    grids.
+    """
+    if backend == "numpy":
+        return "numpy"
+    if backend == "jax":
+        if _jax is None:
+            raise RuntimeError(
+                f"backend='jax' requested but jax is not importable "
+                f"({_JAX_IMPORT_ERROR})")
+        if num_servers > _JAX_MAX_SERVERS:
+            raise ValueError(
+                f"jax backend supports num_servers <= {_JAX_MAX_SERVERS} "
+                f"(got {num_servers}); use backend='numpy'")
+        return "jax"
+    if backend != "auto":
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected 'numpy', 'jax', or 'auto')")
+    if _jax is None or num_servers > _JAX_MAX_SERVERS:
+        return "numpy"
+    if total_slots is not None and total_slots < _JAX_AUTO_MIN_SLOTS:
+        return "numpy"
+    return "jax"
+
+
+def _resolve_scan_impl(scan_impl: str) -> str:
+    """Pick the c = 1 scan implementation.  ``auto`` resolves by platform:
+    the sequential ``lax.scan`` on CPU (O(N) work, bit-exact vs the numpy
+    loop), the max-plus ``associative_scan`` on accelerators (log-depth
+    parallelism across the time axis)."""
+    if scan_impl not in _SCAN_IMPLS:
+        raise ValueError(f"unknown scan_impl {scan_impl!r} "
+                         f"(expected one of {_SCAN_IMPLS})")
+    if scan_impl != "auto":
+        return scan_impl
+    return "sequential" if _jax.default_backend() == "cpu" else "associative"
+
+
+if _jax is not None:
+    import functools as _functools
+
+    def _jax_c1(At, St, impl: str):
+        """(waits, lats) of the c = 1 Lindley system; inputs (N, B)."""
+        if impl == "sequential":
+            # same op order as the numpy reference loop => bit-exact
+            def step(comp, inp):
+                a, s = inp
+                st = _jnp.maximum(a, comp)
+                ct = st + s
+                return ct, (st - a, ct - a)
+
+            comp0 = _jnp.zeros(At.shape[1], At.dtype)
+            _, (waits, lats) = _jax.lax.scan(step, comp0, (At, St))
+            return waits, lats
+        if impl == "associative":
+            from ..kernels.lindley_scan import lindley_scan_ref
+
+            C = lindley_scan_ref(At, St)
+        else:  # pallas: blocked kernel, padded to block multiples
+            from ..kernels.lindley_scan import lindley_scan as _lk
+
+            n, b = At.shape
+            tc, bb = 256, 128
+            pn, pb = (-n) % tc, (-b) % bb
+            Ap = _jnp.pad(At, ((0, pn), (0, pb)))
+            Sp = _jnp.pad(St, ((0, pn), (0, pb)))
+            C = _lk(Ap, Sp, block_b=bb, time_chunk=tc)[:n, :b]
+        return C - St - At, C - At
+
+    def _jax_kw(At, St, c: int):
+        """(waits, lats) of the c-server Kiefer-Wolfowitz system.  The
+        carry is the ascending workload vector as c arrays; the dispatch
+        serves on the earliest-free entry and re-inserts the new
+        completion with an unrolled comparator chain — the same sorted
+        multiset (hence bit-exact waits) as the numpy path's
+        set-column-0-and-sort step."""
+        B = At.shape[1]
+        F0 = tuple(_jnp.zeros(B, At.dtype) for _ in range(c))
+
+        def step(F, inp):
+            a, s = inp
+            st = _jnp.maximum(a, F[0])
+            ct = st + s
+            cur = ct
+            out = []
+            for j in range(1, c):
+                out.append(_jnp.minimum(F[j], cur))
+                cur = _jnp.maximum(F[j], cur)
+            out.append(cur)
+            return tuple(out), (st - a, ct - a)
+
+        _, (waits, lats) = _jax.lax.scan(step, F0, (At, St))
+        return waits, lats
+
+    @_functools.partial(_jax.jit,
+                        static_argnames=("impl", "c", "has_slo"))
+    def _jax_sweep(A, S, counts, slo, *, impl: str, c: int, has_slo: bool):
+        """Full device sweep: (B, N) grids in, per-cell statistics out.
+
+        Returns (mean_wait, mean_lat, compliance, lats) with lats (B, N)
+        zeroed at padding — the p95 order statistics stay on the host
+        (:func:`_p95_cells`), where an O(n) partition beats XLA's CPU
+        sort by an order of magnitude."""
+        At, St = A.T, S.T                      # (N, B): scan layout
+        if c == 1:
+            waits, lats = _jax_c1(At, St, impl)
+        else:
+            waits, lats = _jax_kw(At, St, c)
+        n_max = At.shape[0]
+        active = _jnp.arange(n_max)[:, None] < counts[None, :]
+        waits = _jnp.where(active, waits, 0.0)
+        lats = _jnp.where(active, lats, 0.0)
+        n_eff = _jnp.maximum(counts, 1).astype(At.dtype)
+        mean_wait = waits.sum(axis=0) / n_eff
+        mean_lat = lats.sum(axis=0) / n_eff
+        if has_slo:
+            ok = _jnp.sum((lats <= slo) & active, axis=0)
+            compliance = _jnp.where(counts > 0, ok / n_eff, 1.0)
+        else:
+            compliance = _jnp.ones(At.shape[1], At.dtype)
+        return mean_wait, mean_lat, compliance, lats.T
+
+
+def _p95_cells(lats: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Per-cell p95 with the repo-wide interpolation convention, via an
+    O(n) two-point partition instead of a full sort.  ``lats`` is (B, N)
+    with each cell's ``counts[b]`` latencies leading the row; partition
+    yields exactly the order statistics the numpy backend's sort-based
+    computation reads, so the backends agree bit-for-bit here whenever
+    the latency grids do."""
+    p95 = np.zeros(len(counts), dtype=float)
+    for b, n in enumerate(counts):
+        n = int(n)
+        if n == 0:
+            continue
+        pos = 0.95 * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        part = np.partition(lats[b, :n], (lo, hi))
+        p95[b] = part[lo] + (part[hi] - part[lo]) * (pos - lo)
+    return p95
+
+
+def _sweep_jax(A: np.ndarray, S: np.ndarray, cell_counts: np.ndarray,
+               c: int, slo_s: Optional[float], scan_impl: str):
+    """Host wrapper for the jax backend: scoped x64, device reductions,
+    host p95.  Inputs are the same (B, N_max) grids the numpy backend
+    consumes — the draws are shared, only the evaluation engine differs."""
+    from jax.experimental import enable_x64
+
+    impl = _resolve_scan_impl(scan_impl)
+    with enable_x64():
+        mean_wait, mean_lat, compliance, lats = _jax_sweep(
+            _jnp.asarray(A), _jnp.asarray(S), _jnp.asarray(cell_counts),
+            _jnp.asarray(float(slo_s) if slo_s is not None else 0.0),
+            impl=impl, c=c, has_slo=slo_s is not None)
+        lats_host = np.asarray(lats)
+        out = (np.asarray(mean_wait), np.asarray(mean_lat),
+               np.asarray(compliance))
+    return (*out, _p95_cells(lats_host, cell_counts))
 
 
 def simulate_batch(
@@ -541,9 +782,11 @@ def simulate_batch(
     replications: int = 1,
     slo_s: Optional[float] = None,
     seed: int = 0,
+    backend: str = "auto",
+    scan_impl: str = "auto",
 ) -> SweepResult:
     """Batched Lindley / Kiefer-Wolfowitz sweep: R replications x K configs
-    x L load patterns evaluated as numpy array ops, one result grid out.
+    x L load patterns evaluated as one array program, one result grid out.
 
     Parameters
     ----------
@@ -564,6 +807,21 @@ def simulate_batch(
     replications: independent stochastic repeats R.
     slo_s: latency SLO for the compliance grid (compliance is 1.0 where
         ``slo_s`` is None).
+    backend: ``"numpy"`` (authoritative reference), ``"jax"`` (same grids
+        evaluated on the accelerator; raises when jax is missing), or
+        ``"auto"`` (jax only for sweeps big enough to amortize dispatch —
+        see :func:`resolve_backend`).  Both backends consume *identical*
+        host-generated arrival/service draws; the jax grids agree with
+        numpy to float64 allclose (bit-for-bit for the default CPU
+        sequential scan), and the numpy c = 1 path stays bit-for-bit
+        against the event heap.
+    scan_impl: c = 1 time-scan choice for the jax backend — ``"auto"``
+        (sequential on CPU, associative on accelerators),
+        ``"sequential"`` (``lax.scan``, bit-exact vs numpy),
+        ``"associative"`` (max-plus ``lax.associative_scan``), or
+        ``"pallas"`` (``repro.kernels.lindley_scan`` blocked TPU kernel;
+        interpreter mode on CPU).  Ignored for c > 1, which always uses
+        the comparator-insertion ``lax.scan``, and by the numpy backend.
 
     Determinism: cell (r, k, l) depends only on ``seed``, the replication
     index r, and its coordinates' *inputs* (rate or trace content, config
@@ -595,6 +853,9 @@ def simulate_batch(
         raise ValueError("duration_s must be positive")
     if replications < 1 or num_servers < 1:
         raise ValueError("replications and num_servers must be >= 1")
+    if scan_impl not in _SCAN_IMPLS:
+        raise ValueError(f"unknown scan_impl {scan_impl!r} "
+                         f"(expected one of {_SCAN_IMPLS})")
     R, c = int(replications), int(num_servers)
 
     # -- per-(r, l) arrival traces ------------------------------------------
@@ -666,65 +927,72 @@ def simulate_batch(
                 else:
                     S[b, :n] = g.exponential(scale=means[k], size=n)
 
-    A = np.ascontiguousarray(A.T)      # (N, B)
-    S = np.ascontiguousarray(S.T)
-
-    # -- the vectorized recursion (sequential in i, batched over scenarios) -
-    waits = np.empty((n_max, B), dtype=float)
-    lats = np.empty((n_max, B), dtype=float)
-    if c == 1:
-        comp = np.zeros(B, dtype=float)
-        for i in range(n_max):
-            a = A[i]
-            st = np.maximum(a, comp)                # Lindley step
-            comp = st + S[i]
-            waits[i] = st - a
-            lats[i] = comp - a
+    chosen = resolve_backend(backend, num_servers=c, total_slots=B * n_max)
+    if chosen == "jax" and n_max > 0:
+        mean_wait, mean_lat, compliance, p95 = _sweep_jax(
+            A, S, cell_counts, c, slo_s, scan_impl)
     else:
-        # Kiefer-Wolfowitz sorted-workload form: each cell's service law is
-        # server-independent, so only the multiset of server free times
-        # matters — keep it sorted ascending, serve on the earliest-free
-        # (column 0), re-sort.  Identical waits to the event heap's
-        # lowest-free-id dispatch, without tracking server identities.
-        F = np.zeros((B, c), dtype=float)
-        for i in range(n_max):
-            a = A[i]
-            st = np.maximum(a, F[:, 0])
-            ct = st + S[i]
-            F[:, 0] = ct
-            F.sort(axis=1)
-            waits[i] = st - a
-            lats[i] = ct - a
+        A = np.ascontiguousarray(A.T)      # (N, B)
+        S = np.ascontiguousarray(S.T)
 
-    active = np.arange(n_max)[:, None] < cell_counts[None, :]   # (N, B)
-    if n_max > 0:
-        waits *= active
-        lats *= active
+        # -- the vectorized recursion (sequential in i, batched over
+        #    scenarios) --
+        waits = np.empty((n_max, B), dtype=float)
+        lats = np.empty((n_max, B), dtype=float)
+        if c == 1:
+            comp = np.zeros(B, dtype=float)
+            for i in range(n_max):
+                a = A[i]
+                st = np.maximum(a, comp)                # Lindley step
+                comp = st + S[i]
+                waits[i] = st - a
+                lats[i] = comp - a
+        else:
+            # Kiefer-Wolfowitz sorted-workload form: each cell's service
+            # law is server-independent, so only the multiset of server
+            # free times matters — keep it sorted ascending, serve on the
+            # earliest-free (column 0), re-sort.  Identical waits to the
+            # event heap's lowest-free-id dispatch, without tracking
+            # server identities.
+            F = np.zeros((B, c), dtype=float)
+            for i in range(n_max):
+                a = A[i]
+                st = np.maximum(a, F[:, 0])
+                ct = st + S[i]
+                F[:, 0] = ct
+                F.sort(axis=1)
+                waits[i] = st - a
+                lats[i] = ct - a
 
-    # -- per-cell statistics -------------------------------------------------
-    n_eff = np.maximum(cell_counts, 1).astype(float)
-    mean_wait = waits.sum(axis=0) / n_eff
-    mean_lat = lats.sum(axis=0) / n_eff
-    if slo_s is not None and n_max > 0:
-        ok = np.count_nonzero((lats <= slo_s) & active, axis=0)
-        compliance = np.where(cell_counts > 0, ok / n_eff, 1.0)
-    else:
-        compliance = np.ones(B, dtype=float)
+        active = np.arange(n_max)[:, None] < cell_counts[None, :]   # (N, B)
+        if n_max > 0:
+            waits *= active
+            lats *= active
 
-    # p95 with the repo-wide interpolation convention: sort each column (inf
-    # padding sinks to the tail), index pos = 0.95 * (n - 1).
-    p95 = np.zeros(B, dtype=float)
-    if n_max > 0:
-        padded = np.where(active, lats, np.inf)
-        srt = np.sort(padded, axis=0)
-        nz = cell_counts > 0
-        pos = 0.95 * (cell_counts[nz] - 1)
-        lo = pos.astype(np.int64)
-        hi = np.minimum(lo + 1, cell_counts[nz] - 1)
-        cols_nz = np.flatnonzero(nz)
-        xlo = srt[lo, cols_nz]
-        xhi = srt[hi, cols_nz]
-        p95[cols_nz] = xlo + (xhi - xlo) * (pos - lo)
+        # -- per-cell statistics --------------------------------------------
+        n_eff = np.maximum(cell_counts, 1).astype(float)
+        mean_wait = waits.sum(axis=0) / n_eff
+        mean_lat = lats.sum(axis=0) / n_eff
+        if slo_s is not None and n_max > 0:
+            ok = np.count_nonzero((lats <= slo_s) & active, axis=0)
+            compliance = np.where(cell_counts > 0, ok / n_eff, 1.0)
+        else:
+            compliance = np.ones(B, dtype=float)
+
+        # p95 with the repo-wide interpolation convention: sort each column
+        # (inf padding sinks to the tail), index pos = 0.95 * (n - 1).
+        p95 = np.zeros(B, dtype=float)
+        if n_max > 0:
+            padded = np.where(active, lats, np.inf)
+            srt = np.sort(padded, axis=0)
+            nz = cell_counts > 0
+            pos = 0.95 * (cell_counts[nz] - 1)
+            lo = pos.astype(np.int64)
+            hi = np.minimum(lo + 1, cell_counts[nz] - 1)
+            cols_nz = np.flatnonzero(nz)
+            xlo = srt[lo, cols_nz]
+            xhi = srt[hi, cols_nz]
+            p95[cols_nz] = xlo + (xhi - xlo) * (pos - lo)
 
     shape = (R, K, L)
     return SweepResult(

@@ -92,6 +92,18 @@ def test_multi_server_smoke_gate_exits_zero():
     assert "FAILED" not in proc.stdout      # no acceptance check tripped
 
 
+def test_trace_replay_smoke_gate_exits_zero():
+    """The million-user replay pipeline at its ~1e5-request smoke setting:
+    trace generation, streaming mix replay and the Planner validation all
+    run end to end, on the streaming engines (no event-heap fallback) and
+    with no acceptance marker tripped."""
+    proc = _run_gate("--smoke", "trace_replay")
+    assert proc.returncode == 0, proc.stderr
+    assert "trace_replay," in proc.stdout
+    assert "engine=closed_form" in proc.stdout
+    assert "FAILED" not in proc.stdout
+
+
 def test_check_docs_gate_exits_zero():
     proc = _run_gate("--check-docs")
     assert proc.returncode == 0, proc.stdout + proc.stderr

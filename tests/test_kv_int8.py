@@ -37,8 +37,42 @@ def test_quantize_handles_zeros():
     assert np.all(np.asarray(back) == 0)
 
 
-@pytest.mark.parametrize("arch", ["internlm2-1.8b", "stablelm-3b", "hymba-1.5b"])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "internlm2-1.8b",
+        pytest.param(
+            "stablelm-3b",
+            marks=pytest.mark.xfail(
+                strict=False,
+                reason="random-init tied top-2 attention scores: decode "
+                "logits are discontinuous in K for this config; see "
+                "test_stablelm_decode_ill_conditioned_reproducer",
+            ),
+        ),
+        "hymba-1.5b",
+    ],
+)
 def test_decode_matches_fp_cache(arch):
+    """Diagnosis of the stablelm-3b xfail (rel ~ 0.53 vs the 0.05 bound):
+
+    Under the random-init reduced configs the pre-softmax attention scores
+    are enormous (|score| ~ 4e3 at fp32, against a softmax scale of 1), so
+    every decode head is numerically one-hot: the output is the value row
+    of the single winning key.  For stablelm-3b — the only full-MHA config
+    in this sweep — one decode head's top-2 key scores are EXACTLY tied at
+    bf16 resolution (internlm2's smallest gap is 64).  Any perturbation of
+    the cached K breaks the tie arbitrarily, so that head attends a
+    completely different value row and the final logits move by O(1).
+
+    The int8 path itself is structurally exact: replacing the
+    quantize/dequantize pair with an identity passthrough reproduces the
+    fp logits bit-for-bit, and Gaussian K noise at 0.2% of row absmax —
+    a quarter of int8's own worst-case rounding error (1/254 ~ 0.4%) —
+    already produces the same O(0.5) relative logit error with no
+    quantization involved (see the reproducer test below).  The failure is
+    a property of this arch/seed's degenerate random-init attention, not
+    of the quantized cache."""
     cfg = reduced_config(arch)
     cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
     m, m8 = build_model(cfg), build_model(cfg8)
@@ -66,6 +100,94 @@ def test_decode_matches_fp_cache(arch):
     # high agreement of the full logit vector, not just its max
     corr = np.corrcoef(a.reshape(-1), b.reshape(-1))[0, 1]
     assert corr > 0.999, corr
+
+
+def _prefill_decode_logits(cfg, monkey_quantize=None, monkey_dequantize=None):
+    """One prefill + one greedy decode step; optionally with the module's
+    quantize/dequantize pair replaced (restored afterwards)."""
+    import repro.models.attention as att
+
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    m, m8 = build_model(cfg), build_model(cfg8)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    orig = (att._quantize_kv, att._dequantize_kv)
+    if monkey_quantize is not None:
+        att._quantize_kv = monkey_quantize
+    if monkey_dequantize is not None:
+        att._dequantize_kv = monkey_dequantize
+    try:
+        last, st = m.prefill(params, batch, cache_len=S + 8)
+        last8, st8 = m8.prefill(params, batch, cache_len=S + 8)
+        tok = jnp.argmax(last, -1).astype(jnp.int32)
+        l1, _ = m.decode_step(params, st, tok)
+        l2, _ = m8.decode_step(params, st8, tok)
+    finally:
+        att._quantize_kv, att._dequantize_kv = orig
+    a = np.asarray(l1, np.float32)
+    b = np.asarray(l2, np.float32)
+    return a, b, np.abs(a - b).max() / max(np.abs(a).max(), 1e-9)
+
+
+def test_stablelm_decode_ill_conditioned_reproducer():
+    """Minimal reproducer for the stablelm-3b xfail above.
+
+    Two claims, each isolating one side of the failure:
+
+    1. The int8 cache path is structurally exact: with the
+       quantize/dequantize pair replaced by a lossless passthrough
+       (identity values, unit scales) the "quantized" model reproduces the
+       fp decode logits bit-for-bit.  Every cache index, update slice and
+       attention mask in the int8 path is therefore correct — the rel=0.53
+       failure cannot be a plumbing bug.
+
+    2. The config itself is ill-conditioned: additive Gaussian noise on the
+       cached K at 0.2% of each row's absmax — a quarter of int8's
+       worst-case rounding error of 1/254 per row — already moves the
+       decode logits past the 5% tolerance the accuracy test uses, with no
+       quantization anywhere.  One decode head's top-2 key scores are
+       exactly tied at bf16 resolution while softmax runs fully saturated
+       (|score| ~ 4e3), so the logits are a discontinuous function of K
+       and ANY sub-percent cache perturbation can flip them by O(1).
+    """
+    cfg = reduced_config("stablelm-3b")
+
+    # -- claim 1: passthrough quantizer => bit-exact decode ---------------
+    def pass_q(x):
+        return x.astype(jnp.float32), jnp.ones(x.shape[:-1], jnp.float32)
+
+    def pass_d(q, s, dtype):
+        del s
+        return q.astype(dtype)
+
+    a, b, rel = _prefill_decode_logits(cfg, pass_q, pass_d)
+    assert np.array_equal(a, b), f"int8 plumbing not exact: rel={rel}"
+
+    # -- claim 2: K noise far below the int8 bound flips the logits -------
+    EPS = 0.002  # 0.2% of row absmax; int8's own bound is 1/254 ~ 0.4%
+    worst = 0.0
+    for noise_seed in (7, 8, 9):
+        calls = {"n": 0}
+
+        def noisy_q(x):
+            i = calls["n"]
+            calls["n"] += 1
+            if i % 2 == 0:  # K is quantized before V at every call site
+                sub = jax.random.PRNGKey(1000 * noise_seed + i)
+                absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+                x = x + EPS * absmax * jax.random.normal(sub, x.shape)
+            return x.astype(jnp.float32), jnp.ones(x.shape[:-1], jnp.float32)
+
+        _, _, rel = _prefill_decode_logits(cfg, noisy_q, pass_d)
+        worst = max(worst, rel)
+        if worst > 0.05:
+            break
+    assert worst > 0.05, (
+        f"expected tiny K noise to exceed the 5% decode tolerance on the "
+        f"degenerate stablelm-3b config, got rel={worst}"
+    )
 
 
 def test_int8_cache_storage_is_half():

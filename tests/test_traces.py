@@ -1,0 +1,339 @@
+"""Chunked trace generation + streaming replay (repro/serving/traces.py).
+
+The contract:
+
+1. **Traces are values**: a trace is its parameter tuple — same seed and
+   shape give byte-identical chunk streams and the same content
+   fingerprint; chunks come out sorted, in-range, and with the Poisson
+   count the rate integral predicts.
+2. **Chunk engines carry exact state**: splitting a workload across chunk
+   boundaries (the whole point of streaming) reproduces the unsplit
+   recursion — bit-for-bit for the sequential engines, allclose for the
+   reassociated closed form — and the closed form matches a naive
+   per-request Lindley loop.
+3. **Replay is pure per lane**: a ladder lane's service stream is keyed by
+   its config fingerprint, not its position, so replaying a config alone
+   equals replaying it inside any mix.
+4. **The quantile sketch is bounded**: ``quantile(q)`` brackets the exact
+   ``ceil(q n)``-rank order statistic from above by at most one bin width,
+   through any number of range doublings.
+5. **Memory stays O(chunk)**: a 1e7-request replay allocates a small
+   constant multiple of the chunk size, never the full trace (the
+   regression test pins the peak).
+"""
+
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.serving import traces as tr
+from repro.serving.fastsim import jax_available, jax_unavailable_reason
+from repro.serving.traces import (
+    StreamingQuantile,
+    bursty_mmpp_trace,
+    diurnal_trace,
+    flash_crowd_trace,
+    replay_mix,
+    replay_trace,
+)
+
+needs_jax = pytest.mark.skipif(
+    not jax_available(),
+    reason=f"jax not importable: {jax_unavailable_reason()}")
+
+
+def _all_arrivals(trace):
+    chunks = list(trace.chunks())
+    return np.concatenate(chunks) if chunks else np.empty(0)
+
+
+# --------------------------------------------------------------------------
+# 1. trace generation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make", [
+    lambda seed: diurnal_trace(40.0, duration_s=3600.0, seed=seed,
+                               window_s=300.0),
+    lambda seed: flash_crowd_trace(20.0, peak_factor=5.0,
+                                   crowd_start_s=600.0, ramp_s=30.0,
+                                   hold_s=120.0, duration_s=1800.0,
+                                   seed=seed, window_s=300.0),
+    lambda seed: bursty_mmpp_trace(25.0, burst_factor=3.0,
+                                   duration_s=1800.0, seed=seed,
+                                   window_s=300.0),
+])
+def test_trace_deterministic_sorted_in_range(make):
+    t1, t2, t_other = make(5), make(5), make(6)
+    a1, a2, a3 = _all_arrivals(t1), _all_arrivals(t2), _all_arrivals(t_other)
+    np.testing.assert_array_equal(a1, a2)
+    assert t1.fingerprint == t2.fingerprint
+    assert t1.fingerprint != t_other.fingerprint
+    assert a1.size != a3.size or not np.array_equal(a1, a3)
+    assert np.all(np.diff(a1) >= 0.0)
+    assert a1.size == 0 or (a1[0] >= 0.0 and a1[-1] < t1.duration_s)
+
+
+def test_diurnal_count_matches_rate_integral():
+    """The sinusoid integrates to base_qps x duration over whole periods;
+    the thinned-Poisson count must sit within 5 sigma of it."""
+    base, dur = 50.0, 4 * 86400.0
+    trace = diurnal_trace(base, amplitude=0.8, duration_s=dur, seed=3)
+    n = sum(c.size for c in trace.chunks())
+    expected = base * dur
+    assert abs(n - expected) < 5.0 * np.sqrt(expected)
+
+
+def test_mmpp_mean_rate_between_base_and_burst():
+    base, factor, dur = 30.0, 4.0, 6 * 3600.0
+    trace = bursty_mmpp_trace(base, burst_factor=factor, duration_s=dur,
+                              seed=9)
+    n = sum(c.size for c in trace.chunks())
+    assert base * dur * 0.8 < n < base * factor * dur
+
+
+def test_window_schedule_is_part_of_trace_identity():
+    a = diurnal_trace(40.0, duration_s=3600.0, seed=1, window_s=300.0)
+    b = diurnal_trace(40.0, duration_s=3600.0, seed=1, window_s=600.0)
+    assert a.fingerprint != b.fingerprint
+
+
+# --------------------------------------------------------------------------
+# 2. chunk engines: carried state and oracles
+# --------------------------------------------------------------------------
+
+
+def _rand_workload(seed, n=400, K=3):
+    rng = np.random.default_rng(seed)
+    A = np.sort(rng.uniform(0.0, n / 8.0, size=n))
+    S = rng.lognormal(mean=-2.0, sigma=0.6, size=(n, K))
+    return A, S
+
+
+def test_closed_form_matches_sequential_lindley():
+    A, S = _rand_workload(0)
+    comp0 = np.array([0.0, 0.7, 2.5])
+    waits, lats, carry = tr._chunk_closed_form(A, S, comp0.copy())
+    comp = comp0.copy()
+    for i in range(A.size):
+        start = np.maximum(A[i], comp)
+        comp = start + S[i]
+        np.testing.assert_allclose(start - A[i], waits[i], rtol=1e-12,
+                                   atol=1e-12)
+        np.testing.assert_allclose(comp - A[i], lats[i], rtol=1e-12)
+    np.testing.assert_allclose(comp, carry, rtol=1e-12)
+
+
+def test_closed_form_chunk_split_invariance():
+    A, S = _rand_workload(1)
+    comp0 = np.zeros(S.shape[1])
+    w_full, l_full, c_full = tr._chunk_closed_form(A, S, comp0.copy())
+    cut = 157
+    w1, l1, mid = tr._chunk_closed_form(A[:cut], S[:cut], comp0.copy())
+    w2, l2, c_split = tr._chunk_closed_form(A[cut:], S[cut:], mid)
+    np.testing.assert_allclose(np.vstack([w1, w2]), w_full, atol=1e-12)
+    np.testing.assert_allclose(np.vstack([l1, l2]), l_full, rtol=1e-12)
+    np.testing.assert_allclose(c_split, c_full, rtol=1e-12)
+
+
+def test_loop_kw_chunk_split_bit_exact():
+    """The c > 1 loop carries the sorted workload matrix in place: chunk
+    boundaries don't even change the op order, so splits are bit-exact."""
+    A, S = _rand_workload(2, n=300)
+    c = 3
+    F_full = np.zeros((S.shape[1], c))
+    w_full, l_full = tr._chunk_loop_kw(A, S, F_full)
+    F_split = np.zeros((S.shape[1], c))
+    cut = 101
+    w1, l1 = tr._chunk_loop_kw(A[:cut], S[:cut], F_split)
+    w2, l2 = tr._chunk_loop_kw(A[cut:], S[cut:], F_split)
+    np.testing.assert_array_equal(np.vstack([w1, w2]), w_full)
+    np.testing.assert_array_equal(np.vstack([l1, l2]), l_full)
+    np.testing.assert_array_equal(F_split, F_full)
+
+
+def test_loop_kw_c1_reduces_to_lindley():
+    A, S = _rand_workload(3, n=200, K=2)
+    F = np.zeros((2, 1))
+    waits, lats = tr._chunk_loop_kw(A, S, F)
+    w_ref, l_ref, _ = tr._chunk_closed_form(A, S, np.zeros(2))
+    np.testing.assert_allclose(waits, w_ref, atol=1e-12)
+    np.testing.assert_allclose(lats, l_ref, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# 3. replay purity and engine parity
+# --------------------------------------------------------------------------
+
+
+def _small_trace(seed=7):
+    return diurnal_trace(30.0, duration_s=1800.0, seed=seed, window_s=300.0)
+
+
+MEANS = [0.02, 0.05, 0.11]
+P95S = [0.028, 0.07, 0.15]
+
+
+def test_replay_deterministic():
+    a = replay_mix(_small_trace(), MEANS, P95S, slo_s=0.5, seed=3)
+    b = replay_mix(_small_trace(), MEANS, P95S, slo_s=0.5, seed=3)
+    assert a == b
+
+
+def test_replay_lane_independence():
+    """A lane's service stream is keyed (seed, config, trace), not by its
+    position in the ladder: replaying config k alone reproduces its mix
+    statistics: compliance, max and count exactly; the means to numpy's
+    pairwise-summation blocking noise (a (n, K) column and a (n, 1) array
+    sum in different groupings); the p95s to their sketch resolutions (the
+    sketch range depends on the ladder's max mean)."""
+    trace = _small_trace()
+    mix = replay_mix(trace, MEANS, P95S, slo_s=0.5, seed=3)
+    for k, (m, p) in enumerate(zip(MEANS, P95S)):
+        solo = replay_trace(trace, m, p, slo_s=0.5, seed=3)
+        np.testing.assert_allclose(solo.mean_wait_s, mix[k].mean_wait_s,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(solo.mean_latency_s,
+                                   mix[k].mean_latency_s, rtol=1e-12)
+        assert solo.slo_compliance == mix[k].slo_compliance
+        assert solo.max_latency_s == mix[k].max_latency_s
+        assert abs(solo.p95_latency_s - mix[k].p95_latency_s) <= (
+            solo.p95_resolution_s + mix[k].p95_resolution_s)
+
+
+def test_resolve_replay_engine_mapping(monkeypatch):
+    resolve = tr._resolve_replay_engine
+    assert resolve("auto", 1) == "closed_form"
+    assert resolve("numpy", 1) == "closed_form"
+    assert resolve("numpy", 4) == "loop"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve("cuda", 1)
+    if jax_available():
+        assert resolve("jax", 1) == "jax"
+        assert resolve("auto", 4) == "jax"
+        with pytest.raises(ValueError, match="num_servers"):
+            resolve("jax", 64)
+    monkeypatch.setattr(tr, "jax_available", lambda: False)
+    monkeypatch.setattr(tr, "jax_unavailable_reason",
+                        lambda: "No module named 'jax'")
+    assert resolve("auto", 4) == "loop"
+    with pytest.raises(RuntimeError, match="not importable"):
+        resolve("jax", 1)
+
+
+@needs_jax
+def test_replay_jax_engine_matches_numpy_c1():
+    """Explicit jax replay vs the closed form: same host-drawn services,
+    sequential scan vs reassociated prefix — tight allclose."""
+    trace = _small_trace()
+    np_stats = replay_trace(trace, 0.02, 0.028, slo_s=0.5, seed=1)
+    jx_stats = replay_trace(trace, 0.02, 0.028, slo_s=0.5, seed=1,
+                            backend="jax")
+    assert np_stats.engine == "closed_form" and jx_stats.engine == "jax"
+    assert np_stats.num_requests == jx_stats.num_requests
+    np.testing.assert_allclose(np_stats.mean_wait_s, jx_stats.mean_wait_s,
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np_stats.mean_latency_s,
+                               jx_stats.mean_latency_s, rtol=1e-9)
+    np.testing.assert_allclose(np_stats.max_latency_s,
+                               jx_stats.max_latency_s, rtol=1e-9)
+    assert abs(np_stats.p95_latency_s - jx_stats.p95_latency_s) <= (
+        np_stats.p95_resolution_s + jx_stats.p95_resolution_s)
+
+
+@needs_jax
+def test_replay_jax_engine_matches_loop_multiserver():
+    """c = 3: the jitted comparator scan against the numpy KW loop.  Same
+    op order on the same draws — the multiserver stats agree to float
+    noise."""
+    trace = _small_trace(seed=8)
+    np_stats = replay_trace(trace, 0.08, 0.11, num_servers=3, slo_s=0.5,
+                            seed=2, backend="numpy")
+    jx_stats = replay_trace(trace, 0.08, 0.11, num_servers=3, slo_s=0.5,
+                            seed=2, backend="jax")
+    assert np_stats.engine == "loop" and jx_stats.engine == "jax"
+    assert np_stats.num_requests == jx_stats.num_requests
+    np.testing.assert_allclose(np_stats.mean_wait_s, jx_stats.mean_wait_s,
+                               rtol=1e-12, atol=1e-15)
+    np.testing.assert_allclose(np_stats.mean_latency_s,
+                               jx_stats.mean_latency_s, rtol=1e-12)
+    assert np_stats.slo_compliance == jx_stats.slo_compliance
+    np.testing.assert_allclose(np_stats.max_latency_s,
+                               jx_stats.max_latency_s, rtol=1e-12)
+
+
+def test_replay_validates_inputs():
+    trace = _small_trace()
+    with pytest.raises(ValueError, match="non-empty"):
+        replay_mix(trace, [])
+    with pytest.raises(ValueError, match="positive"):
+        replay_mix(trace, [0.0])
+    with pytest.raises(ValueError, match="match"):
+        replay_mix(trace, [0.1, 0.2], [0.15])
+    with pytest.raises(ValueError, match="num_servers"):
+        replay_mix(trace, [0.1], num_servers=0)
+
+
+# --------------------------------------------------------------------------
+# 4. streaming quantile sketch
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+def test_streaming_quantile_brackets_order_statistic(q):
+    """quantile(q) returns the upper edge of the bin holding the
+    ceil(q n)-rank order statistic: stat <= sketch <= stat + resolution."""
+    rng = np.random.default_rng(11)
+    values = rng.lognormal(mean=-1.0, sigma=0.9, size=20_000)
+    sk = StreamingQuantile(num_bins=4096, initial_max=1.0)
+    for lo in range(0, values.size, 3000):
+        sk.update(values[lo:lo + 3000])
+    exact = np.sort(values)[int(np.ceil(q * values.size)) - 1]
+    got = sk.quantile(q)
+    assert exact <= got <= exact + sk.resolution + 1e-12
+
+
+def test_streaming_quantile_survives_range_doublings():
+    """Values far past initial_max force repeated pair-merge rebinnings;
+    the bracket bound must hold through all of them."""
+    rng = np.random.default_rng(12)
+    values = np.concatenate([
+        rng.uniform(0.0, 1.0, size=5000),
+        rng.uniform(50.0, 400.0, size=5000),   # >> initial_max=1.0
+    ])
+    rng.shuffle(values)
+    sk = StreamingQuantile(num_bins=2048, initial_max=1.0)
+    sk.update(values)
+    assert sk.count == values.size
+    for q in (0.25, 0.9, 0.99):
+        exact = np.sort(values)[int(np.ceil(q * values.size)) - 1]
+        got = sk.quantile(q)
+        assert exact <= got <= exact + sk.resolution + 1e-9
+
+
+# --------------------------------------------------------------------------
+# 5. memory: O(chunk), never O(trace)
+# --------------------------------------------------------------------------
+
+
+def test_replay_1e7_requests_peak_allocation_bounded():
+    """Regression pin for the streaming claim: a 1e7-request diurnal cell
+    replays with peak traced allocation well under the ~80 MB a single
+    materialized float64 arrival array would need (measured ~35 MB:
+    a few chunk-sized arrays).  If someone accidentally materializes the
+    trace, this trips at 10x."""
+    base = 2500.0
+    n_target = 1.0e7
+    trace = diurnal_trace(base, amplitude=0.6,
+                          duration_s=n_target / base, seed=21)
+    tracemalloc.start()
+    try:
+        stats = replay_trace(trace, 0.9 / base, 1.25 / base, slo_s=0.02,
+                             seed=4)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    assert stats.num_requests >= 1e7
+    assert stats.engine == "closed_form"
+    assert peak < 150 * 1024 * 1024, f"peak={peak / 1e6:.1f} MB"
