@@ -1,0 +1,261 @@
+"""Workflow-DAG serving: the RAG pipeline as a 3-stage tandem scenario.
+
+The rest of the benchmark suite serves the RAG workflow as one opaque
+service time; this benchmark serves it as the compound pipeline it is —
+retrieve -> rerank -> generate, each stage with its own config ladder,
+worker, and FIFO queue (:mod:`repro.serving.dag`):
+
+- **Network model** (validation): every pipeline rung is replayed across
+  a load grid via the chained-Lindley fast path
+  (:meth:`repro.core.planner.Planner.validate_pipeline`) and compared
+  against the stationary queueing-network prediction — per-stage
+  Allen-Cunneen waits with departure-SCV propagation
+  (:func:`repro.serving.dag.pipeline_sojourn`).
+- **Pipeline switching under diurnal load** (the headline): the
+  pipeline-level Elastico controller — per-stage queue depths collapsed
+  to bottleneck-equivalent units, thresholds from
+  :func:`repro.serving.dag.derive_pipeline_policies` — against the two
+  static baselines on the same diurnal trace, on the event-heap
+  :class:`repro.serving.dag.DagSimulator`.  Acceptance: dynamic beats
+  static-accurate on SLO compliance and static-fast on accuracy.
+- **Fork-join**: two parallel retrieve branches joining at rerank; the
+  synchronization penalty (``E[max]`` of the branch sojourns, harmonic
+  growth) measured against :func:`repro.core.aqm.fork_join_sojourn`.
+
+Writes ``experiments/dag_bench.json`` (full) /
+``experiments/dag_bench_smoke.json`` (smoke; stable-scrubbed so the
+tier-1 subprocess gate's rerun is diff-clean).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.elastico import ElasticoController
+from repro.core.planner import Planner
+from repro.serving.dag import (
+    DagSimulator,
+    StageSpec,
+    WorkflowDAG,
+    derive_pipeline_policies,
+    fork_join_sojourn,
+    pipeline_sojourn,
+)
+from repro.serving.workload import diurnal_pattern, generate_arrivals
+from repro.workflows.surrogate import RagSurrogate
+
+from .common import RAG_BUDGET, Timer, make_profiler, save_json, search
+from .fastsim_bench import run_metadata
+
+TAU = 0.75          # relative-accuracy floor (table1/fig7 setting)
+SLO_S = 1.0         # 1000 ms end-to-end p95, the paper's serving SLO
+PERIOD_S = 300.0    # compressed diurnal cycle for the event-heap runs
+AMPLITUDE = 0.8
+_Z95 = 1.6448536269514722
+
+STAGE_ORDER = ("retrieve", "rerank", "generate")
+
+
+def _p95_from_cv(mean: float, cv: float) -> float:
+    """p95 of the lognormal with the given mean and coefficient of
+    variation — the tail model the surrogate profiler samples from."""
+    sigma = math.sqrt(math.log(1.0 + cv * cv))
+    return mean * math.exp(_Z95 * sigma - sigma * sigma / 2.0)
+
+
+def build_pipeline():
+    """The RAG plan's admitted ladder, decomposed into its 3 stages.
+
+    The single-stage planner picks the rungs (Pareto + SLO admission,
+    exactly as every other benchmark plans RAG); each rung's config is
+    then split via :meth:`repro.workflows.surrogate.RagSurrogate.stage_latencies_s`
+    into per-stage mean ladders, so pipeline rung r == plan rung r by
+    construction (the diagonal rung walk).  Rung accuracy rides on the
+    generate stage — retrieval quality already feeds the surrogate's
+    end-to-end accuracy model, and the pipeline product must reproduce
+    the plan's per-rung accuracy exactly."""
+    sur = RagSurrogate()
+    res = search(sur, TAU, RAG_BUDGET)
+    planner = Planner(profiler=make_profiler(sur))
+    plan = planner.plan(res.feasible, slo_p95_s=SLO_S)
+    cv = sur.latency_cv(plan.table.policies[0].point.config)
+    stage_means = {name: [] for name in STAGE_ORDER}
+    accs = []
+    for pol in plan.table.policies:
+        parts = sur.stage_latencies_s(pol.point.config)
+        for name in STAGE_ORDER:
+            stage_means[name].append(parts[name])
+        accs.append(pol.point.accuracy)
+    stages = [
+        StageSpec(
+            name=name,
+            mean_s=tuple(stage_means[name]),
+            p95_s=tuple(_p95_from_cv(m, cv) for m in stage_means[name]),
+            accuracy=(tuple(accs) if name == "generate"
+                      else (1.0,) * len(accs)),
+        )
+        for name in STAGE_ORDER
+    ]
+    dag = WorkflowDAG.tandem(stages)
+    rungs = [(r,) * len(STAGE_ORDER) for r in range(len(accs))]
+    table = derive_pipeline_policies(dag, slo_p95_s=SLO_S, rungs=rungs)
+    return sur, planner, dag, table
+
+
+def _capacity(dag, pol):
+    """Bottleneck drain rate c_b / s_b of one pipeline rung — the load
+    the diurnal peak is calibrated against: the peak must saturate the
+    slowest rung's bottleneck (static-accurate sheds SLO) while staying
+    below ~85% of the fastest rung's capacity (the switching ladder can
+    always escape)."""
+    b = pol.bottleneck_stage
+    return dag.stages[b].num_servers / dag.stages[b].mean_s[pol.stage_indices[b]]
+
+
+def _serve_metrics(result):
+    return {
+        "completed": result.num_completed,
+        "slo_compliance": result.slo_compliance(SLO_S),
+        "mean_accuracy": result.mean_pipeline_accuracy(),
+        "p95_latency_s": result.p95_latency(),
+        "mean_wait_s": result.mean_wait(),
+        "switches": len(result.switch_events),
+    }
+
+
+def _run(*, periods: int, replications: int, validate_duration_s: float,
+         artifact: str, stable: bool) -> dict:
+    sur, planner, dag, table = build_pipeline()
+    with Timer() as t:
+        # -- part 1: queueing-network model vs chained-recursion sweep ---
+        from repro.serving.dag import PipelinePlan
+
+        plan = PipelinePlan(dag=dag, table=table)
+        val = planner.validate_pipeline(
+            plan, load_fractions=(0.4, 0.6, 0.75),
+            duration_s=validate_duration_s, replications=replications,
+            seed=0)
+        model_err = val.sojourn_model_error()
+
+        # -- part 2: pipeline switching vs static baselines --------------
+        cap_fast = _capacity(dag, table.policies[0])
+        cap_slow = _capacity(dag, table.policies[-1])
+        peak = min(1.35 * cap_slow, 0.85 * cap_fast)
+        base = peak / (1.0 + AMPLITUDE)
+        duration = periods * PERIOD_S
+        pattern = diurnal_pattern(base, period_s=PERIOD_S,
+                                  amplitude=AMPLITUDE)
+        arrivals = generate_arrivals(pattern, duration, seed=21)
+
+        def serve(controller, static_rung=0):
+            sim = DagSimulator(
+                dag,
+                controller=controller,
+                static_rung=static_rung,
+                rungs=[pol.stage_indices for pol in table.policies],
+                seed=17,
+            )
+            return _serve_metrics(sim.run(arrivals, duration))
+
+        dynamic = serve(ElasticoController(table))
+        static_fast = serve(None, static_rung=0)
+        static_acc = serve(None, static_rung=table.ladder_size - 1)
+
+        # -- part 3: fork-join synchronization penalty -------------------
+        ret = dag.stages[0]
+        fj = WorkflowDAG.fork_join(
+            [StageSpec("ret_a", ret.mean_s, ret.p95_s),
+             StageSpec("ret_b", ret.mean_s, ret.p95_s)],
+            dag.stages[1],
+            tail=[dag.stages[2]])
+        fj_cfg = tuple(table.policies[0].stage_indices[j]
+                       for j in (0, 0, 1, 2))
+        fj_rate = 0.5 * cap_fast
+        fj_arr = generate_arrivals(lambda _t: fj_rate, duration / 2.0,
+                                   seed=23)
+        fj_sim = DagSimulator(fj, static_stage_indices=fj_cfg, seed=29)
+        fj_res = fj_sim.run(fj_arr, duration / 2.0)
+        fj_pred = pipeline_sojourn(fj, fj_cfg, fj_rate)
+        fj_sim_mean = (sum(r.latency_s for r in fj_res.completed)
+                       / max(len(fj_res.completed), 1))
+        branch_mean = ret.mean_s[fj_cfg[0]]
+        sync_penalty = fork_join_sojourn([branch_mean, branch_mean]) / branch_mean
+
+    ok = (dynamic["slo_compliance"] > static_acc["slo_compliance"]
+          and dynamic["mean_accuracy"] > static_fast["mean_accuracy"])
+    payload = {
+        "metadata": run_metadata(),
+        "pipeline": {
+            "stages": [s.name for s in dag.stages],
+            "rungs": table.ladder_size,
+            "slo_s": SLO_S,
+            "ladder": [
+                {
+                    "stage_indices": list(pol.stage_indices),
+                    "mean_latency_s": pol.mean_latency_s,
+                    "p95_latency_s": pol.p95_latency_s,
+                    "accuracy": pol.accuracy,
+                    "bottleneck": dag.stages[pol.bottleneck_stage].name,
+                    "upscale_threshold": pol.upscale_threshold,
+                    "downscale_threshold": pol.downscale_threshold,
+                }
+                for pol in table.policies
+            ],
+        },
+        "network_model": {
+            "arrival_rates_qps": list(val.arrival_rates_qps),
+            "replications": val.replications,
+            "num_requests": val.num_requests,
+            "sojourn_max_rel_err": model_err,
+        },
+        "diurnal": {
+            "base_qps": base,
+            "peak_qps": peak,
+            "period_s": PERIOD_S,
+            "duration_s": duration,
+            "requests": len(arrivals),
+            "dynamic": dynamic,
+            "static_fast": static_fast,
+            "static_accurate": static_acc,
+            "acceptance_ok": ok,
+        },
+        "fork_join": {
+            "rate_qps": fj_rate,
+            "requests": len(fj_res.completed),
+            "sim_mean_sojourn_s": fj_sim_mean,
+            "model_mean_sojourn_s": fj_pred,
+            "sync_penalty": sync_penalty,
+        },
+    }
+    save_json(artifact, payload, stable=stable)
+    return {
+        "name": "dag_bench",
+        "us_per_call": t.elapsed * 1e6,
+        "derived": (
+            f"pipeline={len(dag.stages)}stages/{table.ladder_size}rungs "
+            f"model_err={model_err:.3f} "
+            f"dyn_comp={dynamic['slo_compliance']:.4f} "
+            f"acc_comp={static_acc['slo_compliance']:.4f} "
+            f"dyn_acc={dynamic['mean_accuracy']:.4f} "
+            f"fast_acc={static_fast['mean_accuracy']:.4f} "
+            f"switches={dynamic['switches']} "
+            f"fj_penalty={sync_penalty:.2f}x"
+            + ("" if ok else " [pipeline switching acceptance FAILED]")
+        ),
+    }
+
+
+def run() -> dict:
+    return _run(periods=12, replications=4, validate_duration_s=300.0,
+                artifact="dag_bench.json", stable=False)
+
+
+def run_smoke() -> dict:
+    """Three diurnal cycles and a short validation grid — same code paths,
+    separate stable-scrubbed artifact so the tier-1 gate is diff-clean."""
+    return _run(periods=3, replications=2, validate_duration_s=90.0,
+                artifact="dag_bench_smoke.json", stable=True)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -30,6 +30,7 @@ import traceback
 
 from . import (
     cost_objective,
+    dag_bench,
     fastsim_bench,
     fig1_pareto,
     predictive_ablation,
@@ -62,6 +63,7 @@ MODULES = {
     "roofline_table": roofline_table,
     "fastsim_bench": fastsim_bench,
     "trace_replay": trace_replay_bench,
+    "dag_bench": dag_bench,
 }
 
 BENCHES = {name: mod.run for name, mod in MODULES.items()}

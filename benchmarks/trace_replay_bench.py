@@ -89,7 +89,8 @@ def _replay_section(trace, means, p95s, *, seed: int) -> dict:
     }
 
 
-def _run(*, target_requests: float, artifact: str) -> dict:
+def _run(*, target_requests: float, artifact: str,
+         stable: bool = False) -> dict:
     sur, planner, plan = build_plan()
     means, p95s = _ladder_stats(plan)
     cap = 1.0 / means[0]                     # fastest rung's drain rate
@@ -140,7 +141,7 @@ def _run(*, target_requests: float, artifact: str) -> dict:
             "wait_model_max_rel_err": validation.wait_model_error(),
         },
     }
-    save_json(artifact, payload)
+    save_json(artifact, payload, stable=stable)
     d = sections["diurnal"]
     ok = d["requests"] >= 1e7
     return {
@@ -164,8 +165,11 @@ def run() -> dict:
 
 def run_smoke() -> dict:
     """Same pipeline at ~1e5 requests (a few simulated hours); separate
-    artifact so the smoke gate never overwrites the full-run evidence."""
-    return _run(target_requests=1e5, artifact="trace_replay_smoke.json")
+    artifact so the smoke gate never overwrites the full-run evidence.
+    ``stable=True``: the smoke artifact is scrubbed of wall-clock and
+    host-dependent keys, so the tier-1 gate's rerun is diff-clean."""
+    return _run(target_requests=1e5, artifact="trace_replay_smoke.json",
+                stable=True)
 
 
 if __name__ == "__main__":

@@ -454,6 +454,134 @@ def allen_cunneen_mean_wait(num_servers: int, arrival_rate_qps: float,
     return 0.5 * (scv_arrival + scv_service) * base
 
 
+# -- queueing networks: tandem stages and fork-join (workflow DAGs) -----------
+
+
+def departure_scv(num_servers: int, utilization: float, *,
+                  scv_arrival: float = 1.0,
+                  scv_service: float = 1.0) -> float:
+    """SCV of the departure (inter-departure-time) process of a G/G/c stage.
+
+    Whitt's QNA stationary-interval approximation:
+
+      C_d^2 = 1 + (1 - rho^2) (C_a^2 - 1) + (rho^2 / sqrt(c)) (C_s^2 - 1)
+
+    This is what lets tandem stages chain: stage n's departures are stage
+    n+1's arrivals, so C_d^2 of stage n is the ``scv_arrival`` fed to
+    stage n+1's :func:`allen_cunneen_mean_wait`.  Sanity anchors: at
+    rho -> 0 departures look like the arrivals (C_d^2 -> C_a^2); at
+    rho -> 1 with c = 1 they look like the services (C_d^2 -> C_s^2);
+    and for M/M/c (both SCVs 1) C_d^2 = 1 exactly — Burke's theorem, the
+    Poisson departure stream that makes Jackson networks product-form.
+    ``utilization`` is clamped to [0, 1]: an overloaded stage departs at
+    its service process's rate.
+    """
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    if utilization < 0:
+        raise ValueError("utilization must be >= 0")
+    if scv_arrival < 0 or scv_service < 0:
+        raise ValueError("squared coefficients of variation must be >= 0")
+    rho2 = min(utilization, 1.0) ** 2
+    return (1.0
+            + (1.0 - rho2) * (scv_arrival - 1.0)
+            + (rho2 / math.sqrt(num_servers)) * (scv_service - 1.0))
+
+
+@dataclass(frozen=True)
+class StageWait:
+    """Per-stage prediction of :func:`tandem_waits`: the stage's mean queue
+    wait, its utilization, and the arrival/departure SCVs chaining through
+    it (``scv_departure`` is the next stage's ``scv_arrival``)."""
+
+    mean_wait_s: float
+    utilization: float
+    scv_arrival: float
+    scv_departure: float
+
+
+def tandem_waits(arrival_rate_qps: float,
+                 mean_service_s: Sequence[float], *,
+                 num_servers: Optional[Sequence[int]] = None,
+                 scv_service: Optional[Sequence[float]] = None,
+                 scv_arrival: float = 1.0) -> List[StageWait]:
+    """Stationary mean waits of a tandem line of G/G/c stages (QNA-style).
+
+    Stage k is predicted with :func:`allen_cunneen_mean_wait` under the
+    arrival SCV produced by stage k-1's departure process
+    (:func:`departure_scv`) — the decomposition approximation: each stage
+    treated as an independent G/G/c queue coupled only through the first
+    two moments of the flow.  For exponential service everywhere
+    (SCVs = 1) every departure stream is Poisson again and each stage
+    collapses to its own Erlang-C wait — the Jackson-network anchor the
+    tests pin.  A saturated stage (rho >= 1) reports ``inf`` wait and
+    passes its service SCV downstream at utilization 1.
+    """
+    means = [float(m) for m in mean_service_s]
+    if not means:
+        raise ValueError("tandem line needs at least one stage")
+    if any(m <= 0 for m in means):
+        raise ValueError("mean service times must be positive")
+    if arrival_rate_qps < 0:
+        raise ValueError("arrival rate must be >= 0")
+    servers = ([1] * len(means) if num_servers is None
+               else [int(c) for c in num_servers])
+    scvs = ([1.0] * len(means) if scv_service is None
+            else [float(s) for s in scv_service])
+    if len(servers) != len(means) or len(scvs) != len(means):
+        raise ValueError("per-stage parameter lengths must match")
+    out: List[StageWait] = []
+    ca2 = float(scv_arrival)
+    for m, c, cs2 in zip(means, servers, scvs):
+        rho = arrival_rate_qps * m / c
+        wait = allen_cunneen_mean_wait(c, arrival_rate_qps, m,
+                                       scv_service=cs2, scv_arrival=ca2)
+        cd2 = departure_scv(c, rho, scv_arrival=ca2, scv_service=cs2)
+        out.append(StageWait(mean_wait_s=wait, utilization=rho,
+                             scv_arrival=ca2, scv_departure=cd2))
+        ca2 = cd2
+    return out
+
+
+def fork_join_sojourn(branch_sojourn_s: Sequence[float]) -> float:
+    """Mean of the *critical path* — max over parallel branches — of a
+    fork-join, modeling each branch's sojourn as an independent
+    exponential with the given mean.
+
+    Exact under that model via inclusion-exclusion:
+
+      E[max_i X_i] = sum_S (-1)^(|S|+1) / sum_{i in S} lambda_i
+
+    over non-empty branch subsets S.  For k identical branches of mean m
+    this is the classic m * H_k (harmonic-number) fork-join
+    synchronization penalty; a single branch returns its mean unchanged,
+    which is the degenerate-tandem collapse.  Exponential branch sojourns
+    are the conservative closed-form choice: heavier-tailed branches only
+    push the true join wait further toward the slowest branch, which the
+    max already tracks.
+    """
+    means = [float(m) for m in branch_sojourn_s]
+    if not means:
+        raise ValueError("fork-join needs at least one branch")
+    if any(m <= 0 for m in means):
+        raise ValueError("branch sojourns must be positive")
+    if len(means) > 16:
+        raise ValueError("inclusion-exclusion over >16 branches is "
+                         "intractable; aggregate branches first")
+    rates = [1.0 / m for m in means]
+    total = 0.0
+    n = len(rates)
+    for mask in range(1, 1 << n):
+        lam = 0.0
+        bits = 0
+        for i in range(n):
+            if mask & (1 << i):
+                lam += rates[i]
+                bits += 1
+        total += (1.0 if bits % 2 else -1.0) / lam
+    return total
+
+
 def _mix_batch_drain_threshold(budget_s: float, assignment: Sequence[int],
                                batch_laws: Sequence[BatchProfile], phi: float,
                                num_servers: int, max_batch_size: int) -> int:

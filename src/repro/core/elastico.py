@@ -33,8 +33,9 @@ requires.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .aqm import AQMPolicyTable, MixPolicy, MixPolicyTable, SwitchingPolicy
 
@@ -177,6 +178,47 @@ class ElasticoController:
         else:
             self._low_since_s = None
         return None
+
+    def observe_stages(self, stage_depths: Sequence[int],
+                       now_s: float) -> Optional[SwitchEvent]:
+        """One control decision over *per-stage* buffered depths (workflow
+        DAGs): collapse the stage depths to one bottleneck-equivalent
+        depth and walk the ladder with it.
+
+        A request buffered at stage j costs the pipeline ``s_j / c_j``
+        seconds of bottleneck drain budget, so the effective depth is
+
+          N_eff = floor( sum_j N_j * (s_j / c_j) / (s_b / c_b) )
+
+        with b the bottleneck stage — the depths are weighted by each
+        stage's per-request drain time relative to the bottleneck's, which
+        is exactly the depth the pipeline thresholds (Eq. 10/13 stated at
+        the bottleneck) are calibrated in.  The weights come from the
+        current rung's policy (``stage_weights`` on
+        :class:`repro.serving.dag.PipelinePolicy`); a table without them —
+        e.g. a single-stage :class:`repro.core.aqm.AQMPolicyTable` driving
+        a degenerate DAG — falls back to the plain sum, which for one
+        stage IS the buffered depth, so the degenerate pipeline makes
+        bit-identical decisions to :meth:`observe`.
+        """
+        depths = [int(n) for n in stage_depths]
+        if not depths:
+            raise ValueError("need at least one stage depth")
+        if any(n < 0 for n in depths):
+            raise ValueError("negative queue depth")
+        weights = getattr(self.table.policy(self.current_index),
+                          "stage_weights", None)
+        if weights is None:
+            effective = sum(depths)
+        else:
+            if len(weights) != len(depths):
+                raise ValueError(
+                    f"{len(depths)} stage depths for a table with "
+                    f"{len(weights)} stage weights")
+            # epsilon guards the floor against 1.0 * N landing at N - ulp
+            effective = int(math.floor(
+                sum(n * w for n, w in zip(depths, weights)) + 1e-9))
+        return self.observe(effective, now_s)
 
     def force_fastest(self, queue_depth: int, now_s: float,
                       reason: str = "admission reroute") -> Optional[SwitchEvent]:

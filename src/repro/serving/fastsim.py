@@ -117,6 +117,7 @@ __all__ = [
     "FastSimulationResult",
     "SweepResult",
     "lognormal_params",
+    "chained_lindley",
     "jax_available",
     "jax_unavailable_reason",
     "resolve_backend",
@@ -441,6 +442,70 @@ def _run_fast_single(
         offered=n,
     )
     return result
+
+
+def chained_lindley(
+    arrivals: Sequence[float],
+    stage_services: Sequence[np.ndarray],
+    *,
+    num_servers: Optional[Sequence[int]] = None,
+) -> np.ndarray:
+    """Tandem-network recursion: push one arrival stream through a chain of
+    FIFO stages, each stage's departures feeding the next stage's arrivals
+    (the workflow-DAG fast path — stage n's completions are stage n+1's
+    arrivals).
+
+    ``arrivals`` is the external arrival time per request (any order);
+    ``stage_services[j]`` holds stage j's service times *in that stage's
+    dispatch order* (FIFO on the stage's own arrival times, stable by
+    request index on ties — how a sequential RNG would be consumed).
+    Single-server stages use the closed-form prefix-scan Lindley form
+    (``C = P + cummax(A - (P - S))`` — associative float reductions, so
+    allclose rather than bit-exact vs. the sequential oracle; the exact
+    path is :func:`repro.serving.dag.simulate_dag`); multi-server stages
+    run the Kiefer-Wolfowitz sorted-workload loop.
+
+    Returns a ``(num_stages, n)`` array of completion times aligned to the
+    *original* request order, so callers can chain further stages (e.g. a
+    fork-join's element-wise max over branch completions) or subtract
+    ``arrivals`` from the last row for end-to-end sojourns.
+    """
+    A = np.asarray(arrivals, dtype=float)
+    n = A.size
+    servers = ([1] * len(stage_services) if num_servers is None
+               else [int(c) for c in num_servers])
+    if len(servers) != len(stage_services):
+        raise ValueError("need one server count per stage")
+    if any(c < 1 for c in servers):
+        raise ValueError("server counts must be >= 1")
+    out = np.empty((len(stage_services), n), dtype=float)
+    cur = A
+    for j, (svc, c) in enumerate(zip(stage_services, servers)):
+        S = np.asarray(svc, dtype=float)
+        if S.shape != (n,):
+            raise ValueError(
+                f"stage {j}: service array shape {S.shape} != ({n},)")
+        order = np.argsort(cur, kind="stable")
+        a = cur[order]
+        if c == 1:
+            P = np.cumsum(S)
+            M = np.maximum.accumulate(a - (P - S))
+            C = P + M
+        else:
+            C = np.empty(n, dtype=float)
+            free = np.zeros(c, dtype=float)
+            for i in range(n):
+                f0 = free[0]
+                st = a[i] if a[i] > f0 else f0
+                ct = st + S[i]
+                free[0] = ct
+                free.sort()
+                C[i] = ct
+        nxt = np.empty(n, dtype=float)
+        nxt[order] = C
+        out[j] = nxt
+        cur = nxt
+    return out
 
 
 def simulate(

@@ -312,6 +312,37 @@ class Scheduler:
         """Pinned config index for a worker, or None when homogeneous."""
         return None if self._assign is None else self._assign[worker_id]
 
+    def set_active_index(self, index: int, now: float) -> None:
+        """Externally-driven switch of the homogeneous active index.
+
+        This is the *pipeline-level* switching hook: a workflow-DAG driver
+        (:class:`repro.serving.dag.DagSimulator`) runs one scheduler per
+        stage with no per-stage controller and applies the pipeline
+        controller's rung decision here, stage by stage.  Semantics mirror
+        a controller switch exactly — the new configuration becomes usable
+        after ``switch_latency_s`` while in-flight work finishes under the
+        old one, and ``config_timeline`` records the flip.  A no-op when
+        the index is unchanged (a pipeline rung change need not touch
+        every stage).  Not valid under a controller (two writers to the
+        active index) or a static assignment (pinning ignores it).
+        """
+        if self.controller is not None:
+            raise ValueError("set_active_index conflicts with a controller; "
+                             "pipeline drivers run per-stage schedulers "
+                             "controller-free")
+        if self._assign is not None:
+            raise ValueError("set_active_index is meaningless under a "
+                             "per-worker assignment")
+        idx = int(index)
+        if idx < 0 or (self.num_configs is not None
+                       and idx >= self.num_configs):
+            raise IndexError(f"config index {idx} out of range")
+        if idx == self._active:
+            return
+        self._switch_ready_s = now + self.switch_latency_s
+        self._active = idx
+        self.config_timeline.append((now, idx))
+
     def buffered(self) -> int:
         """Requests buffered but not dispatched — waiting in the shared
         queue (including any forming batch held by a linger) or spread

@@ -65,6 +65,8 @@ __all__ = [
     "bursty_mmpp_trace",
     "diurnal_trace",
     "flash_crowd_trace",
+    "DagReplayStats",
+    "replay_dag",
     "replay_mix",
     "replay_trace",
 ]
@@ -593,3 +595,129 @@ def replay_trace(trace, service_mean_s: float,
         None if service_p95_s is None else [float(service_p95_s)],
         num_servers=num_servers, slo_s=slo_s, seed=seed, backend=backend,
         quantile_bins=quantile_bins)[0]
+
+
+@dataclass(frozen=True)
+class DagReplayStats:
+    """Streamed tandem-pipeline replay: per-stage statistics (wait and
+    sojourn measured at each stage's own arrival process) plus the
+    end-to-end view (latency = sink completion - external arrival; wait =
+    sum of per-stage queueing waits).  SLO compliance is end-to-end."""
+
+    stages: Tuple[ReplayStats, ...]
+    end_to_end: ReplayStats
+
+
+def replay_dag(trace, stage_mean_s: Sequence[float],
+               stage_p95_s: Optional[Sequence[float]] = None, *,
+               slo_s: Optional[float] = None, seed: int = 0,
+               quantile_bins: int = 8192) -> DagReplayStats:
+    """Stream one chunked trace through a *tandem* of single-server stages
+    via chained closed-form Lindley recursions — stage n's departures are
+    stage n+1's arrivals, chunk by chunk.
+
+    Each stage carries its own backlog scalar across chunk boundaries;
+    because a c = 1 FIFO stage's completions are non-decreasing, a chunk's
+    departure vector is already a sorted arrival chunk for the next stage,
+    so the chaining is exact over the whole trace (identical to replaying
+    it unchunked).  One (mean, p95) pair per stage — the pinned pipeline
+    rung — with service streams keyed ``(seed, stage, stage-config,
+    trace-fingerprint)`` in the :func:`replay_mix` style.  Multi-server or
+    fork-join pipelines need :func:`repro.serving.dag.sweep_pipeline` or
+    the event-heap :class:`repro.serving.dag.DagSimulator`.
+    """
+    means = np.asarray(stage_mean_s, dtype=float)
+    if means.ndim != 1 or means.size == 0:
+        raise ValueError("stage_mean_s must be a non-empty 1-D sequence")
+    if np.any(means <= 0):
+        raise ValueError("stage service means must be positive")
+    J = means.size
+    if stage_p95_s is not None:
+        p95s = np.asarray(stage_p95_s, dtype=float)
+        if p95s.shape != means.shape:
+            raise ValueError("stage_p95_s must match stage_mean_s")
+        ln_params = [lognormal_params(m, p) for m, p in zip(means, p95s)]
+        cfg_fps = [_fingerprint(b"ln" + np.float64(m).tobytes()
+                                + np.float64(p).tobytes())
+                   for m, p in zip(means, p95s)]
+    else:
+        ln_params = None
+        cfg_fps = [_fingerprint(b"exp" + np.float64(m).tobytes())
+                   for m in means]
+
+    base_seed = seed & 0x7FFFFFFF
+    gens = [np.random.Generator(np.random.PCG64(np.random.SeedSequence(
+        [base_seed, 3, j, cfg_fps[j], trace.fingerprint])))
+        for j in range(J)]
+
+    count = 0
+    wait_sum = np.zeros(J)
+    lat_sum = np.zeros(J)
+    e2e_lat_sum = 0.0
+    e2e_ok = 0
+    max_lat = np.zeros(J)
+    e2e_max = 0.0
+    stage_init = [max(4.0 * float(m), 1e-6) for m in means]
+    e2e_init = max(4.0 * float(means.sum()), float(slo_s or 0.0) * 2.0, 1e-6)
+    sketches = [StreamingQuantile(quantile_bins, hi) for hi in stage_init]
+    e2e_sketch = StreamingQuantile(quantile_bins, e2e_init)
+    comp0 = np.zeros(J, dtype=float)
+
+    for A in trace.chunks():
+        n = A.size
+        cur = A
+        for j in range(J):
+            if ln_params is not None:
+                mu, sigma = ln_params[j]
+                S = gens[j].lognormal(mean=mu, sigma=sigma, size=n)
+            else:
+                S = gens[j].exponential(scale=means[j], size=n)
+            waits, lats, tail = _chunk_closed_form(cur, S[:, None],
+                                                   comp0[j:j + 1])
+            comp0[j] = tail[0]
+            w = waits[:, 0]
+            l = lats[:, 0]
+            wait_sum[j] += w.sum()
+            lat_sum[j] += l.sum()
+            if n:
+                max_lat[j] = max(max_lat[j], float(l.max()))
+            sketches[j].update(l)
+            cur = cur + l   # departures: stage arrivals + stage sojourns
+        e2e = cur - A
+        count += n
+        e2e_lat_sum += e2e.sum()
+        if slo_s is not None:
+            e2e_ok += int((e2e <= slo_s).sum())
+        if n:
+            e2e_max = max(e2e_max, float(e2e.max()))
+        e2e_sketch.update(e2e)
+
+    duration = float(trace.duration_s)
+    n_eff = max(count, 1)
+    engine = "chained_closed_form"
+
+    def stats(wsum: float, lsum: float, sketch: StreamingQuantile,
+              mx: float, ok: Optional[int]) -> ReplayStats:
+        return ReplayStats(
+            num_requests=count,
+            duration_s=duration,
+            throughput_qps=count / duration,
+            mean_wait_s=wsum / n_eff,
+            mean_latency_s=lsum / n_eff,
+            p95_latency_s=sketch.quantile(0.95),
+            p95_resolution_s=sketch.resolution,
+            slo_compliance=(ok / n_eff if ok is not None and count > 0
+                            else 1.0),
+            max_latency_s=mx,
+            slo_s=slo_s,
+            engine=engine,
+        )
+
+    stages = tuple(
+        stats(float(wait_sum[j]), float(lat_sum[j]), sketches[j],
+              float(max_lat[j]), None)
+        for j in range(J))
+    e2e_stats = stats(float(wait_sum.sum()), float(e2e_lat_sum), e2e_sketch,
+                      float(e2e_max),
+                      e2e_ok if slo_s is not None else None)
+    return DagReplayStats(stages=stages, end_to_end=e2e_stats)

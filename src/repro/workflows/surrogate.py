@@ -214,15 +214,24 @@ class RagSurrogate(SurrogateWorkflow):
         acc += (_unit_hash(self.name, "rugged", config) - 0.5) * 0.012
         return min(max(acc, 0.0), 1.0)
 
-    def mean_latency_s(self, config: Config) -> float:
+    def stage_latencies_s(self, config: Config) -> Dict[str, float]:
+        """Per-stage mean service decomposition of the RAG pipeline —
+        the stage view :mod:`repro.serving.dag` builds tandem workflow
+        scenarios from.  Keys follow the pipeline order: ``retrieve`` ->
+        ``rerank`` -> ``generate``; their sum is :meth:`mean_latency_s`
+        exactly."""
         d = self.space.as_dict(config)
         gen, k, rk, rr = d["generator"], d["retriever_k"], d["rerank_k"], d["reranker"]
         eff_rk = min(rk, k)
-        retrieve = 0.004 + 0.0002 * k              # vector search
-        rerank = _RERANK_COST_PER_DOC_S[rr] * k    # score k docs
-        # longer grounded prompts slow generation roughly linearly in rk
-        generate = _GEN_COST_S[gen] * (1.0 + 0.06 * eff_rk)
-        return retrieve + rerank + generate
+        return {
+            "retrieve": 0.004 + 0.0002 * k,            # vector search
+            "rerank": _RERANK_COST_PER_DOC_S[rr] * k,  # score k docs
+            # longer grounded prompts slow generation roughly linearly in rk
+            "generate": _GEN_COST_S[gen] * (1.0 + 0.06 * eff_rk),
+        }
+
+    def mean_latency_s(self, config: Config) -> float:
+        return sum(self.stage_latencies_s(config).values())
 
 
 # --------------------------------------------------------------------------

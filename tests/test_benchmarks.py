@@ -104,6 +104,51 @@ def test_trace_replay_smoke_gate_exits_zero():
     assert "FAILED" not in proc.stdout
 
 
+def test_dag_bench_smoke_gate_exits_zero():
+    """The workflow-DAG pipeline at its smoke setting: the 3-stage RAG
+    tandem's network-model validation, the pipeline-switching-vs-statics
+    diurnal comparison, and the fork-join section all run end to end with
+    the acceptance criterion (dynamic beats static-accurate on compliance
+    and static-fast on accuracy) holding."""
+    proc = _run_gate("--smoke", "dag_bench")
+    assert proc.returncode == 0, proc.stderr
+    assert "dag_bench," in proc.stdout
+    assert "dyn_comp=" in proc.stdout
+    assert "fj_penalty=" in proc.stdout     # fork-join section ran
+    assert "FAILED" not in proc.stdout
+
+
+def test_scrub_volatile_drops_wall_clock_keys():
+    from benchmarks.common import VOLATILE_KEYS, scrub_volatile
+
+    payload = {
+        "metadata": {"timestamp_utc": "2026-01-01T00:00:00+00:00"},
+        "section": {"requests": 10, "wall_s": 1.23, "rps": 8.1,
+                    "rungs": [{"mean_s": 0.1, "wall_s": 0.5}]},
+        "kept": 42,
+    }
+    out = scrub_volatile(payload)
+    assert out == {"section": {"requests": 10, "rungs": [{"mean_s": 0.1}]},
+                   "kept": 42}
+    assert "timestamp_utc" in VOLATILE_KEYS and "metadata" in VOLATILE_KEYS
+
+
+def test_stable_smoke_artifacts_are_idempotent(tmp_path, monkeypatch):
+    """Rerunning a stable-saved smoke benchmark must reproduce the
+    artifact byte-for-byte — the smoke gates rewrite these files on every
+    test run, so any volatile key turns each `pytest` into a dirty
+    working tree (the churn ISSUE 7 fixes)."""
+    import benchmarks.common as common
+    from benchmarks.trace_replay_bench import _run
+
+    monkeypatch.setattr(common, "EXPERIMENTS_DIR", str(tmp_path))
+    _run(target_requests=2e3, artifact="idem.json", stable=True)
+    first = (tmp_path / "idem.json").read_bytes()
+    _run(target_requests=2e3, artifact="idem.json", stable=True)
+    assert (tmp_path / "idem.json").read_bytes() == first
+    assert b"wall_s" not in first and b"timestamp_utc" not in first
+
+
 def test_check_docs_gate_exits_zero():
     proc = _run_gate("--check-docs")
     assert proc.returncode == 0, proc.stdout + proc.stderr

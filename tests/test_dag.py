@@ -1,0 +1,703 @@
+"""Workflow-DAG queueing networks (repro/serving/dag.py).
+
+The contract stack, strictest first:
+
+1. **Degenerate collapse is bit-exact**: a single-stage
+   :class:`~repro.serving.dag.WorkflowDAG` through
+   :class:`~repro.serving.dag.DagSimulator` replays
+   :class:`~repro.serving.simulator.ServingSimulator` op-for-op — pinned
+   against the seed-commit golden digest, so the DAG layer provably costs
+   nothing when the workflow is not compound.
+2. **The fast path is the oracle**: for static, unbounded, B = 1 runs,
+   :func:`~repro.serving.dag.simulate_dag` produces the event-heap
+   simulator's sink records bit-for-bit — property-tested over random
+   tandem and fork-join topologies, mixed pool sizes, lognormal tails.
+3. **Conservation**: admitted == completed + in-flight (+ dropped ==
+   offered) at every stage, for random topologies, bounded queues, and
+   mid-flight stops (``drain=False``).
+4. **Analytic anchors**: Burke's theorem through
+   :func:`~repro.core.aqm.departure_scv` (M/M/c departures are Poisson),
+   the Jackson product form through :func:`~repro.core.aqm.tandem_waits`,
+   and the m * H_k harmonic fork-join penalty through
+   :func:`~repro.core.aqm.fork_join_sojourn`.
+5. **Ladder collapse**: single-stage pipeline thresholds equal
+   :func:`~repro.core.aqm.derive_policies` exactly, and the weighted
+   per-stage depth collapse in
+   :meth:`~repro.core.elastico.ElasticoController.observe_stages` makes
+   bit-identical decisions to scalar :meth:`observe`.
+"""
+
+import hashlib
+import math
+import random
+
+import numpy as np
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    departure_scv,
+    derive_policies,
+    fork_join_sojourn,
+    tandem_waits,
+)
+from repro.core.elastico import ElasticoController
+from repro.core.planner import Planner
+from repro.serving.dag import (
+    DagSimulator,
+    PipelinePlan,
+    StageSpec,
+    WorkflowDAG,
+    derive_pipeline_policies,
+    pipeline_service_profile,
+    pipeline_sojourn,
+    simulate_dag,
+    sweep_pipeline,
+)
+from repro.serving.fastsim import chained_lindley
+from repro.serving.scheduler import Scheduler
+from repro.serving.simulator import (
+    ServingSimulator,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.traces import diurnal_trace, replay_dag
+from repro.serving.workload import (
+    constant_rate,
+    generate_arrivals,
+    spike_pattern,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def flat_stage(**kw):
+    """The golden scenario's ladder as a single StageSpec."""
+    return StageSpec(name="svc", mean_s=tuple(MEANS), p95_s=tuple(P95S),
+                     accuracy=tuple(ACCS), **kw)
+
+
+def _digest(completed):
+    h = hashlib.sha256()
+    for r in completed:
+        h.update(
+            f"{r.request_id},{r.arrival_s:.12e},{r.start_s:.12e},"
+            f"{r.completion_s:.12e},{r.config_index};".encode()
+        )
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# 1. degenerate collapse: single-stage DAG == flat simulator, bit-for-bit
+# --------------------------------------------------------------------------
+
+
+def test_single_stage_dag_reproduces_seed_golden():
+    """The golden scenario of ``test_multi_server.py`` through the DAG
+    layer: same digest as the flat ServingSimulator's seed-commit run.
+    If this moves, the degenerate DAG no longer replays the paper-faithful
+    M/G/1 runtime bit-for-bit."""
+    table = derive_policies(ladder_front(), slo_p95_s=1.0)
+    arr = generate_arrivals(spike_pattern(2.0, factor=4.0), 180.0, seed=1)
+    sim = DagSimulator(
+        WorkflowDAG.single(flat_stage()),
+        controller=ElasticoController(table),
+        seed=7,
+    )
+    out = sim.run(arr, 180.0)
+    assert len(out.completed) == 732
+    assert len(out.switch_events) == 14
+    assert _digest(out.completed) == (
+        "dfec2ace7a6aa74c5246f4769e3ed8ec433b3f2ea07e4a6c0d38ba79038ed1f6"
+    )
+
+
+def test_single_stage_dag_full_equality_with_flat_simulator():
+    """Beyond the completion digest: config timeline, depth samples, busy
+    time and switch events all agree with the flat simulator — the whole
+    observable surface, controller runs included."""
+    table = derive_policies(ladder_front(), slo_p95_s=1.0)
+    arr = generate_arrivals(constant_rate(5.0), 60.0, seed=3)
+
+    flat = ServingSimulator(
+        lognormal_sampler_from_profile(MEANS, P95S),
+        controller=ElasticoController(table), seed=11,
+    ).run(arr, 60.0)
+    dag = DagSimulator(
+        WorkflowDAG.single(flat_stage()),
+        controller=ElasticoController(table), seed=11,
+    ).run(arr, 60.0)
+
+    assert dag.completed == flat.completed
+    assert dag.config_timeline == flat.config_timeline
+    assert dag.queue_depth_samples == flat.queue_depth_samples
+    assert dag.per_server_busy_s == flat.per_server_busy_s
+    assert [(e.time_s, e.from_index, e.to_index) for e in dag.switch_events] \
+        == [(e.time_s, e.from_index, e.to_index) for e in flat.switch_events]
+    assert dag.num_servers == flat.num_servers == 1
+    # and the per-request accuracy is the stage factor actually served
+    for r in dag.completed:
+        assert dag.request_accuracy[r.request_id] == ACCS[r.config_index]
+
+
+# --------------------------------------------------------------------------
+# 2. fast path == oracle (bit-for-bit), random topologies
+# --------------------------------------------------------------------------
+
+
+def _random_stage(rng, name, *, max_c=3):
+    m = rng.uniform(0.02, 0.15)
+    return StageSpec(name=name, mean_s=(m,), p95_s=(m * rng.uniform(1.2, 2.0),),
+                     num_servers=rng.randint(1, max_c))
+
+
+def _random_dag(kind, width, topo_seed):
+    rng = random.Random(topo_seed)
+    if kind == 0:
+        return WorkflowDAG.single(_random_stage(rng, "s0"))
+    if kind == 1:
+        return WorkflowDAG.tandem(
+            [_random_stage(rng, f"s{j}") for j in range(width + 1)])
+    branches = [_random_stage(rng, f"b{j}") for j in range(max(2, width))]
+    join = _random_stage(rng, "join")
+    tail = [_random_stage(rng, "tail")] if rng.random() < 0.5 else []
+    return WorkflowDAG.fork_join(branches, join, tail=tail)
+
+
+@given(st.integers(0, 2), st.integers(1, 3), st.integers(0, 10**6),
+       st.floats(3.0, 9.0))
+@settings(max_examples=12, deadline=None)
+def test_fast_path_matches_oracle_bit_for_bit(kind, width, topo_seed, rate):
+    """simulate_dag's sink records equal DagSimulator's exactly — same
+    request ids, same start/completion floats, same dispatch order —
+    across tandem and fork-join topologies with mixed pool sizes."""
+    dag = _random_dag(kind, width, topo_seed)
+    cfg = (0,) * dag.num_stages
+    arr = generate_arrivals(constant_rate(rate), 30.0,
+                            seed=topo_seed % 1000)
+    oracle = DagSimulator(dag, static_stage_indices=cfg,
+                          seed=topo_seed % 97).run(arr, 30.0)
+    fast = simulate_dag(dag, arr, stage_indices=cfg, seed=topo_seed % 97)
+    assert _digest(fast.completed) == _digest(oracle.completed)
+    assert len(fast.completed) == len(arr)
+    np.testing.assert_array_equal(
+        np.sort(fast.stage_completions[-1]),
+        np.sort([r.completion_s for r in oracle.completed]))
+
+
+def test_fast_path_fork_join_waits_for_all_branches():
+    """A join request's stage arrival is the max over its branch
+    completions: every sink latency must be >= the slowest branch's
+    service contribution, and the per-stage grid must satisfy the
+    max-composition row-wise."""
+    rng = random.Random(5)
+    dag = WorkflowDAG.fork_join(
+        [_random_stage(rng, "a", max_c=1), _random_stage(rng, "b", max_c=1)],
+        _random_stage(rng, "join", max_c=1))
+    arr = generate_arrivals(constant_rate(4.0), 25.0, seed=2)
+    res = simulate_dag(dag, arr, stage_indices=(0, 0, 0), seed=9)
+    comp = res.stage_completions
+    # join completion strictly after both branch completions
+    assert np.all(comp[2] > np.maximum(comp[0], comp[1]))
+
+
+def test_fast_path_rejects_bounded_queues():
+    st_ = StageSpec(name="s", mean_s=(0.1,), max_queue_depth=4)
+    dag = WorkflowDAG.single(st_)
+    with pytest.raises(ValueError, match="unbounded"):
+        simulate_dag(dag, [0.0, 0.1], stage_indices=(0,))
+
+
+# --------------------------------------------------------------------------
+# 3. conservation at every stage
+# --------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2), st.integers(1, 3), st.integers(0, 10**6),
+       st.floats(4.0, 14.0), st.sampled_from([None, 2, 5]),
+       st.sampled_from([True, False]))
+@settings(max_examples=15, deadline=None)
+def test_stage_conservation(kind, width, topo_seed, rate, bound, drain):
+    """offered == dropped + completed + in_flight at every stage, whether
+    the run drains, stops mid-flight, or sheds load at a bounded queue.
+    Drained runs additionally finish with zero in-flight everywhere."""
+    dag = _random_dag(kind, width, topo_seed)
+    if bound is not None:
+        # bound the *sink* queue: downstream drops exercise the invariant
+        # without starving the join bookkeeping upstream
+        stages = list(dag.stages)
+        j = dag.sink()
+        stages[j] = StageSpec(
+            name=stages[j].name, mean_s=stages[j].mean_s,
+            p95_s=stages[j].p95_s, num_servers=stages[j].num_servers,
+            max_queue_depth=bound)
+        dag = WorkflowDAG(stages=tuple(stages), edges=dag.edges)
+    arr = generate_arrivals(constant_rate(rate), 20.0, seed=topo_seed % 500)
+    out = DagSimulator(dag, static_stage_indices=(0,) * dag.num_stages,
+                       seed=topo_seed % 89).run(arr, 20.0, drain=drain)
+    for s in out.stage_stats:
+        assert s.offered == s.dropped + s.completed + s.in_flight, s
+        if drain:
+            assert s.in_flight == 0
+    # end-to-end: completion records are appended at sink *dispatch*, so a
+    # mid-flight stop may have records whose completion event is still
+    # pending — bounded by the sink's in-service population
+    sink_stats = out.stage_stats[dag.sink()]
+    assert sink_stats.completed <= len(out.completed) \
+        <= sink_stats.completed + sink_stats.in_flight
+    if drain:
+        assert sink_stats.completed == len(out.completed)
+        assert out.offered == len(arr)
+
+
+# --------------------------------------------------------------------------
+# 4. analytic anchors for the queueing-network model
+# --------------------------------------------------------------------------
+
+
+def test_departure_scv_burke_anchor():
+    """M/M/c: Poisson in, exponential service -> Poisson out (C_d^2 = 1)
+    at every utilization and pool size."""
+    for c in (1, 2, 8):
+        for rho in (0.1, 0.5, 0.95):
+            assert departure_scv(c, rho) == pytest.approx(1.0, abs=1e-12)
+    # limits: rho -> 0 reproduces the arrivals, rho -> 1 (c=1) the services
+    assert departure_scv(1, 0.0, scv_arrival=2.5, scv_service=0.3) \
+        == pytest.approx(2.5)
+    assert departure_scv(1, 1.0, scv_arrival=2.5, scv_service=0.3) \
+        == pytest.approx(0.3)
+    # overload clamps to the service process
+    assert departure_scv(1, 1.7, scv_service=0.3) == pytest.approx(0.3)
+
+
+def test_tandem_waits_jackson_product_form():
+    """Exponential service everywhere: each stage is its own M/M/1 with
+    wait rho * s / (1 - rho), and every departure SCV stays exactly 1 —
+    the Jackson-network anchor of the decomposition."""
+    rate, s = 4.0, 0.1
+    rho = rate * s
+    waits = tandem_waits(rate, [s, s, s])
+    for w in waits:
+        assert w.mean_wait_s == pytest.approx(rho * s / (1 - rho), rel=1e-12)
+        assert w.utilization == pytest.approx(rho)
+        assert w.scv_arrival == pytest.approx(1.0)
+        assert w.scv_departure == pytest.approx(1.0)
+
+
+def test_tandem_waits_saturation_propagates():
+    waits = tandem_waits(12.0, [0.05, 0.2])    # stage 2 at rho = 2.4
+    assert math.isfinite(waits[0].mean_wait_s)
+    assert waits[1].mean_wait_s == float("inf")
+    assert waits[1].utilization == pytest.approx(2.4)
+
+
+def test_fork_join_harmonic_penalty():
+    m = 0.2
+    assert fork_join_sojourn([m]) == pytest.approx(m)
+    assert fork_join_sojourn([m, m]) == pytest.approx(1.5 * m, rel=1e-12)
+    h4 = 1.0 + 0.5 + 1.0 / 3.0 + 0.25
+    assert fork_join_sojourn([m] * 4) == pytest.approx(m * h4, rel=1e-12)
+    # two distinct branches: E[max] = m1 + m2 - 1/(l1 + l2)
+    want = 0.1 + 0.3 - 1.0 / (10.0 + 10.0 / 3.0)
+    assert fork_join_sojourn([0.1, 0.3]) == pytest.approx(want, rel=1e-12)
+    with pytest.raises(ValueError, match="16"):
+        fork_join_sojourn([m] * 17)
+
+
+def test_pipeline_sojourn_tandem_matches_tandem_waits():
+    """pipeline_sojourn over a tandem DAG is exactly the tandem_waits
+    decomposition plus the service means (same SCV chaining)."""
+    stages = [StageSpec(name=f"s{j}", mean_s=(m,), p95_s=(p,))
+              for j, (m, p) in enumerate([(0.05, 0.08), (0.08, 0.13)])]
+    dag = WorkflowDAG.tandem(stages)
+    rate = 6.0
+    from repro.serving.dag import stage_service_scv
+
+    scvs = [stage_service_scv(s.mean_s[0], s.p95_s[0]) for s in stages]
+    waits = tandem_waits(rate, [s.mean_s[0] for s in stages],
+                         scv_service=scvs)
+    want = sum(w.mean_wait_s for w in waits) \
+        + sum(s.mean_s[0] for s in stages)
+    assert pipeline_sojourn(dag, (0, 0), rate) == pytest.approx(want,
+                                                                rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# 5. the pipeline ladder
+# --------------------------------------------------------------------------
+
+
+def test_single_stage_ladder_collapses_to_aqm_thresholds():
+    """Every threshold, slack and exclusion of the single-stage pipeline
+    ladder equals derive_policies' — Eq. 10/13 recovered exactly."""
+    base = derive_policies(ladder_front(), slo_p95_s=1.0)
+    pipe = derive_pipeline_policies(WorkflowDAG.single(flat_stage()),
+                                    slo_p95_s=1.0)
+    assert pipe.ladder_size == base.ladder_size
+    for a, b in zip(pipe.policies, base.policies):
+        assert a.upscale_threshold == b.upscale_threshold
+        assert a.downscale_threshold == b.downscale_threshold
+        assert a.queuing_slack_s == b.queuing_slack
+        assert a.stage_indices == (b.index,)
+        assert a.stage_weights == (1.0,)
+    assert pipe.slo_p95_s == base.slo_p95_s
+
+
+def test_greedy_rung_walk_shape_and_monotonicity():
+    """Default ladder: sum_j (K_j - 1) + 1 rungs, strictly non-decreasing
+    end-to-end mean, all-fastest first, all-most-accurate last."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.02, 0.05), accuracy=(0.9, 0.95)),
+        StageSpec(name="b", mean_s=(0.05, 0.09, 0.20),
+                  accuracy=(0.7, 0.8, 0.9)),
+    ])
+    table = derive_pipeline_policies(dag, slo_p95_s=5.0)
+    assert table.ladder_size == (2 - 1) + (3 - 1) + 1
+    assert table.policies[0].stage_indices == (0, 0)
+    assert table.policies[-1].stage_indices == (1, 2)
+    means = [p.mean_latency_s for p in table.policies]
+    assert means == sorted(means)
+    accs = [p.accuracy for p in table.policies]
+    assert accs == sorted(accs)
+    # accuracy is the product of the stage factors
+    assert table.policies[-1].accuracy == pytest.approx(0.95 * 0.9)
+
+
+def test_pipeline_ladder_excludes_infeasible_and_orders_rungs():
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.1, 0.4), p95_s=(0.15, 0.6)),
+        StageSpec(name="b", mean_s=(0.1, 0.4), p95_s=(0.15, 0.6)),
+    ])
+    table = derive_pipeline_policies(dag, slo_p95_s=0.6,
+                                     rungs=[(0, 0), (1, 1)])
+    assert table.ladder_size == 1          # (1,1) cannot meet 0.6 s p95
+    assert table.excluded == ((1, 1),)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        derive_pipeline_policies(dag, slo_p95_s=2.0,
+                                 rungs=[(1, 1), (0, 0)])
+
+
+def test_bottleneck_thresholds_and_weights():
+    """N_up = floor(c_b * Delta / s_b) at the slowest-drain stage; the
+    stage weights are drain times relative to the bottleneck's."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.06,), p95_s=(0.09,), num_servers=2),
+        StageSpec(name="b", mean_s=(0.10,), p95_s=(0.15,)),
+    ])
+    table = derive_pipeline_policies(dag, slo_p95_s=1.0, rungs=[(0, 0)])
+    pol = table.policies[0]
+    assert pol.bottleneck_stage == 1       # 0.10/1 > 0.06/2
+    delta = 1.0 - pol.p95_latency_s
+    assert pol.upscale_threshold == int(math.floor(delta / 0.10))
+    assert pol.stage_weights == pytest.approx((0.03 / 0.10, 1.0))
+    assert pol.downscale_threshold is None  # last rung
+
+
+def test_observe_stages_weighted_collapse_matches_scalar_observe():
+    """observe_stages(depths) must decide exactly like observe(N_eff) with
+    N_eff = floor(sum N_j w_j); an AQM table (no weights) falls back to
+    the plain sum."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.05, 0.1), p95_s=(0.08, 0.15)),
+        StageSpec(name="b", mean_s=(0.10, 0.2), p95_s=(0.15, 0.3)),
+    ])
+    table = derive_pipeline_policies(
+        dag, slo_p95_s=1.0, rungs=[(0, 0), (1, 1)],
+        hysteresis=HysteresisSpec(downscale_cooldown_s=0.0))
+    a, b = ElasticoController(table), ElasticoController(table)
+    rng = random.Random(0)
+    for i in range(200):
+        depths = [rng.randint(0, 12), rng.randint(0, 12)]
+        w = b.table.policy(b.current_index).stage_weights
+        eff = int(math.floor(sum(n * wj for n, wj in zip(depths, w)) + 1e-9))
+        ev_a = a.observe_stages(depths, 0.1 * i)
+        ev_b = b.observe(eff, 0.1 * i)
+        assert (ev_a is None) == (ev_b is None)
+        assert a.current_index == b.current_index
+
+    # AQM fallback: no stage_weights -> plain sum (degenerate DAG parity)
+    aqm = derive_policies(ladder_front(), slo_p95_s=1.0)
+    c, d = ElasticoController(aqm), ElasticoController(aqm)
+    for i in range(50):
+        n = rng.randint(0, 15)
+        ev_c = c.observe_stages([n], 0.1 * i)
+        ev_d = d.observe(n, 0.1 * i)
+        assert (ev_c is None) == (ev_d is None)
+        assert c.current_index == d.current_index
+    with pytest.raises(ValueError, match="stage depth"):
+        c.observe_stages([], 0.0)
+    with pytest.raises(ValueError, match="stage weights"):
+        a.observe_stages([1, 2, 3], 999.0)
+
+
+def test_set_active_index_validation_and_switch_latency():
+    s = Scheduler(static_index=0, num_configs=3, switch_latency_s=0.01,
+                  record_initial_config=True)
+    s.set_active_index(0, 1.0)            # no-op: unchanged index
+    assert s.config_timeline == [(0.0, 0)]
+    s.set_active_index(2, 1.0)
+    assert s.config_timeline == [(0.0, 0), (1.0, 2)]
+    with pytest.raises(IndexError, match="out of range"):
+        s.set_active_index(3, 2.0)
+    ctl = Scheduler(controller=ElasticoController(
+        derive_policies(ladder_front(), slo_p95_s=1.0)))
+    with pytest.raises(ValueError, match="controller"):
+        ctl.set_active_index(0, 0.0)
+    pinned = Scheduler(num_workers=2, assignment=[0, 1], num_configs=2)
+    with pytest.raises(ValueError, match="assignment"):
+        pinned.set_active_index(1, 0.0)
+
+
+# --------------------------------------------------------------------------
+# 6. pipeline switching beats the statics (miniature of dag_bench)
+# --------------------------------------------------------------------------
+
+
+def test_pipeline_switching_beats_static_baselines():
+    """2-stage tandem under a 4x spike: the pipeline controller must beat
+    static-accurate on SLO compliance and static-fast on accuracy — the
+    dag_bench acceptance criterion, in-process and tier-1 sized."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.05, 0.12), p95_s=(0.07, 0.17)),
+        StageSpec(name="b", mean_s=(0.05, 0.12), p95_s=(0.07, 0.17),
+                  accuracy=(0.70, 0.90)),
+    ])
+    table = derive_pipeline_policies(dag, slo_p95_s=1.0,
+                                     rungs=[(0, 0), (1, 1)])
+    arr = generate_arrivals(spike_pattern(3.0, factor=4.0), 120.0, seed=1)
+
+    def serve(controller, rung=0):
+        sim = DagSimulator(dag, controller=controller, static_rung=rung,
+                           rungs=[p.stage_indices for p in table.policies],
+                           seed=4)
+        return sim.run(arr, 120.0)
+
+    dyn = serve(ElasticoController(table))
+    fast = serve(None, rung=0)
+    slow = serve(None, rung=1)
+    assert dyn.slo_compliance(1.0) > slow.slo_compliance(1.0)
+    assert dyn.mean_pipeline_accuracy() > fast.mean_pipeline_accuracy()
+    assert dyn.switch_events
+    # statics serve every request at the pinned rung's accuracy product
+    assert fast.mean_pipeline_accuracy() == pytest.approx(0.70)
+    assert slow.mean_pipeline_accuracy() == pytest.approx(0.90)
+
+
+def test_dag_simulator_configuration_errors():
+    dag = WorkflowDAG.tandem([StageSpec(name="a", mean_s=(0.1,)),
+                              StageSpec(name="b", mean_s=(0.1,))])
+    with pytest.raises(ValueError, match="controller-.*free|controller"):
+        DagSimulator(dag, controller=ElasticoController(
+            derive_policies(ladder_front(), slo_p95_s=1.0)),
+            static_stage_indices=(0, 0)).run([0.0], 1.0)
+    with pytest.raises(ValueError, match="static_rung"):
+        DagSimulator(dag, static_rung=5).run([0.0], 1.0)
+    with pytest.raises(ValueError, match="pipeline rungs"):
+        DagSimulator(dag, controller=ElasticoController(
+            derive_policies(ladder_front(), slo_p95_s=1.0))).run([0.0], 1.0)
+    with pytest.raises(ValueError, match="one config index per stage"):
+        DagSimulator(dag, static_stage_indices=(0,)).run([0.0], 1.0)
+
+
+# --------------------------------------------------------------------------
+# 7. chained recursions: chained_lindley, sweep_pipeline, replay_dag
+# --------------------------------------------------------------------------
+
+
+def test_chained_lindley_hand_computed_tandem():
+    A = np.array([0.0, 1.0, 1.5])
+    S1 = np.array([1.0, 1.0, 1.0])
+    S2 = np.array([0.5, 0.5, 0.5])
+    comp = chained_lindley(A, [S1, S2])
+    np.testing.assert_allclose(comp[0], [1.0, 2.0, 3.0])
+    np.testing.assert_allclose(comp[1], [1.5, 2.5, 3.5])
+    assert comp.shape == (2, 3)
+
+
+def test_chained_lindley_unsorted_arrivals_fifo():
+    """Arrivals given out of order are served FIFO-by-arrival-time, with
+    results scattered back to the original positions."""
+    A = np.array([2.0, 0.0, 1.0])
+    S = np.array([1.5, 1.5, 1.5])           # consumed in dispatch order
+    comp = chained_lindley(A, [S])
+    np.testing.assert_allclose(comp[0], [4.5, 1.5, 3.0])
+
+
+def test_chained_lindley_multi_server_matches_brute_kw():
+    rng = np.random.default_rng(3)
+    A = np.sort(rng.uniform(0.0, 20.0, size=60))
+    S = rng.lognormal(-1.5, 0.5, size=60)
+    got = chained_lindley(A, [S], num_servers=[2])[0]
+    free = [0.0, 0.0]
+    want = np.empty(60)
+    for i in range(60):
+        start = max(A[i], free[0])
+        want[i] = start + S[i]
+        free[0] = want[i]
+        free.sort()
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sweep_pipeline_model_agreement_at_moderate_load():
+    """The chained-recursion grid agrees with the queueing-network
+    prediction to ~10% at low-to-moderate utilization (the regime the
+    decomposition approximation is built for)."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.04,), p95_s=(0.06,)),
+        StageSpec(name="b", mean_s=(0.06,), p95_s=(0.09,)),
+    ])
+    sweep = sweep_pipeline(dag, [(0, 0)], arrival_rates_qps=[4.0, 8.0],
+                           duration_s=400.0, replications=4, seed=0)
+    assert sweep.num_requests > 0
+    assert sweep.sojourn_model_error() < 0.10
+    # grids are (K, L)
+    assert len(sweep.mean_latency_s) == 1
+    assert len(sweep.mean_latency_s[0]) == 2
+    # sojourn grows with load
+    assert sweep.mean_latency_s[0][1] > sweep.mean_latency_s[0][0]
+
+
+def test_planner_plan_and_validate_pipeline():
+    """Planner.plan_pipeline wraps derive_pipeline_policies with the
+    Planner's slack/hysteresis; validate_pipeline defaults its load grid
+    to fractions of the fastest rung's bottleneck drain rate."""
+    dag = WorkflowDAG.tandem([
+        StageSpec(name="a", mean_s=(0.03, 0.06), p95_s=(0.05, 0.09)),
+        StageSpec(name="b", mean_s=(0.05, 0.10), p95_s=(0.08, 0.15),
+                  accuracy=(0.8, 0.9)),
+    ])
+    planner = Planner(profiler=lambda c, n: [0.1] * n)
+    plan = planner.plan_pipeline(dag, slo_p95_s=1.0)
+    assert isinstance(plan, PipelinePlan)
+    assert plan.table.ladder_size >= 2
+    assert "a -> b" in plan.describe()
+
+    # fractions of the FAST rung's capacity (20 qps at stage b); keep the
+    # slowest rung (10 qps capacity) below saturation so every predicted
+    # sojourn stays finite
+    val = planner.validate_pipeline(plan, load_fractions=(0.2, 0.4),
+                                    duration_s=60.0, replications=2, seed=1)
+    cap = 1.0 / 0.05                        # fastest rung bottleneck: stage b
+    assert val.arrival_rates_qps == pytest.approx((0.2 * cap, 0.4 * cap))
+    assert val.replications == 2
+    assert len(val.slo_compliance) == plan.table.ladder_size
+    assert all(math.isfinite(p) for row in val.predicted_sojourn_s
+               for p in row)
+    assert val.sojourn_model_error() < 0.5
+
+    with pytest.raises(ValueError, match="excluded"):
+        planner.plan_pipeline(dag, slo_p95_s=0.01)
+
+
+def test_replay_dag_streaming_tandem_consistency():
+    """Streamed tandem replay: per-stage sojourns sum exactly to the
+    end-to-end mean (the chaining identity), waits likewise, and the
+    whole run stays on the chained closed-form engine."""
+    trace = diurnal_trace(60.0, amplitude=0.5, duration_s=600.0, seed=7)
+    stats = replay_dag(trace, [0.004, 0.006], [0.006, 0.009],
+                       slo_s=0.5, seed=3)
+    assert len(stats.stages) == 2
+    e2e = stats.end_to_end
+    assert e2e.engine == "chained_closed_form"
+    assert e2e.num_requests == stats.stages[0].num_requests > 0
+    assert e2e.mean_latency_s == pytest.approx(
+        sum(s.mean_latency_s for s in stats.stages), rel=1e-12)
+    assert e2e.mean_wait_s == pytest.approx(
+        sum(s.mean_wait_s for s in stats.stages), rel=1e-12)
+    assert 0.0 <= e2e.slo_compliance <= 1.0
+    assert e2e.slo_s == 0.5
+    with pytest.raises(ValueError, match="positive"):
+        replay_dag(trace, [0.004, -1.0])
+
+
+# --------------------------------------------------------------------------
+# 8. DAG construction and validation
+# --------------------------------------------------------------------------
+
+
+def test_workflow_dag_validation_errors():
+    a = StageSpec(name="a", mean_s=(0.1,))
+    b = StageSpec(name="b", mean_s=(0.1,))
+    c = StageSpec(name="c", mean_s=(0.1,))
+    with pytest.raises(ValueError, match="at least one stage"):
+        WorkflowDAG(stages=())
+    with pytest.raises(ValueError, match="duplicate stage names"):
+        WorkflowDAG(stages=(a, StageSpec(name="a", mean_s=(0.2,))),
+                    edges=((0, 1),))
+    with pytest.raises(ValueError, match="out of range"):
+        WorkflowDAG(stages=(a, b), edges=((0, 2),))
+    with pytest.raises(ValueError, match="self-loop"):
+        WorkflowDAG(stages=(a, b), edges=((0, 0), (0, 1)))
+    with pytest.raises(ValueError, match="duplicate edge"):
+        WorkflowDAG(stages=(a, b), edges=((0, 1), (0, 1)))
+    with pytest.raises(ValueError, match="cycle"):
+        WorkflowDAG(stages=(a, b), edges=((0, 1), (1, 0)))
+    with pytest.raises(ValueError, match="exactly one sink"):
+        WorkflowDAG(stages=(a, b, c), edges=((0, 1), (0, 2)))
+    with pytest.raises(ValueError, match="two branches"):
+        WorkflowDAG.fork_join([a], b)
+
+
+def test_stage_spec_validation_errors():
+    with pytest.raises(ValueError, match="name"):
+        StageSpec(name="", mean_s=(0.1,))
+    with pytest.raises(ValueError, match="empty config ladder"):
+        StageSpec(name="s", mean_s=())
+    with pytest.raises(ValueError, match="positive"):
+        StageSpec(name="s", mean_s=(0.0,))
+    with pytest.raises(ValueError, match="p95 ladder"):
+        StageSpec(name="s", mean_s=(0.1, 0.2), p95_s=(0.15,))
+    with pytest.raises(ValueError, match="accuracy ladder"):
+        StageSpec(name="s", mean_s=(0.1,), accuracy=(0.9, 0.8))
+    with pytest.raises(ValueError, match="num_servers"):
+        StageSpec(name="s", mean_s=(0.1,), num_servers=0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        StageSpec(name="s", mean_s=(0.1,), max_queue_depth=0)
+
+
+def test_topology_helpers():
+    dag = WorkflowDAG.fork_join(
+        [StageSpec(name="a", mean_s=(0.1,)), StageSpec(name="b", mean_s=(0.1,))],
+        StageSpec(name="j", mean_s=(0.1,)),
+        tail=[StageSpec(name="t", mean_s=(0.1,))])
+    assert dag.sources() == (0, 1)
+    assert dag.sink() == 3
+    assert dag.predecessors(2) == (0, 1)
+    assert dag.successors(2) == (3,)
+    assert not dag.is_tandem()
+    assert dag.topological_order() == (0, 1, 2, 3)
+    assert dag.stage_index("t") == 3
+    with pytest.raises(KeyError):
+        dag.stage_index("nope")
+    chain = WorkflowDAG.tandem([StageSpec(name="x", mean_s=(0.1,)),
+                                StageSpec(name="y", mean_s=(0.1,))])
+    assert chain.is_tandem()
+    with pytest.raises(IndexError, match="out of range"):
+        chain.validate_stage_indices((0, 5))
+
+
+def test_pipeline_service_profile_single_stage_passthrough():
+    """One stage: the profile is the stage's own (mean, p95) unchanged —
+    the special case that makes the degenerate ladder collapse exact."""
+    dag = WorkflowDAG.single(flat_stage())
+    for k in range(3):
+        assert pipeline_service_profile(dag, (k,)) == (MEANS[k], P95S[k])
+    # multi-stage tandem means add
+    two = WorkflowDAG.tandem([flat_stage(), StageSpec(name="t",
+                                                      mean_s=tuple(MEANS),
+                                                      p95_s=tuple(P95S))])
+    mean, p95 = pipeline_service_profile(two, (1, 1))
+    assert mean == pytest.approx(2 * MEANS[1])
+    assert p95 > mean

@@ -36,6 +36,8 @@ from repro.serving.fastsim import (
     simulate_batch,
 )
 
+pytestmark = pytest.mark.jax
+
 needs_jax = pytest.mark.skipif(
     not jax_available(),
     reason=f"jax not importable: {jax_unavailable_reason()}")
@@ -266,3 +268,106 @@ def test_missing_jax_fallback_and_error(monkeypatch):
 def test_bad_scan_impl_rejected():
     with pytest.raises(ValueError, match="scan_impl"):
         _sweep(backend="numpy", scan_impl="warp")
+
+
+def test_resolve_backend_auto_on_dag_sized_grids():
+    """The grid sizes the pipeline benchmarks actually produce: a
+    smoke-scale DAG validation (few rungs x short grid) must stay on
+    numpy under ``auto``, while the full trace-replay-scale validation
+    crosses the amortization threshold and picks jax when importable.
+    Pins the threshold semantics to the real workloads, not just to
+    ``_JAX_AUTO_MIN_SLOTS +- 1``."""
+
+    def grid_slots(*, rungs, rates, replications, duration_s):
+        # padded slots = R x K x L x N_max, N_max ~ peak-rate trace + 10%
+        return (replications * rungs * len(rates)
+                * int(max(rates) * duration_s * 1.1))
+
+    smoke = grid_slots(rungs=3, rates=(2.0, 3.0, 3.75), replications=2,
+                       duration_s=90.0)
+    assert smoke < fastsim._JAX_AUTO_MIN_SLOTS
+    assert resolve_backend("auto", num_servers=1,
+                           total_slots=smoke) == "numpy"
+
+    full = grid_slots(rungs=5, rates=(5.5, 7.3, 9.1), replications=8,
+                      duration_s=900.0)
+    assert full >= fastsim._JAX_AUTO_MIN_SLOTS
+    assert resolve_backend("auto", num_servers=1, total_slots=full) == (
+        "jax" if jax_available() else "numpy")
+    # a fork-join-wide pool disqualifies the grid regardless of size
+    assert resolve_backend(
+        "auto", num_servers=fastsim._JAX_MAX_SERVERS + 1,
+        total_slots=full) == "numpy"
+
+
+# --------------------------------------------------------------------------
+# Planner.validate backend forwarding
+# --------------------------------------------------------------------------
+
+
+def _tiny_plan():
+    from repro.core.planner import Planner
+
+    def profiler(config, n):
+        _, mean = config
+        return [mean * (0.8 + 0.4 * i / (n - 1)) for i in range(n)]
+
+    planner = Planner(profiler=profiler)
+    plan = planner.plan({("fast", 0.10): 0.80, ("slow", 0.30): 0.90},
+                        slo_p95_s=1.0)
+    return planner, plan
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "auto"])
+def test_planner_validate_forwards_backend_verbatim(monkeypatch, backend):
+    """``Planner.validate`` must hand its ``backend`` argument to
+    :func:`simulate_batch` untouched — resolution (including the jax ->
+    numpy fallback) belongs to the sweep engine, so the Planner forwards
+    even ``"jax"`` on a host without jax rather than resolving early."""
+    seen = {}
+
+    class _StubSweep:
+        total_requests = 1234
+
+        def over_replications(self):
+            k, l = len(seen["means"]), len(seen["rates"])
+            grid = [[0.0] * l for _ in range(k)]
+            return {"mean_wait_s": grid, "p95_latency_s": grid,
+                    "slo_compliance": [[1.0] * l for _ in range(k)]}
+
+    def stub(means, p95s, *, arrival_rates_qps, backend, **kw):
+        seen.update(means=list(means), rates=list(arrival_rates_qps),
+                    backend=backend, kw=kw)
+        return _StubSweep()
+
+    monkeypatch.setattr(fastsim, "simulate_batch", stub)
+    planner, plan = _tiny_plan()
+    val = planner.validate(plan, duration_s=30.0, replications=2,
+                           backend=backend)
+    assert seen["backend"] == backend
+    assert len(seen["means"]) == plan.table.ladder_size
+    # the stub's grids landed in the validation result unresolved
+    assert val.num_requests == 1234
+    assert val.slo_compliance == tuple(
+        (1.0,) * len(seen["rates"]) for _ in seen["means"])
+
+
+def test_planner_validate_default_backend_is_auto(monkeypatch):
+    seen = {}
+
+    class _StubSweep:
+        total_requests = 1
+
+        def over_replications(self):
+            return {"mean_wait_s": [[0.0]], "p95_latency_s": [[0.0]],
+                    "slo_compliance": [[1.0]]}
+
+    def stub(means, p95s, *, backend, **kw):
+        seen["backend"] = backend
+        return _StubSweep()
+
+    monkeypatch.setattr(fastsim, "simulate_batch", stub)
+    planner, plan = _tiny_plan()
+    planner.validate(plan, arrival_rates_qps=[2.0], duration_s=30.0,
+                     replications=1)
+    assert seen["backend"] == "auto"
