@@ -12,6 +12,12 @@ from repro.core.compass_v import CompassV, exhaustive_search
 from repro.core.elastico import ElasticoController
 from repro.core.planner import Planner
 from repro.serving import fastsim
+
+# the canonical volatile-key filter lives with the benchmark-history
+# schema (the trajectory serializer scrubs run context with the same
+# notion of "wall-clock dependent" the stable artifacts use); re-exported
+# here so benchmark modules and tests keep importing it from common
+from repro.tools.benchhist import VOLATILE_KEYS, scrub_volatile  # noqa: F401
 from repro.serving.workload import (
     bursty_pattern,
     diurnal_pattern,
@@ -25,38 +31,19 @@ EXPERIMENTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 RAG_BUDGET = (10, 25, 50, 100)
 DET_BUDGET = (20, 50, 100, 200)
 
-
-# Keys whose values depend on the wall clock or the host rather than on the
-# benchmark's seeds: timing fields, throughput derived from timing, and the
-# provenance metadata block (timestamp + platform/library versions).  Smoke
-# artifacts are rewritten by the tier-1 subprocess gates on every test run,
-# so anything volatile in them turns every `pytest` into a dirty working
-# tree and every smoke rerun into artifact churn.
-VOLATILE_KEYS = frozenset({
-    "timestamp_utc",
-    "wall_s",
-    "rps",
-    "sps",
-    "us_per_call",
-    "metadata",
-})
-
-
-def scrub_volatile(payload, volatile: frozenset = VOLATILE_KEYS):
-    """Recursively drop wall-clock / host-dependent keys from a payload so
-    that reruns with the same seeds serialize byte-identically."""
-    if isinstance(payload, dict):
-        return {k: scrub_volatile(v, volatile)
-                for k, v in payload.items() if k not in volatile}
-    if isinstance(payload, (list, tuple)):
-        return [scrub_volatile(v, volatile) for v in payload]
-    return payload
+# Pre-scrub payload of the most recent save_json() per artifact name.
+# `benchmarks.run --record` extracts trajectory measurements from here so
+# wall-clock values (throughput, speedups) are recordable even when the
+# on-disk smoke artifact is stable-scrubbed for byte-idempotence.
+LAST_PAYLOADS: Dict[str, object] = {}
 
 
 def save_json(name: str, payload, *, stable: bool = False) -> str:
     """Write an experiment artifact.  ``stable=True`` scrubs volatile keys
     (:func:`scrub_volatile`) first — use it for smoke artifacts that test
-    gates regenerate, so reruns are diff-clean."""
+    gates regenerate, so reruns are diff-clean.  The pre-scrub payload is
+    kept in :data:`LAST_PAYLOADS` for ``--record``."""
+    LAST_PAYLOADS[name] = payload
     if stable:
         payload = scrub_volatile(payload)
     os.makedirs(EXPERIMENTS_DIR, exist_ok=True)

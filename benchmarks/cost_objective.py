@@ -11,7 +11,37 @@ from __future__ import annotations
 from repro.core.cost import annotate_costs, timeline_cost
 from repro.core.elastico import ElasticoController
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, paper_arrivals, plan_for, save_json, simulate
+
+
+def _run_row(p, variant):
+    return next(r for r in p["runs"] if r["variant"] == variant)
+
+
+# Trajectory measurements (BENCH_cost_objective.json): the cost story —
+# Elastico's $/1k requests, the saving vs static-accurate, and the
+# compliance it holds while saving.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="cost_objective.json",
+    measurements=(
+        MeasurementSpec(
+            "elastico_usd_per_1k", "usd", False,
+            extract=lambda p: _run_row(p, "elastico")["usd_per_1k"],
+            tolerance=0.10),
+        MeasurementSpec(
+            "cost_saving_vs_static_accurate", "frac", True,
+            extract=lambda p: (
+                1.0 - _run_row(p, "elastico")["usd_per_1k"]
+                / _run_row(p, "static-accurate")["usd_per_1k"]),
+            tolerance=0.15),
+        MeasurementSpec(
+            "elastico_compliance", "frac", True,
+            extract=lambda p: _run_row(p, "elastico")["compliance"],
+            tolerance=0.05),
+    ),
+)
 from .table1_baselines import build_plan
 
 SLO_S = 1.0

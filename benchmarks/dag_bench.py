@@ -44,7 +44,42 @@ from repro.serving.dag import (
 from repro.serving.workload import diurnal_pattern, generate_arrivals
 from repro.workflows.surrogate import RagSurrogate
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import RAG_BUDGET, Timer, make_profiler, save_json, search
+
+# Trajectory measurements (BENCH_dag_bench.json): the pipeline-switching
+# headline — dynamic compliance AND its margins over both statics — plus
+# the network-model fit.  All seed-deterministic (virtual-time metrics),
+# so they tolerate only small drift (tolerance 5%; the compliance gap has
+# more replication noise at smoke sizes, so it gets 15%).
+BENCH_SPEC = BenchmarkSpec(
+    artifact="dag_bench.json",
+    smoke_artifact="dag_bench_smoke.json",
+    measurements=(
+        MeasurementSpec("dynamic_compliance", "frac", True,
+                        path="diurnal.dynamic.slo_compliance",
+                        tolerance=0.05),
+        MeasurementSpec("dynamic_accuracy", "frac", True,
+                        path="diurnal.dynamic.mean_accuracy",
+                        tolerance=0.05),
+        MeasurementSpec(
+            "compliance_gain_vs_static_accurate", "pts", True,
+            extract=lambda p: (p["diurnal"]["dynamic"]["slo_compliance"]
+                               - p["diurnal"]["static_accurate"]
+                               ["slo_compliance"]),
+            tolerance=0.15),
+        MeasurementSpec(
+            "accuracy_gain_vs_static_fast", "pts", True,
+            extract=lambda p: (p["diurnal"]["dynamic"]["mean_accuracy"]
+                               - p["diurnal"]["static_fast"]
+                               ["mean_accuracy"]),
+            tolerance=0.15),
+        MeasurementSpec("sojourn_model_max_rel_err", "frac", False,
+                        path="network_model.sojourn_max_rel_err",
+                        tolerance=0.25),
+    ),
+)
 from .fastsim_bench import run_metadata
 
 TAU = 0.75          # relative-accuracy floor (table1/fig7 setting)

@@ -11,7 +11,25 @@ from __future__ import annotations
 from repro.core.pareto import LatencyProfile, ParetoPoint, pareto_front
 from repro.workflows.surrogate import RagSurrogate
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, make_profiler, save_json
+
+# Trajectory measurements (BENCH_fig1_pareto.json): the paper's headline
+# Pareto trade — P95 speedup bought within the 2% accuracy envelope
+# (paper: 1.6x / 2%) — plus the front size the search surfaces.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig1_pareto.json",
+    measurements=(
+        MeasurementSpec("p95_speedup_within_2pct", "x", True,
+                        path="headline.p95_speedup_within_2pct",
+                        tolerance=0.05),
+        MeasurementSpec("accuracy_drop", "frac", False,
+                        path="headline.accuracy_drop", tolerance=0.25),
+        MeasurementSpec("front_size", "configs", True, path="front_size",
+                        tolerance=0.15),
+    ),
+)
 from repro.core.planner import summarize_latencies
 
 

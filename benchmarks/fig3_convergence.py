@@ -8,7 +8,28 @@ from __future__ import annotations
 
 from repro.workflows.surrogate import RagSurrogate, paper_rag_thresholds
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import RAG_BUDGET, Timer, ground_truth, save_json, search
+
+# Trajectory measurements (BENCH_fig3_convergence.json): anytime
+# convergence vs the exhaustive grid — worst-case recall across the
+# paper's tau thresholds (claim: 100%) and the mean fraction of grid
+# samples COMPASS-V spends to get there.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig3_convergence.json",
+    measurements=(
+        MeasurementSpec(
+            "min_recall", "frac", True,
+            extract=lambda rows: min(r["recall"] for r in rows),
+            target=1.0, tolerance=0.01),
+        MeasurementSpec(
+            "mean_sample_fraction", "frac", False,
+            extract=lambda rows: (sum(r["samples"] for r in rows)
+                                  / sum(r["grid_samples"] for r in rows)),
+            tolerance=0.15),
+    ),
+)
 
 
 def run() -> dict:

@@ -14,7 +14,32 @@ from repro.workflows.surrogate import (
     paper_rag_thresholds,
 )
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import DET_BUDGET, RAG_BUDGET, Timer, ground_truth, save_json, search
+
+
+def _all_rows(p):
+    return p["rag"] + p["detection"]
+
+
+# Trajectory measurements (BENCH_fig4_efficiency.json): the efficiency
+# study across 16 thresholds x 2 workflows — worst-case recall (claim:
+# 100%) and mean evaluation savings (paper: 57.5% mean).
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig4_efficiency.json",
+    measurements=(
+        MeasurementSpec(
+            "min_recall", "frac", True,
+            extract=lambda p: min(r["recall"] for r in _all_rows(p)),
+            target=1.0, tolerance=0.01),
+        MeasurementSpec(
+            "mean_savings", "frac", True,
+            extract=lambda p: (sum(r["savings"] for r in _all_rows(p))
+                               / len(_all_rows(p))),
+            tolerance=0.15),
+    ),
+)
 
 
 def sweep(sur, thresholds, budget):

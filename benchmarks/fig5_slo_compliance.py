@@ -9,7 +9,43 @@ from __future__ import annotations
 
 from repro.core.elastico import ElasticoController
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, paper_arrivals, save_json, simulate
+
+
+def _variant(rows, name):
+    return [r for r in rows if r["variant"] == name]
+
+
+# Trajectory measurements (BENCH_fig5_slo_compliance.json): Elastico's
+# compliance band across the pattern x SLO grid (paper: 90-98%) and its
+# accuracy margin over the always-fast static baseline.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig5_slo_compliance.json",
+    measurements=(
+        MeasurementSpec(
+            "elastico_min_compliance", "frac", True,
+            extract=lambda rows: min(r["compliance"]
+                                     for r in _variant(rows, "elastico")),
+            tolerance=0.10),
+        MeasurementSpec(
+            "elastico_mean_accuracy", "frac", True,
+            extract=lambda rows: (
+                sum(r["mean_accuracy"] for r in _variant(rows, "elastico"))
+                / len(_variant(rows, "elastico"))),
+            tolerance=0.05),
+        MeasurementSpec(
+            "accuracy_gain_vs_static_fast", "pts", True,
+            extract=lambda rows: (
+                sum(r["mean_accuracy"] for r in _variant(rows, "elastico"))
+                / len(_variant(rows, "elastico"))
+                - sum(r["mean_accuracy"]
+                      for r in _variant(rows, "static-fast"))
+                / len(_variant(rows, "static-fast"))),
+            tolerance=0.25),
+    ),
+)
 from .table1_baselines import build_plan
 
 

@@ -11,7 +11,25 @@ import numpy as np
 
 from repro.core.elastico import ElasticoController
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, paper_arrivals, plan_for, save_json, simulate
+
+# Trajectory measurements (BENCH_fig6_latency_cdf.json): the latency-CDF
+# cut at the spike/1000ms cell — Elastico's compliance and tail.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig6_latency_cdf.json",
+    measurements=(
+        MeasurementSpec("elastico_compliance", "frac", True,
+                        path="elastico.compliance", tolerance=0.05),
+        MeasurementSpec("elastico_p95_ms", "ms", False,
+                        path="elastico.percentiles_ms.p95",
+                        tolerance=0.15),
+        MeasurementSpec("elastico_p99_ms", "ms", False,
+                        path="elastico.percentiles_ms.p99",
+                        tolerance=0.25),
+    ),
+)
 from .table1_baselines import build_plan
 
 SLO_S = 1.0

@@ -9,7 +9,24 @@ from __future__ import annotations
 
 from repro.core.elastico import ElasticoController
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, paper_arrivals, plan_for, save_json, simulate
+
+# Trajectory measurements (BENCH_fig7_timeseries.json): temporal
+# adaptation — how fast the controller reacts to the spike edge and what
+# compliance/accuracy the whole run sustains.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fig7_timeseries.json",
+    measurements=(
+        MeasurementSpec("reaction_to_spike_s", "s", False,
+                        path="reaction_to_spike_s", tolerance=0.25),
+        MeasurementSpec("compliance", "frac", True, path="compliance",
+                        tolerance=0.05),
+        MeasurementSpec("mean_accuracy", "frac", True,
+                        path="mean_accuracy", tolerance=0.05),
+    ),
+)
 from .table1_baselines import build_plan
 
 SLO_S = 1.0

@@ -16,7 +16,31 @@ from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
 from repro.kernels.ssm_scan import ops as ss_ops, ref as ss_ref
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import save_json
+
+# Trajectory measurements (BENCH_kernels_bench.json): per-kernel accuracy
+# vs the reference oracle (deterministic) and the aggregate reference
+# wall time (volatile — it is a timing, so it rides the trajectory with a
+# generous tolerance rather than the stable artifact).
+BENCH_SPEC = BenchmarkSpec(
+    artifact="kernels_bench.json",
+    measurements=(
+        MeasurementSpec(
+            "worst_kernel_abs_err", "abs", False,
+            extract=lambda rows: max(r["max_abs_err_vs_oracle"]
+                                     for r in rows),
+            tolerance=0.50),
+        MeasurementSpec(
+            "kernel_count", "kernels", True,
+            extract=lambda rows: len(rows), tolerance=0.01),
+        MeasurementSpec(
+            "total_ref_wall_us", "us", False,
+            extract=lambda rows: sum(r["ref_wall_us"] for r in rows),
+            volatile=True),
+    ),
+)
 
 
 def time_fn(fn, *args, iters=5):

@@ -67,7 +67,60 @@ from repro.serving.workload import (
     sustained_overload_pattern,
 )
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, save_json
+
+
+def _by(rows, mode, pattern_prefix):
+    """The one row with this mode whose pattern starts with the prefix —
+    the overload factors are config constants, so specs match on the
+    prefix rather than hard-coding them into measurement names."""
+    matches = [r for r in rows if r["mode"] == mode
+               and r["pattern"].startswith(pattern_prefix)]
+    if len(matches) != 1:
+        from repro.tools.benchhist import BenchHistError
+
+        raise BenchHistError(
+            f"expected exactly one row with mode={mode!r} "
+            f"pattern~{pattern_prefix!r}, found {len(matches)}")
+    return matches[0]
+
+
+# Trajectory measurements (BENCH_multi_server.json): one headline per
+# serving-substrate PR — batching goodput gain (PR 3), work-stealing vs
+# pinned goodput (PR 4), mix-shifting compliance under overload (PR 2) —
+# all virtual-time metrics, deterministic given the seeds.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="multi_server_bench.json",
+    smoke_artifact="multi_server_bench_smoke.json",
+    measurements=(
+        MeasurementSpec(
+            "batch_goodput_gain", "x", True,
+            extract=lambda rows: (
+                _by(rows, "batched", "batch-overload")["goodput"]
+                / max(_by(rows, "unbatched", "batch-overload")["goodput"],
+                      1e-9)),
+            target=1.5, tolerance=0.10),
+        MeasurementSpec(
+            "steal_goodput", "frac", True,
+            extract=lambda rows: _by(rows, "pinned-steal",
+                                     "steal-overload")["goodput"],
+            tolerance=0.05),
+        MeasurementSpec(
+            "steal_gain_vs_pinned", "x", True,
+            extract=lambda rows: (
+                _by(rows, "pinned-steal", "steal-overload")["goodput"]
+                / max(_by(rows, "pinned-no-steal",
+                          "steal-overload")["goodput"], 1e-9)),
+            tolerance=0.10),
+        MeasurementSpec(
+            "mix_shift_overload_compliance", "frac", True,
+            extract=lambda rows: _by(rows, "mix-shifting",
+                                     "sustained-overload")["compliance"],
+            tolerance=0.10),
+    ),
+)
 
 # synthetic three-rung ladder, the shape of the paper's Table I (seconds)
 MEANS = [0.10, 0.25, 0.45]
@@ -146,7 +199,8 @@ def _row(pattern, mode, c, arrivals, out, duration_s, extra=None):
 
 
 def _run(duration_s: float, pool_sizes,
-         artifact: str = "multi_server_bench.json") -> dict:
+         artifact: str = "multi_server_bench.json",
+         stable: bool = False) -> dict:
     sampler = lognormal_sampler_from_profile(MEANS, P95S)
     traces = _traces(duration_s)
     rows = []
@@ -269,7 +323,7 @@ def _run(duration_s: float, pool_sizes,
                  "steal_threshold": n_steal,
                  "stolen_batches": out.stolen_batches},
             ))
-    save_json(artifact, rows)
+    save_json(artifact, rows, stable=stable)
 
     by_key = {(r["pattern"], r["mode"], r["num_servers"]): r for r in rows
               if r["mode"] != "static-mix"}
@@ -347,9 +401,11 @@ def run() -> dict:
 
 def run_smoke() -> dict:
     """Smallest setting: 30 s horizon, pool sizes {1, 4}; same code paths.
-    Writes its own artifact so the smoke gate never overwrites the
-    committed full-run experiment evidence."""
-    return _run(30.0, (1, MIX_C), artifact="multi_server_bench_smoke.json")
+    Writes its own stable-scrubbed artifact so the smoke gate never
+    overwrites the committed full-run experiment evidence and reruns are
+    byte-identical."""
+    return _run(30.0, (1, MIX_C), artifact="multi_server_bench_smoke.json",
+                stable=True)
 
 
 if __name__ == "__main__":

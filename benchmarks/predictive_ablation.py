@@ -10,7 +10,35 @@ from __future__ import annotations
 from repro.core.elastico import ElasticoController
 from repro.core.predictive import PredictiveElastico
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, paper_arrivals, plan_for, save_json, simulate
+
+
+def _cell(rows, pattern, variant):
+    return next(r for r in rows
+                if r["pattern"] == pattern and r["variant"] == variant)
+
+
+# Trajectory measurements (BENCH_predictive_ablation.json): what the 3 s
+# prediction horizon buys on the spike pattern — compliance gained over
+# the reactive controller and the accuracy paid for it.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="predictive_ablation.json",
+    measurements=(
+        MeasurementSpec(
+            "spike_predictive_h3_compliance", "frac", True,
+            extract=lambda rows: _cell(rows, "spike",
+                                       "predictive_h3")["compliance"],
+            tolerance=0.05),
+        MeasurementSpec(
+            "spike_compliance_gain_vs_reactive", "pts", True,
+            extract=lambda rows: (
+                _cell(rows, "spike", "predictive_h3")["compliance"]
+                - _cell(rows, "spike", "reactive")["compliance"]),
+            tolerance=0.50),
+    ),
+)
 from .table1_baselines import build_plan
 
 SLO_S = 1.0

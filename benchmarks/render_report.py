@@ -386,6 +386,25 @@ the §Roofline table.
         w("")
 
 
+def section_benchhist(w):
+    from repro.tools import benchhist
+
+    repo_root = os.path.join(EXPERIMENTS_DIR, "..")
+    trends = benchhist.render_trends(repo_root)
+    if not trends:
+        return
+    w("## §Benchmark history — per-PR perf trajectories\n")
+    w("Every registered benchmark records its gate-worthy measurements into "
+      "an append-only `BENCH_<name>.json` trajectory at the repo root "
+      "(`python -m benchmarks.run --smoke --record`); "
+      "`python -m benchmarks.run --gate-all` compares the latest run against "
+      "the median of the recent same-mode window and fails on any "
+      "direction-aware regression beyond the per-measurement tolerance "
+      "(docs/performance.md §9).\n")
+    for line in trends:
+        w(line)
+
+
 def main() -> None:
     base = load("dryrun_results.jsonl") or []
     opt = load("dryrun_results_optimized.jsonl") or []
@@ -442,6 +461,7 @@ def main() -> None:
     section_dryrun(w, base, opt)
     section_roofline(w, base, opt)
     section_perf(w)
+    section_benchhist(w)
 
     with open(OUT, "w") as f:
         f.write("\n".join(lines))

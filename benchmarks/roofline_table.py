@@ -12,9 +12,41 @@ import json
 import os
 from collections import Counter
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import EXPERIMENTS_DIR, save_json
 
 DRYRUN = os.path.join(EXPERIMENTS_DIR, "dryrun_results.jsonl")
+
+
+def _single_pod(rows):
+    return [r for r in rows if r["mesh"] == "16x16"]
+
+
+def _geomean_step_bound(rows):
+    import math
+
+    bounds = [r["step_lower_bound_s"] for r in _single_pod(rows)]
+    return math.exp(sum(math.log(b) for b in bounds) / len(bounds))
+
+
+# Trajectory measurements (BENCH_roofline_table.json): the roofline
+# surface — every (arch x shape) pair still compiles (40 on the single
+# pod), and the geometric-mean step lower bound across them, the one
+# number that moves when an optimization (or a regression) lands in the
+# analytic serving model.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="roofline_table.json",
+    measurements=(
+        MeasurementSpec(
+            "single_pod_pairs", "pairs", True,
+            extract=lambda rows: len(_single_pod(rows)),
+            target=40.0, tolerance=0.01),
+        MeasurementSpec(
+            "geomean_step_bound_s", "s", False,
+            extract=_geomean_step_bound, tolerance=0.10),
+    ),
+)
 
 
 def load_rows():

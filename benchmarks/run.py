@@ -1,8 +1,9 @@
 """Benchmark driver: one function per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--record] [name ...]
         PYTHONPATH=src python -m benchmarks.run --check-docs
         PYTHONPATH=src python -m benchmarks.run --perf-gate
+        PYTHONPATH=src python -m benchmarks.run --gate-all [--bench-dir=PATH]
 
 Prints ``name,us_per_call,derived`` CSV and writes per-benchmark JSON
 artifacts into experiments/.  ``--check-docs`` runs the documentation
@@ -15,20 +16,41 @@ paths) runs that; modules without one run their normal ``run()`` — the
 fallback keeps the smoke sweep total, so a bit-rotted benchmark fails fast
 either way.  CI uses this as a cheap all-benchmarks gate.
 
+``--record`` appends one :class:`repro.tools.benchhist.BenchRun` per
+successfully-run benchmark to its ``BENCH_<name>.json`` trajectory
+(repo root by default; ``--bench-dir=PATH`` redirects, which is how tests
+record into a tmpdir without touching the committed history).  Each
+module declares its gate-worthy measurements as a module-level
+``BENCH_SPEC`` (:class:`repro.tools.benchhist.BenchmarkSpec`); recording
+a benchmark without one is a loud failure, not a silent skip.
+
+``--gate-all`` is the suite-wide regression gate
+(:func:`repro.tools.benchhist.gate_all`): every trajectory's newest run
+is compared per-measurement against the median of its recent same-mode
+history, direction-aware, and the process exits non-zero listing every
+violated measurement.  It runs on recorded data only (no re-measurement),
+so it is cheap enough for tier-1.
+
 ``--perf-gate`` re-measures the fast-path simulation throughput at the
 small fixed gate configuration (:mod:`benchmarks.fastsim_bench`) and
 compares it against the committed ``experiments/fastsim_bench.json``
 baseline, exiting non-zero on a >30% regression — the guard that keeps
 the vectorized engine from quietly rotting back toward event-heap speed.
 Run as a tier-1 subprocess gate by ``tests/test_benchmarks.py``.
+
+Any unknown flag exits 2 with usage on stderr — a typo'd gate flag must
+fail loudly, not fall through to a full-settings run of every benchmark
+with exit code 0.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 from . import (
+    common,
     cost_objective,
     dag_bench,
     fastsim_bench,
@@ -68,30 +90,94 @@ MODULES = {
 
 BENCHES = {name: mod.run for name, mod in MODULES.items()}
 
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+USAGE = ("usage: python -m benchmarks.run [--smoke] [--record] "
+         "[--bench-dir=PATH] [name ...] | --check-docs | --perf-gate | "
+         "--gate-all [--bench-dir=PATH]")
+
+
+def _usage_error(msg: str) -> None:
+    print(msg, file=sys.stderr)
+    print(USAGE, file=sys.stderr)
+    sys.exit(2)
+
+
+def _record(name: str, smoke: bool, bench_dir: str, env: dict) -> None:
+    """Append one BenchRun for a benchmark that just ran successfully."""
+    from repro.tools import benchhist
+
+    mod = MODULES[name]
+    spec = getattr(mod, "BENCH_SPEC", None)
+    if spec is None:
+        raise benchhist.BenchHistError(
+            f"benchmark {name!r} declares no BENCH_SPEC — every registered "
+            f"benchmark must name its gate-worthy measurements "
+            f"(see repro.tools.benchhist.BenchmarkSpec)")
+    # the *effective* mode: --smoke on a module without run_smoke runs the
+    # full benchmark, and its measurements must gate against full history
+    mode = "smoke" if smoke and getattr(mod, "run_smoke", None) else "full"
+    artifact = spec.artifact_for(mode)
+    payload = common.LAST_PAYLOADS.get(artifact)
+    if payload is None:
+        # a benchmark may legitimately skip without writing its artifact
+        # (e.g. roofline_table on a checkout without the dry-run input);
+        # skipping the record is correct — there is nothing to gate
+        print(f"record: {name}: no {artifact!r} payload this run, skipping",
+              file=sys.stderr)
+        return
+    measurements = spec.collect(payload, mode)
+    run = benchhist.build_run(name, mode, measurements, env=env,
+                              context={"artifact": artifact})
+    path = benchhist.append_run(bench_dir, run)
+    rel = os.path.relpath(path)
+    shown = rel if not rel.startswith(os.pardir) else path
+    print(f"recorded {shown} "
+          f"(+{len(measurements)} measurements, mode={mode})",
+          file=sys.stderr)
+
 
 def main() -> None:
     args = sys.argv[1:]
-    known_flags = {"--smoke", "--check-docs", "--perf-gate"}
-    unknown = [a for a in args if a.startswith("--") and a not in known_flags]
-    if unknown:
-        # a typo'd gate flag must fail loudly, not fall through to a
-        # full-settings run of every benchmark with exit code 0.
-        print(f"unknown flag(s): {' '.join(unknown)}", file=sys.stderr)
-        print("usage: python -m benchmarks.run [--smoke] [name ...] | "
-              "--check-docs | --perf-gate", file=sys.stderr)
-        sys.exit(2)
-    if "--check-docs" in args:
+    known_flags = {"--smoke", "--check-docs", "--perf-gate", "--record",
+                   "--gate-all"}
+    bench_dir = REPO_ROOT
+    flags, names = [], []
+    for a in args:
+        if a.startswith("--bench-dir="):
+            bench_dir = a.split("=", 1)[1]
+            if not bench_dir:
+                _usage_error("--bench-dir= requires a path")
+        elif a.startswith("--"):
+            if a not in known_flags:
+                _usage_error(f"unknown flag(s): {a}")
+            flags.append(a)
+        else:
+            names.append(a)
+    if "--check-docs" in flags:
         from repro.tools.docscheck import main as docscheck_main
 
         sys.exit(docscheck_main())
-    if "--perf-gate" in args:
-        import os
-
-        baseline = os.path.join(os.path.dirname(__file__), "..",
-                                "experiments", "fastsim_bench.json")
+    if "--perf-gate" in flags:
+        baseline = os.path.join(REPO_ROOT, "experiments",
+                                "fastsim_bench.json")
         sys.exit(fastsim_bench.perf_gate(baseline))
-    smoke = "--smoke" in args
-    names = [a for a in args if not a.startswith("--")] or list(BENCHES)
+    if "--gate-all" in flags:
+        from repro.tools.benchhist import gate_all
+
+        sys.exit(gate_all(bench_dir))
+    smoke = "--smoke" in flags
+    record = "--record" in flags
+    unknown_names = [n for n in names if n not in BENCHES]
+    if unknown_names:
+        _usage_error(f"unknown benchmark(s): {' '.join(unknown_names)} "
+                     f"(known: {' '.join(sorted(BENCHES))})")
+    names = names or list(BENCHES)
+    env = None
+    if record:
+        from repro.tools import benchhist
+
+        env = benchhist.collect_environment()
     print("name,us_per_call,derived")
     failed = []
     for name in names:
@@ -101,6 +187,8 @@ def main() -> None:
                 fn = getattr(MODULES[name], "run_smoke", fn)
             row = fn()
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            if record:
+                _record(name, smoke, bench_dir, env)
         except Exception:
             failed.append(name)
             traceback.print_exc()

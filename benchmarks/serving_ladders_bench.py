@@ -25,7 +25,36 @@ from repro.core.planner import Planner
 from repro.launch.analytic import serving_config_costs
 from repro.models.registry import arch_ids, get_config
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import Timer, save_json
+
+# Trajectory measurements (BENCH_serving_ladders.json): the ladder
+# surface across all assigned architectures — how many spaces produced a
+# ladder, the widest rung speedup, and the validated fast-rung compliance
+# floor.  All derived from the analytic roofline + seeded sweeps, so
+# drift means the planning pipeline itself changed.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="serving_ladders.json",
+    smoke_artifact="serving_ladders_smoke.json",
+    measurements=(
+        MeasurementSpec(
+            "ladder_count", "ladders", True,
+            extract=lambda rows: sum(1 for r in rows if "ladder" in r),
+            tolerance=0.01),
+        MeasurementSpec(
+            "max_rung_speedup", "x", True,
+            extract=lambda rows: max(r["speedup"] for r in rows
+                                     if "ladder" in r),
+            tolerance=0.05),
+        MeasurementSpec(
+            "fast_rung_min_compliance", "frac", True,
+            extract=lambda rows: min(
+                r["fast_rung_min_compliance"] for r in rows
+                if "fast_rung_min_compliance" in r),
+            tolerance=0.10),
+    ),
+)
 
 # import the space builder from the example (single source of truth)
 import importlib.util
@@ -76,7 +105,7 @@ def build_ladder(arch: str, *, validate_duration_s: float = 10.0,
 
 
 def run(*, validate_duration_s: float = 10.0, validate_replications: int = 3,
-        artifact: str = "serving_ladders.json") -> dict:
+        artifact: str = "serving_ladders.json", stable: bool = False) -> dict:
     rows = []
     validated_requests = 0
     with Timer() as t:
@@ -112,7 +141,7 @@ def run(*, validate_duration_s: float = 10.0, validate_replications: int = 3,
                     wait_model_max_rel_err=validation.wait_model_error(),
                 )
             rows.append(row)
-    save_json(artifact, rows)
+    save_json(artifact, rows, stable=stable)
     withladders = [r for r in rows if "ladder" in r]
     max_speedup = max(r["speedup"] for r in withladders)
     validated = [r for r in rows if "fast_rung_min_compliance" in r]
@@ -130,10 +159,11 @@ def run(*, validate_duration_s: float = 10.0, validate_replications: int = 3,
 
 
 def run_smoke() -> dict:
-    """Same ladders, smallest validation sweep; writes its own artifact so
-    the smoke gate never overwrites the committed full-run evidence."""
+    """Same ladders, smallest validation sweep; writes its own
+    stable-scrubbed artifact so the smoke gate never overwrites the
+    committed full-run evidence and reruns are byte-identical."""
     return run(validate_duration_s=2.0, validate_replications=2,
-               artifact="serving_ladders_smoke.json")
+               artifact="serving_ladders_smoke.json", stable=True)
 
 
 if __name__ == "__main__":

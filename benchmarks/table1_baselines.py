@@ -7,7 +7,28 @@ report the fastest / middle / most-accurate rungs.
 
 from __future__ import annotations
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import RAG_BUDGET, Timer, plan_for, save_json, search
+
+# Trajectory measurements (BENCH_table1_baselines.json): the named
+# baseline ladder — its size, the accurate rung's accuracy ceiling and
+# the fast rung's p95 floor (the two ends paper Table I anchors).
+BENCH_SPEC = BenchmarkSpec(
+    artifact="table1_baselines.json",
+    measurements=(
+        MeasurementSpec("ladder_size", "rungs", True, path="ladder_size",
+                        tolerance=0.01),
+        MeasurementSpec(
+            "accurate_rung_accuracy", "frac", True,
+            extract=lambda p: max(r["accuracy"] for r in p["rows"]),
+            tolerance=0.05),
+        MeasurementSpec(
+            "fast_rung_p95_ms", "ms", False,
+            extract=lambda p: min(r["p95_ms"] for r in p["rows"]),
+            tolerance=0.10),
+    ),
+)
 from repro.workflows.surrogate import RagSurrogate
 
 

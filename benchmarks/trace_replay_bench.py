@@ -40,7 +40,32 @@ from repro.serving.traces import (
 )
 from repro.workflows.surrogate import RagSurrogate
 
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
 from .common import RAG_BUDGET, Timer, make_profiler, save_json, search
+
+# Trajectory measurements (BENCH_trace_replay.json): the streaming-replay
+# throughput headline (wall-clock, volatile, recorded from the pre-scrub
+# payload) plus the seed-deterministic replay quality surface — the fast
+# rung's diurnal compliance and the Planner-validation wait-model fit.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="trace_replay.json",
+    smoke_artifact="trace_replay_smoke.json",
+    measurements=(
+        MeasurementSpec("diurnal_replay_rps", "req/s", True,
+                        path="diurnal.rps", volatile=True),
+        MeasurementSpec("flash_crowd_replay_rps", "req/s", True,
+                        path="flash_crowd.rps", volatile=True),
+        MeasurementSpec("diurnal_requests", "requests", True,
+                        path="diurnal.requests", tolerance=0.01),
+        MeasurementSpec("diurnal_fast_rung_compliance", "frac", True,
+                        path="diurnal.rungs.0.slo_compliance",
+                        tolerance=0.05),
+        MeasurementSpec("wait_model_max_rel_err", "frac", False,
+                        path="validation.wait_model_max_rel_err",
+                        tolerance=0.25),
+    ),
+)
 from .fastsim_bench import run_metadata
 
 TAU = 0.75          # relative-accuracy floor (table1/fig7 setting)

@@ -4,4 +4,9 @@
   when documentation names a module, function, file, or CLI flag that no
   longer exists.  Wired into tier-1 via ``tests/test_docs.py`` and runnable
   standalone through ``python -m benchmarks.run --check-docs``.
+- :mod:`repro.tools.benchhist` — benchmark-history telemetry: the
+  Measurement/BenchRun schema, the append-only ``BENCH_<name>.json``
+  trajectory store, and the suite-wide regression detector behind
+  ``python -m benchmarks.run --record`` / ``--gate-all`` (see
+  docs/performance.md §9).
 """

@@ -1,0 +1,730 @@
+"""Benchmark-history telemetry: per-PR perf trajectories + regression gating.
+
+Every benchmark in ``benchmarks/run.py``'s registry makes quantitative
+claims — batching goodput, fast-path speedup, trace-replay rate, DAG
+compliance — but until this module only the fastsim gate
+(``--perf-gate``) guarded one of them against one committed baseline.
+This module is the structured measurement surface for *all* of them:
+
+- **Schema** — :class:`Measurement` (one named, unit-carrying, direction-
+  aware number) and :class:`BenchRun` (one recorded invocation: git SHA,
+  timestamp, platform, backend and library versions, plus its
+  measurements).  Construction validates strictly; parsing rejects
+  malformed or missing fields with actionable messages instead of
+  silently skipping records.
+- **Trajectory store** — one append-only ``BENCH_<benchmark>.json`` per
+  registered benchmark at the repo root, appended by
+  ``python -m benchmarks.run --record`` after any full or smoke run
+  (:func:`append_run` / :func:`load_trajectory`).  Serialization is
+  byte-stable (sorted keys, fixed indent), so serialize → parse →
+  serialize round-trips identically and appends produce minimal diffs.
+- **Regression detection** — :func:`detect_regressions` generalizes
+  ``fastsim_bench.perf_gate``: the newest run's value for each
+  measurement is compared against the **median of the most recent
+  window** of same-mode predecessors, with a per-measurement tolerance
+  and the comparison direction taken from ``higher_is_better``.
+  :func:`gate_all` applies it to every trajectory in a directory and is
+  wired as ``python -m benchmarks.run --gate-all``.
+- **Declaration layer** — benchmark modules declare their gate-worthy
+  measurements as a :class:`BenchmarkSpec` of :class:`MeasurementSpec`
+  entries (a dotted path into the artifact payload, or an ``extract``
+  callable for list-shaped artifacts).  ``benchmarks/run.py --record``
+  collects them from the just-written artifact payload *before* volatile
+  scrubbing, so throughput measurements survive even where the on-disk
+  smoke artifact is scrubbed for byte-idempotence.
+
+:data:`VOLATILE_KEYS` / :func:`scrub_volatile` live here (re-exported by
+``benchmarks/common.py``) because both the artifact writer and the
+trajectory serializer need the same notion of "wall-clock / host
+dependent": a :class:`BenchRun`'s free-form ``context`` block is scrubbed
+with the same function the smoke artifacts use.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+import statistics
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Keys whose values depend on the wall clock or the host rather than on a
+#: benchmark's seeds: timing fields, throughput derived from timing, timing
+#: ratios, and provenance metadata (timestamp + platform/library versions).
+#: Smoke artifacts are rewritten by tier-1 subprocess gates on every test
+#: run, so anything volatile in them turns every ``pytest`` into a dirty
+#: working tree.  Volatile values still belong in the *trajectory* — that
+#: is what :class:`BenchRun` records them for — they just may not live in
+#: a stable-saved artifact.
+VOLATILE_KEYS = frozenset({
+    "timestamp_utc",
+    "wall_s",
+    "rps",
+    "sps",
+    "us_per_call",
+    "metadata",
+    # timing-derived ratios and whole-section timing blocks (fastsim_bench)
+    "single_speedup",
+    "batch_speedup",
+    "jax_batch_speedup",
+    "jax_speedup",
+    "numpy_rps",
+    "jax_rps",
+    "gate",
+    "large_sweep",
+})
+
+
+def scrub_volatile(payload, volatile: frozenset = VOLATILE_KEYS):
+    """Recursively drop wall-clock / host-dependent keys from a payload so
+    that reruns with the same seeds serialize byte-identically."""
+    if isinstance(payload, dict):
+        return {k: scrub_volatile(v, volatile)
+                for k, v in payload.items() if k not in volatile}
+    if isinstance(payload, (list, tuple)):
+        return [scrub_volatile(v, volatile) for v in payload]
+    return payload
+
+
+class BenchHistError(ValueError):
+    """A benchmark-history record or trajectory failed validation.
+
+    Raised instead of silently skipping: a malformed committed trajectory
+    means a regression could hide in an unreadable record, so parsing is
+    strict and every message says which record, which field, and what was
+    expected."""
+
+
+_NAME_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+_MODES = ("full", "smoke")
+
+# ISO-8601 UTC, second resolution — the only timestamp format recorded, so
+# trajectories sort lexicographically by time.
+_TIMESTAMP_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}\+00:00$")
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise BenchHistError(msg)
+
+
+def _as_float(value: Any, what: str) -> float:
+    # bool is an int subclass; a compliance flag recorded as True/False is
+    # a legitimate 0/1 measurement, so coerce instead of rejecting.
+    if isinstance(value, bool):
+        return float(value)
+    _require(isinstance(value, (int, float)),
+             f"{what}: expected a number, got {type(value).__name__} "
+             f"({value!r})")
+    value = float(value)
+    _require(math.isfinite(value), f"{what}: value must be finite, got {value!r}")
+    return value
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One named, direction-aware number from one benchmark run.
+
+    ``higher_is_better`` orients the regression detector (throughput up =
+    good, latency up = bad); ``target`` records an acceptance bar from the
+    benchmark's own criteria (informational — the gate compares against
+    history, not targets); ``tolerance`` overrides the gate's default
+    relative tolerance for this measurement (e.g. a noisy wall-clock
+    throughput tolerates 30%, a deterministic compliance fraction 1%)."""
+
+    name: str
+    value: float
+    unit: str
+    higher_is_better: bool
+    target: Optional[float] = None
+    tolerance: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        _require(isinstance(self.name, str) and _NAME_RE.match(self.name or ""),
+                 f"Measurement.name must match {_NAME_RE.pattern!r}, "
+                 f"got {self.name!r}")
+        object.__setattr__(self, "value",
+                           _as_float(self.value, f"Measurement {self.name!r}"))
+        _require(isinstance(self.unit, str) and bool(self.unit),
+                 f"Measurement {self.name!r}: unit must be a non-empty "
+                 f"string, got {self.unit!r}")
+        _require(isinstance(self.higher_is_better, bool),
+                 f"Measurement {self.name!r}: higher_is_better must be a "
+                 f"bool, got {self.higher_is_better!r}")
+        if self.target is not None:
+            object.__setattr__(
+                self, "target",
+                _as_float(self.target, f"Measurement {self.name!r} target"))
+        if self.tolerance is not None:
+            tol = _as_float(self.tolerance,
+                            f"Measurement {self.name!r} tolerance")
+            _require(0.0 < tol <= 1.0,
+                     f"Measurement {self.name!r}: tolerance must be in "
+                     f"(0, 1], got {tol!r}")
+            object.__setattr__(self, "tolerance", tol)
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "name": self.name,
+            "value": self.value,
+            "unit": self.unit,
+            "higher_is_better": self.higher_is_better,
+        }
+        if self.target is not None:
+            out["target"] = self.target
+        if self.tolerance is not None:
+            out["tolerance"] = self.tolerance
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Any, *, where: str = "measurement") -> "Measurement":
+        _require(isinstance(d, dict),
+                 f"{where}: expected an object, got {type(d).__name__}")
+        required = {"name", "value", "unit", "higher_is_better"}
+        missing = required - d.keys()
+        _require(not missing,
+                 f"{where}: missing required field(s) {sorted(missing)} "
+                 f"(record: {d!r})")
+        unknown = d.keys() - required - {"target", "tolerance"}
+        _require(not unknown,
+                 f"{where}: unknown field(s) {sorted(unknown)} — schema "
+                 f"version {SCHEMA_VERSION} does not define them")
+        return cls(name=d["name"], value=d["value"], unit=d["unit"],
+                   higher_is_better=d["higher_is_better"],
+                   target=d.get("target"), tolerance=d.get("tolerance"))
+
+
+_RUN_REQUIRED = ("benchmark", "mode", "git_sha", "timestamp_utc", "platform",
+                 "python", "numpy", "backend", "measurements")
+_RUN_OPTIONAL = ("jax", "context")
+
+
+@dataclass(frozen=True)
+class BenchRun:
+    """One recorded benchmark invocation: provenance + measurements."""
+
+    benchmark: str
+    mode: str
+    git_sha: str
+    timestamp_utc: str
+    platform: str
+    python: str
+    numpy: str
+    backend: str
+    measurements: Tuple[Measurement, ...]
+    jax: Optional[str] = None
+    context: Optional[Dict[str, Any]] = None
+
+    def __post_init__(self) -> None:
+        _require(isinstance(self.benchmark, str)
+                 and _NAME_RE.match(self.benchmark or ""),
+                 f"BenchRun.benchmark must match {_NAME_RE.pattern!r}, "
+                 f"got {self.benchmark!r}")
+        _require(self.mode in _MODES,
+                 f"BenchRun.mode must be one of {_MODES}, got {self.mode!r}")
+        for fname in ("git_sha", "platform", "python", "numpy", "backend"):
+            v = getattr(self, fname)
+            _require(isinstance(v, str) and bool(v),
+                     f"BenchRun.{fname} must be a non-empty string, "
+                     f"got {v!r}")
+        _require(isinstance(self.timestamp_utc, str)
+                 and bool(_TIMESTAMP_RE.match(self.timestamp_utc or "")),
+                 f"BenchRun.timestamp_utc must be ISO-8601 UTC at second "
+                 f"resolution (YYYY-MM-DDTHH:MM:SS+00:00), "
+                 f"got {self.timestamp_utc!r}")
+        _require(self.jax is None or (isinstance(self.jax, str) and self.jax),
+                 f"BenchRun.jax must be None or a non-empty version string, "
+                 f"got {self.jax!r}")
+        ms = tuple(self.measurements)
+        _require(len(ms) > 0,
+                 f"BenchRun {self.benchmark!r}: measurements must be "
+                 f"non-empty — a run with nothing measured gates nothing")
+        for m in ms:
+            _require(isinstance(m, Measurement),
+                     f"BenchRun {self.benchmark!r}: measurements must be "
+                     f"Measurement instances, got {type(m).__name__}")
+        names = [m.name for m in ms]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        _require(not dupes,
+                 f"BenchRun {self.benchmark!r}: duplicate measurement "
+                 f"name(s) {dupes}")
+        object.__setattr__(self, "measurements", ms)
+        if self.context is not None:
+            _require(isinstance(self.context, dict),
+                     f"BenchRun {self.benchmark!r}: context must be a dict, "
+                     f"got {type(self.context).__name__}")
+            # the context block is free-form provenance; scrub it with the
+            # same volatile-key filter the stable artifacts use so committed
+            # trajectories never grow nested wall-clock junk
+            object.__setattr__(self, "context", scrub_volatile(self.context))
+
+    def measurement(self, name: str) -> Optional[Measurement]:
+        for m in self.measurements:
+            if m.name == name:
+                return m
+        return None
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "benchmark": self.benchmark,
+            "mode": self.mode,
+            "git_sha": self.git_sha,
+            "timestamp_utc": self.timestamp_utc,
+            "platform": self.platform,
+            "python": self.python,
+            "numpy": self.numpy,
+            "jax": self.jax,
+            "backend": self.backend,
+            "measurements": [m.to_dict() for m in self.measurements],
+        }
+        if self.context is not None:
+            out["context"] = self.context
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Any, *, where: str = "run") -> "BenchRun":
+        _require(isinstance(d, dict),
+                 f"{where}: expected an object, got {type(d).__name__}")
+        missing = set(_RUN_REQUIRED) - d.keys() - {"jax"}
+        _require(not missing,
+                 f"{where}: missing required field(s) {sorted(missing)}")
+        unknown = d.keys() - set(_RUN_REQUIRED) - set(_RUN_OPTIONAL)
+        _require(not unknown,
+                 f"{where}: unknown field(s) {sorted(unknown)} — schema "
+                 f"version {SCHEMA_VERSION} does not define them")
+        raw_ms = d["measurements"]
+        _require(isinstance(raw_ms, list),
+                 f"{where}: measurements must be a list, "
+                 f"got {type(raw_ms).__name__}")
+        ms = tuple(
+            Measurement.from_dict(m, where=f"{where}.measurements[{i}]")
+            for i, m in enumerate(raw_ms))
+        return cls(benchmark=d["benchmark"], mode=d["mode"],
+                   git_sha=d["git_sha"], timestamp_utc=d["timestamp_utc"],
+                   platform=d["platform"], python=d["python"],
+                   numpy=d["numpy"], jax=d.get("jax"), backend=d["backend"],
+                   measurements=ms, context=d.get("context"))
+
+
+# ---------------------------------------------------------------------------
+# stable serialization + the append-only trajectory store
+
+
+def dumps_run(run: BenchRun) -> str:
+    """Byte-stable serialization of one run (sorted keys, fixed indent):
+    serialize → :func:`loads_run` → serialize is byte-identical."""
+    return json.dumps(run.to_dict(), sort_keys=True, indent=1)
+
+
+def loads_run(text: str) -> BenchRun:
+    try:
+        d = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise BenchHistError(f"run record is not valid JSON: {e}") from e
+    return BenchRun.from_dict(d)
+
+
+def trajectory_path(bench_dir: os.PathLike, benchmark: str) -> Path:
+    return Path(bench_dir) / f"BENCH_{benchmark}.json"
+
+
+def dumps_trajectory(benchmark: str, runs: Sequence[BenchRun]) -> str:
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "runs": [r.to_dict() for r in runs],
+    }
+    return json.dumps(payload, sort_keys=True, indent=1) + "\n"
+
+
+def load_trajectory(path: os.PathLike) -> List[BenchRun]:
+    """Parse a ``BENCH_<benchmark>.json`` trajectory, strictly.
+
+    Any malformed record raises :class:`BenchHistError` naming the file
+    and record index — a trajectory that silently drops records would let
+    regressions hide behind parse errors."""
+    path = Path(path)
+    try:
+        d = json.loads(path.read_text())
+    except FileNotFoundError:
+        raise BenchHistError(
+            f"{path}: no such trajectory (record one with "
+            f"`python -m benchmarks.run --record`)") from None
+    except json.JSONDecodeError as e:
+        raise BenchHistError(f"{path}: not valid JSON: {e}") from e
+    _require(isinstance(d, dict),
+             f"{path}: expected a trajectory object, "
+             f"got {type(d).__name__}")
+    missing = {"schema_version", "benchmark", "runs"} - d.keys()
+    _require(not missing, f"{path}: missing field(s) {sorted(missing)}")
+    _require(d["schema_version"] == SCHEMA_VERSION,
+             f"{path}: schema_version {d['schema_version']!r} != "
+             f"{SCHEMA_VERSION} (this tool only reads version "
+             f"{SCHEMA_VERSION})")
+    _require(isinstance(d["runs"], list),
+             f"{path}: runs must be a list, got {type(d['runs']).__name__}")
+    runs = [BenchRun.from_dict(r, where=f"{path}: runs[{i}]")
+            for i, r in enumerate(d["runs"])]
+    for i, r in enumerate(runs):
+        _require(r.benchmark == d["benchmark"],
+                 f"{path}: runs[{i}] records benchmark {r.benchmark!r} but "
+                 f"the trajectory is for {d['benchmark']!r}")
+    return runs
+
+
+def append_run(bench_dir: os.PathLike, run: BenchRun) -> Path:
+    """Append one run to its benchmark's trajectory file (creating the
+    file on first record) and rewrite it byte-stably."""
+    path = trajectory_path(bench_dir, run.benchmark)
+    runs = load_trajectory(path) if path.exists() else []
+    runs.append(run)
+    path.write_text(dumps_trajectory(run.benchmark, runs))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# environment provenance
+
+
+def collect_environment() -> Dict[str, Any]:
+    """Provenance shared by every recorded run: git SHA, timestamp,
+    platform, library versions, and which sweep backends are importable."""
+    import datetime
+    import platform as _platform
+    import subprocess
+
+    import numpy as np
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    env: Dict[str, Any] = {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "numpy": np.__version__,
+        "jax": None,
+        "backend": "numpy",
+    }
+    try:
+        from repro.serving import fastsim
+
+        if fastsim.jax_available():
+            import jax
+
+            env["jax"] = jax.__version__
+            env["backend"] = "numpy,jax"
+    except ImportError:  # pragma: no cover - fastsim always importable here
+        pass
+    return env
+
+
+def build_run(benchmark: str, mode: str,
+              measurements: Sequence[Measurement],
+              *, env: Optional[Dict[str, Any]] = None,
+              context: Optional[Dict[str, Any]] = None) -> BenchRun:
+    env = env or collect_environment()
+    return BenchRun(
+        benchmark=benchmark, mode=mode, git_sha=env["git_sha"],
+        timestamp_utc=env["timestamp_utc"], platform=env["platform"],
+        python=env["python"], numpy=env["numpy"], jax=env["jax"],
+        backend=env["backend"], measurements=tuple(measurements),
+        context=context)
+
+
+# ---------------------------------------------------------------------------
+# measurement declaration layer (what each benchmark module exports)
+
+
+def resolve_path(payload: Any, path: str):
+    """Resolve a dotted path into a JSON payload; integer segments index
+    lists.  Raises :class:`BenchHistError` naming the missing segment."""
+    cur = payload
+    for seg in path.split("."):
+        if isinstance(cur, list):
+            try:
+                cur = cur[int(seg)]
+            except (ValueError, IndexError):
+                raise BenchHistError(
+                    f"path {path!r}: segment {seg!r} does not index a "
+                    f"list of length {len(cur)}") from None
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                raise BenchHistError(
+                    f"path {path!r}: key {seg!r} not in "
+                    f"{sorted(cur.keys())[:12]}")
+            cur = cur[seg]
+        else:
+            raise BenchHistError(
+                f"path {path!r}: segment {seg!r} reached a leaf "
+                f"({type(cur).__name__})")
+    return cur
+
+
+@dataclass(frozen=True)
+class MeasurementSpec:
+    """A benchmark module's declaration of one gate-worthy measurement.
+
+    Exactly one of ``path`` (dotted path into the artifact payload) or
+    ``extract`` (callable over the payload, for list-shaped artifacts)
+    supplies the value.  ``volatile`` marks values derived from the wall
+    clock: they are recorded into trajectories (from the pre-scrub
+    payload) but are absent from stable-scrubbed smoke artifacts on disk.
+    ``smoke=False`` marks full-run-only sections (e.g. fastsim's deep
+    large-sweep cell); ``optional=True`` tolerates absence (e.g. jax gate
+    keys on a jax-less install)."""
+
+    name: str
+    unit: str
+    higher_is_better: bool
+    path: Optional[str] = None
+    extract: Optional[Callable[[Any], float]] = None
+    target: Optional[float] = None
+    tolerance: Optional[float] = None
+    volatile: bool = False
+    smoke: bool = True
+    optional: bool = False
+
+    def __post_init__(self) -> None:
+        _require((self.path is None) != (self.extract is None),
+                 f"MeasurementSpec {self.name!r}: exactly one of path= or "
+                 f"extract= must be given")
+
+    def measure(self, payload: Any) -> Optional[Measurement]:
+        """Extract this measurement from an artifact payload; ``None`` if
+        the spec is optional and the payload lacks it."""
+        try:
+            if self.path is not None:
+                value = resolve_path(payload, self.path)
+            else:
+                value = self.extract(payload)
+        except (BenchHistError, KeyError, IndexError, TypeError,
+                StopIteration, ZeroDivisionError) as e:
+            # extract= callables poke into list-shaped payloads with
+            # next()/indexing; any of these means "the artifact no longer
+            # carries this measurement's source"
+            if self.optional:
+                return None
+            raise BenchHistError(
+                f"measurement {self.name!r}: artifact payload is missing "
+                f"its source (path={self.path!r}, cause: "
+                f"{type(e).__name__}: {e}) — did the benchmark's artifact "
+                f"schema change without updating its BENCH_SPEC?"
+            ) from None
+        return Measurement(name=self.name, value=value, unit=self.unit,
+                           higher_is_better=self.higher_is_better,
+                           target=self.target, tolerance=self.tolerance)
+
+
+@dataclass(frozen=True)
+class BenchmarkSpec:
+    """Everything ``--record`` needs from one benchmark module: which
+    artifact its run writes (full and smoke variants) and the gate-worthy
+    measurements to extract from it."""
+
+    artifact: str
+    measurements: Tuple[MeasurementSpec, ...]
+    smoke_artifact: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        ms = tuple(self.measurements)
+        _require(len(ms) > 0,
+                 "BenchmarkSpec: at least one MeasurementSpec is required")
+        names = [m.name for m in ms]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        _require(not dupes, f"BenchmarkSpec: duplicate spec name(s) {dupes}")
+        object.__setattr__(self, "measurements", ms)
+        if self.smoke_artifact is None:
+            object.__setattr__(self, "smoke_artifact", self.artifact)
+
+    def artifact_for(self, mode: str) -> str:
+        return self.smoke_artifact if mode == "smoke" else self.artifact
+
+    def specs_for(self, mode: str, *,
+                  include_volatile: bool = True) -> List[MeasurementSpec]:
+        return [s for s in self.measurements
+                if (mode != "smoke" or s.smoke)
+                and (include_volatile or not s.volatile)]
+
+    def collect(self, payload: Any, mode: str, *,
+                include_volatile: bool = True) -> List[Measurement]:
+        out = []
+        for spec in self.specs_for(mode, include_volatile=include_volatile):
+            m = spec.measure(payload)
+            if m is not None:
+                out.append(m)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# regression detection
+
+
+DEFAULT_WINDOW = 5
+DEFAULT_TOLERANCE = 0.30   # matches the historical fastsim --perf-gate bar
+
+
+@dataclass(frozen=True)
+class Violation:
+    benchmark: str
+    measurement: str
+    unit: str
+    current: float
+    median: float
+    window: int
+    tolerance: float
+    higher_is_better: bool
+
+    def describe(self) -> str:
+        direction = "fell below" if self.higher_is_better else "rose above"
+        return (f"{self.benchmark}.{self.measurement}: {self.current:g} "
+                f"{self.unit} {direction} the median of the last "
+                f"{self.window} run(s) ({self.median:g} {self.unit}) by "
+                f"more than {self.tolerance:.0%}")
+
+
+def detect_regressions(runs: Sequence[BenchRun], *,
+                       window: int = DEFAULT_WINDOW,
+                       default_tolerance: float = DEFAULT_TOLERANCE,
+                       ) -> List[Violation]:
+    """Compare the newest run against the median of its recent same-mode
+    history, per measurement, direction-aware.
+
+    The current run is ``runs[-1]``; its history is the up-to-``window``
+    most recent *earlier* runs with the same mode (smoke and full runs
+    measure different sweep sizes, so they never gate each other).  A
+    measurement with no history passes (first recording of a new metric),
+    as does a measurement moving in its good direction.  Entries older
+    than the window never affect the verdict — appends shift the window
+    forward instead of freezing a baseline forever, which is what lets
+    trajectories absorb intentional perf changes after a few recorded
+    runs."""
+    _require(window >= 1, f"window must be >= 1, got {window}")
+    _require(0.0 < default_tolerance <= 1.0,
+             f"default_tolerance must be in (0, 1], "
+             f"got {default_tolerance!r}")
+    if len(runs) < 2:
+        return []
+    current = runs[-1]
+    history = [r for r in runs[:-1] if r.mode == current.mode][-window:]
+    if not history:
+        return []
+    violations: List[Violation] = []
+    for m in current.measurements:
+        past = [h.measurement(m.name).value for h in history
+                if h.measurement(m.name) is not None]
+        if not past:
+            continue
+        med = statistics.median(past)
+        tol = m.tolerance if m.tolerance is not None else default_tolerance
+        shortfall = (med - m.value) if m.higher_is_better else (m.value - med)
+        if shortfall > tol * abs(med) + 1e-12:
+            violations.append(Violation(
+                benchmark=current.benchmark, measurement=m.name,
+                unit=m.unit, current=m.value, median=med,
+                window=len(past), tolerance=tol,
+                higher_is_better=m.higher_is_better))
+    return violations
+
+
+def discover_trajectories(bench_dir: os.PathLike) -> List[Path]:
+    return sorted(Path(bench_dir).glob("BENCH_*.json"))
+
+
+def gate_all(bench_dir: os.PathLike, *,
+             window: int = DEFAULT_WINDOW,
+             default_tolerance: float = DEFAULT_TOLERANCE,
+             log: Callable[[str], None] = print) -> int:
+    """The suite-wide regression gate behind ``--gate-all``.
+
+    Loads every ``BENCH_*.json`` under ``bench_dir``, runs
+    :func:`detect_regressions` on each, and returns a process exit code:
+    0 when every trajectory parses and no measurement regressed, 1
+    otherwise — listing *every* violated measurement, not just the first,
+    so one gate run names the full blast radius of a bad change."""
+    paths = discover_trajectories(bench_dir)
+    if not paths:
+        log(f"gate-all: no BENCH_*.json trajectories under {bench_dir} "
+            f"(record some with `python -m benchmarks.run --record`)")
+        return 1
+    failed = False
+    total_measurements = 0
+    for path in paths:
+        try:
+            runs = load_trajectory(path)
+        except BenchHistError as e:
+            log(f"gate-all: MALFORMED {e}")
+            failed = True
+            continue
+        if not runs:
+            log(f"gate-all: {path.name}: EMPTY trajectory (no recorded runs)")
+            failed = True
+            continue
+        violations = detect_regressions(
+            runs, window=window, default_tolerance=default_tolerance)
+        total_measurements += len(runs[-1].measurements)
+        if violations:
+            failed = True
+            for v in violations:
+                log(f"gate-all: REGRESSION {v.describe()}")
+        else:
+            log(f"gate-all: {runs[-1].benchmark}: OK "
+                f"({len(runs[-1].measurements)} measurement(s), "
+                f"{len(runs)} run(s), mode={runs[-1].mode})")
+    if failed:
+        log("gate-all: FAILED")
+        return 1
+    log(f"gate-all: OK ({len(paths)} trajectories, "
+        f"{total_measurements} gated measurements)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# trend report
+
+
+def render_trends(bench_dir: os.PathLike, *,
+                  window: int = DEFAULT_WINDOW,
+                  max_points: int = 8) -> List[str]:
+    """Markdown trend tables for every trajectory under ``bench_dir`` —
+    the per-measurement view ``benchmarks/render_report.py`` embeds in
+    EXPERIMENTS.md.  Shows the latest value, the same-mode median the gate
+    would compare against, and the last few recorded points oldest-first."""
+    lines: List[str] = []
+    w = lines.append
+    for path in discover_trajectories(bench_dir):
+        runs = load_trajectory(path)
+        if not runs:
+            continue
+        latest = runs[-1]
+        history = [r for r in runs[:-1] if r.mode == latest.mode][-window:]
+        w(f"### `{path.name}` — {len(runs)} run(s), latest "
+          f"{latest.timestamp_utc} @ `{latest.git_sha[:12]}` "
+          f"({latest.mode}, {latest.backend})\n")
+        w("| measurement | unit | dir | latest | gate median | trajectory |")
+        w("|---|---|---|---|---|---|")
+        for m in latest.measurements:
+            past = [r.measurement(m.name).value for r in history
+                    if r.measurement(m.name) is not None]
+            med = f"{statistics.median(past):g}" if past else "—"
+            series = [r.measurement(m.name).value
+                      for r in runs if r.mode == latest.mode
+                      and r.measurement(m.name) is not None][-max_points:]
+            traj = " → ".join(f"{v:g}" for v in series)
+            arrow = "↑" if m.higher_is_better else "↓"
+            w(f"| {m.name} | {m.unit} | {arrow} | {m.value:g} | {med} "
+              f"| {traj} |")
+        w("")
+    return lines

@@ -164,3 +164,158 @@ def test_perf_gate_exits_zero():
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "perf-gate: OK" in proc.stdout
     assert "REGRESSION" not in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# benchmark-history telemetry (repro.tools.benchhist)
+
+
+def _registry():
+    run = importlib.import_module("benchmarks.run")
+    return run.MODULES
+
+
+def test_every_registered_benchmark_declares_gate_worthy_measurements():
+    """Every module in the driver's registry must export a BENCH_SPEC with
+    at least one smoke-eligible measurement — a benchmark whose speed
+    claims never reach a trajectory cannot be regression-gated."""
+    from repro.tools.benchhist import BenchmarkSpec
+
+    for name, mod in _registry().items():
+        spec = getattr(mod, "BENCH_SPEC", None)
+        assert isinstance(spec, BenchmarkSpec), f"{name}: missing BENCH_SPEC"
+        assert spec.specs_for("smoke"), (
+            f"{name}: no smoke-eligible measurement — --smoke --record "
+            f"would append an empty run")
+
+
+@pytest.mark.parametrize("name", sorted(
+    p.stem.removeprefix("BENCH_").removesuffix(".json")
+    for p in REPO.glob("BENCH_*.json")))
+def test_committed_trajectory_is_schema_valid_and_seeded(name):
+    """Each committed BENCH_<name>.json must parse strictly (no silently
+    skipped records), belong to a registered benchmark, hold >= 1 recorded
+    run, and serialize back byte-identically (appends diff minimally)."""
+    from repro.tools import benchhist
+
+    path = benchhist.trajectory_path(REPO, name)
+    runs = benchhist.load_trajectory(path)
+    assert runs, f"{path.name}: trajectory committed but empty"
+    assert name in _registry(), f"{path.name}: not a registered benchmark"
+    assert benchhist.dumps_trajectory(name, runs) == path.read_text()
+
+
+def test_every_registered_benchmark_has_a_committed_trajectory():
+    from repro.tools import benchhist
+
+    missing = [name for name in _registry()
+               if not benchhist.trajectory_path(REPO, name).exists()]
+    assert not missing, (
+        f"no committed BENCH_<name>.json for {missing} — seed one with "
+        f"`PYTHONPATH=src python -m benchmarks.run --smoke --record`")
+
+
+@pytest.mark.parametrize("name", sorted({
+    "fastsim_bench", "trace_replay", "dag_bench", "multi_server",
+    "serving_ladders"}))
+def test_smoke_artifact_validates_against_bench_spec(name):
+    """The committed smoke artifacts must still carry every non-volatile
+    measurement their module's BENCH_SPEC declares (volatile ones are
+    scrubbed from disk by design and ride only the trajectory)."""
+    import json
+
+    from repro.tools.benchhist import Measurement
+
+    mod = _registry()[name]
+    spec = mod.BENCH_SPEC
+    art = REPO / "experiments" / spec.artifact_for("smoke")
+    assert art.exists(), f"{art} missing — run the smoke gate"
+    payload = json.loads(art.read_text())
+    got = spec.collect(payload, "smoke", include_volatile=False)
+    for m in got:
+        assert isinstance(m, Measurement)
+    declared = [s.name for s in spec.specs_for("smoke",
+                                               include_volatile=False)
+                if not s.optional]
+    assert {m.name for m in got} >= set(declared)
+
+
+def test_run_unknown_flag_exits_2_with_usage():
+    """Deterministic CLI contract: an unknown flag must exit 2 (not 0, not
+    a stack trace) and print usage on stderr, so CI wrappers can't silently
+    no-op on a typo like --gate-al."""
+    for argv in (["--gate-al"], ["--recored", "--smoke"], ["--bench-dir"]):
+        proc = _run_gate(*argv)
+        assert proc.returncode == 2, (argv, proc.stdout, proc.stderr)
+        assert "usage:" in proc.stderr
+    proc = _run_gate("no_such_benchmark")
+    assert proc.returncode == 2
+    assert "unknown benchmark" in proc.stderr
+
+
+def test_record_then_gate_all_roundtrip(tmp_path):
+    """End-to-end: `--smoke fastsim_bench --record` into a throwaway
+    bench-dir appends a schema-valid run, `--gate-all` over it exits 0,
+    and appending a synthetically regressed run flips the gate to exit 1
+    naming the offending measurement.  Never touches the committed
+    BENCH_*.json trajectories."""
+    from repro.tools import benchhist
+
+    proc = _run_gate("--smoke", "fastsim_bench", "--record",
+                     f"--bench-dir={tmp_path}")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "recorded" in proc.stderr
+    path = benchhist.trajectory_path(tmp_path, "fastsim_bench")
+    runs = benchhist.load_trajectory(path)
+    assert len(runs) == 1 and runs[0].mode == "smoke"
+    assert runs[0].measurement("batch_speedup_c1") is not None
+
+    proc = _run_gate("--gate-all", f"--bench-dir={tmp_path}")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "gate-all: OK" in proc.stdout
+
+    base = runs[-1]
+    regressed = tuple(
+        benchhist.Measurement(m.name, m.value * 0.1, m.unit,
+                              m.higher_is_better, target=m.target,
+                              tolerance=m.tolerance)
+        if m.name == "batch_speedup_c1" else m
+        for m in base.measurements)
+    benchhist.append_run(tmp_path, benchhist.BenchRun(
+        base.benchmark, base.mode, base.git_sha, base.timestamp_utc,
+        base.platform, base.python, base.numpy, base.backend, regressed,
+        jax=base.jax, context=base.context))
+    proc = _run_gate("--gate-all", f"--bench-dir={tmp_path}")
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout
+    assert "fastsim_bench.batch_speedup_c1" in proc.stdout
+
+
+def test_gate_all_on_committed_trajectories_exits_zero():
+    """The committed per-PR trajectories must pass their own gate — this
+    is the suite-wide generalization of --perf-gate, and it runs on
+    recorded data only (no re-measurement), so it is cheap and exact."""
+    proc = _run_gate("--gate-all")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "gate-all: OK" in proc.stdout
+    assert "REGRESSION" not in proc.stdout
+
+
+def test_fastsim_smoke_artifact_is_stable(tmp_path, monkeypatch):
+    """fastsim's smoke artifact is stable-saved: its wall-clock throughput
+    sections are scrubbed on disk (they ride the BENCH trajectory instead)
+    and a rerun reproduces the bytes exactly."""
+    import benchmarks.common as common
+    from benchmarks.fastsim_bench import GATE, _run
+
+    cfg = dict(GATE, duration_s=60.0, replications=4)
+    monkeypatch.setattr(common, "EXPERIMENTS_DIR", str(tmp_path))
+    _run(cfg, "idem.json", large=False, stable=True)
+    first = (tmp_path / "idem.json").read_bytes()
+    assert b"wall_s" not in first and b'"gate"' not in first
+    assert b'"rps"' not in first
+    # the pre-scrub payload keeps the volatile numbers for --record
+    payload = common.LAST_PAYLOADS["idem.json"]
+    assert payload["gate"]["fast_batch_rps_c1"] > 0
+    _run(cfg, "idem.json", large=False, stable=True)
+    assert (tmp_path / "idem.json").read_bytes() == first
