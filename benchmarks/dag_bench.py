@@ -78,6 +78,9 @@ BENCH_SPEC = BenchmarkSpec(
         MeasurementSpec("sojourn_model_max_rel_err", "frac", False,
                         path="network_model.sojourn_max_rel_err",
                         tolerance=0.25),
+        MeasurementSpec("jax_pipeline_sweep_speedup", "x", True,
+                        path="pipeline_sweep.jax_speedup", target=5.0,
+                        volatile=True, smoke=False, optional=True),
     ),
 )
 from .fastsim_bench import run_metadata
@@ -137,6 +140,84 @@ def build_pipeline():
     return sur, planner, dag, table
 
 
+# Pipeline-sweep cell (the jax >= 5x acceptance measurement): an 8-stage
+# agentic-RAG tandem whose pooled (c > 1) stages are exactly where the
+# numpy chained path degrades to the per-request Kiefer-Wolfowitz Python
+# loop — the regime the jax pipeline grid exists for (jitted comparator
+# scans + host permutations).  R=4 x K=5 x L=8 rungs/loads over 150 s
+# traces gives a ~4.7M-slot grid (>= 1e6-slot full-size bar); rungs pin
+# only the generate/verify configs, the common-random-numbers layout that
+# lets coinciding stage configs share one service draw.  Full-run only.
+SWEEP_STAGES = [
+    ("plan",      2, [0.010], [0.025]),
+    ("retrieve1", 8, [0.120], [0.300]),
+    ("rerank1",   4, [0.060], [0.150]),
+    ("retrieve2", 8, [0.120], [0.300]),
+    ("rerank2",   4, [0.060], [0.150]),
+    ("generate",  2, [0.035, 0.028, 0.022, 0.017, 0.013],
+                     [0.090, 0.070, 0.055, 0.042, 0.032]),
+    ("verify",    2, [0.024, 0.020, 0.018, 0.016, 0.014],
+                     [0.070, 0.056, 0.048, 0.042, 0.036]),
+    ("moderate",  2, [0.010], [0.030]),
+]
+SWEEP_CFG = dict(
+    arrival_rates_qps=(10.0, 14.0, 18.0, 22.0, 26.0, 30.0, 35.0, 40.0),
+    duration_s=150.0, replications=4, slo_s=1.5, seed=11)
+
+
+def measure_pipeline_sweep(*, repeats: int = 3) -> dict:
+    """numpy vs jax on the full-size pooled-pipeline sweep, interleaved
+    median-of-``repeats`` after compile warmup (the fastsim_bench
+    large-sweep protocol).  Skipped, with the import reason, when jax is
+    unavailable."""
+    import statistics
+    import time as _time
+
+    from repro.serving import fastsim
+    from repro.serving.dag import sweep_pipeline
+
+    dag = WorkflowDAG.tandem([
+        StageSpec(name=n, mean_s=tuple(m), p95_s=tuple(p), num_servers=c)
+        for n, c, m, p in SWEEP_STAGES])
+    rungs = [[0, 0, 0, 0, 0, k, k, 0] for k in range(5)]
+    out = {"grid": {"stages": dag.num_stages, "rungs": len(rungs),
+                    "loads": len(SWEEP_CFG["arrival_rates_qps"]),
+                    "replications": SWEEP_CFG["replications"],
+                    "duration_s": SWEEP_CFG["duration_s"]}}
+    if not fastsim.jax_available():
+        out["skipped"] = (f"jax not importable "
+                          f"({fastsim.jax_unavailable_reason()})")
+        print(f"dag_bench: pipeline-sweep jax section skipped: "
+              f"{out['skipped']}")
+        return out
+
+    def once(backend):
+        t0 = _time.perf_counter()
+        res = sweep_pipeline(dag, rungs, backend=backend,
+                             scan_impl="sequential", **SWEEP_CFG)
+        return _time.perf_counter() - t0, res
+
+    once("jax")       # compile warmup
+    once("numpy")     # page-fault warmup
+    npy, jx = [], []
+    for _ in range(repeats):
+        tn, rn = once("numpy")
+        tj, rj = once("jax")
+        npy.append(tn)
+        jx.append(tj)
+    n_s = statistics.median(npy)
+    j_s = statistics.median(jx)
+    out.update({
+        "slots": rn.num_requests * dag.num_stages,
+        "bit_equal": rn.mean_latency_s == rj.mean_latency_s
+                     and rn.p95_latency_s == rj.p95_latency_s,
+        "numpy_s": n_s,
+        "jax_s": j_s,
+        "jax_speedup": n_s / j_s,
+    })
+    return out
+
+
 def _capacity(dag, pol):
     """Bottleneck drain rate c_b / s_b of one pipeline rung — the load
     the diurnal peak is calibrated against: the peak must saturate the
@@ -159,7 +240,7 @@ def _serve_metrics(result):
 
 
 def _run(*, periods: int, replications: int, validate_duration_s: float,
-         artifact: str, stable: bool) -> dict:
+         artifact: str, stable: bool, large: bool = False) -> dict:
     sur, planner, dag, table = build_pipeline()
     with Timer() as t:
         # -- part 1: queueing-network model vs chained-recursion sweep ---
@@ -262,6 +343,8 @@ def _run(*, periods: int, replications: int, validate_duration_s: float,
             "sync_penalty": sync_penalty,
         },
     }
+    if large:
+        payload["pipeline_sweep"] = measure_pipeline_sweep()
     save_json(artifact, payload, stable=stable)
     return {
         "name": "dag_bench",
@@ -275,6 +358,8 @@ def _run(*, periods: int, replications: int, validate_duration_s: float,
             f"fast_acc={static_fast['mean_accuracy']:.4f} "
             f"switches={dynamic['switches']} "
             f"fj_penalty={sync_penalty:.2f}x"
+            + (f" jax_sweep={payload['pipeline_sweep']['jax_speedup']:.2f}x"
+               if "jax_speedup" in payload.get("pipeline_sweep", {}) else "")
             + ("" if ok else " [pipeline switching acceptance FAILED]")
         ),
     }
@@ -282,7 +367,7 @@ def _run(*, periods: int, replications: int, validate_duration_s: float,
 
 def run() -> dict:
     return _run(periods=12, replications=4, validate_duration_s=300.0,
-                artifact="dag_bench.json", stable=False)
+                artifact="dag_bench.json", stable=False, large=True)
 
 
 def run_smoke() -> dict:

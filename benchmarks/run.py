@@ -28,8 +28,12 @@ a benchmark without one is a loud failure, not a silent skip.
 (:func:`repro.tools.benchhist.gate_all`): every trajectory's newest run
 is compared per-measurement against the median of its recent same-mode
 history, direction-aware, and the process exits non-zero listing every
-violated measurement.  It runs on recorded data only (no re-measurement),
-so it is cheap enough for tier-1.
+violated measurement.  Bare ``--gate-all`` gates the recorded data as-is
+(no re-measurement — cheap enough for tier-1).  Combined with a run
+(``--record``, ``--smoke``, or explicit benchmark names) it *composes*:
+the selected benchmarks run (and record) first, then the gate judges the
+trajectories that run just appended — ``--smoke --record --gate-all`` is
+the one-command CI recipe (see ``ci/bench_record.sh``).
 
 ``--perf-gate`` re-measures the fast-path simulation throughput at the
 small fixed gate configuration (:mod:`benchmarks.fastsim_bench`) and
@@ -93,8 +97,8 @@ BENCHES = {name: mod.run for name, mod in MODULES.items()}
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 
 USAGE = ("usage: python -m benchmarks.run [--smoke] [--record] "
-         "[--bench-dir=PATH] [name ...] | --check-docs | --perf-gate | "
-         "--gate-all [--bench-dir=PATH]")
+         "[--gate-all] [--bench-dir=PATH] [name ...] | --check-docs | "
+         "--perf-gate | --gate-all [--bench-dir=PATH]")
 
 
 def _usage_error(msg: str) -> None:
@@ -162,12 +166,14 @@ def main() -> None:
         baseline = os.path.join(REPO_ROOT, "experiments",
                                 "fastsim_bench.json")
         sys.exit(fastsim_bench.perf_gate(baseline))
-    if "--gate-all" in flags:
+    smoke = "--smoke" in flags
+    record = "--record" in flags
+    gate = "--gate-all" in flags
+    if gate and not (smoke or record or names):
+        # bare --gate-all: judge the recorded trajectories as they stand
         from repro.tools.benchhist import gate_all
 
         sys.exit(gate_all(bench_dir))
-    smoke = "--smoke" in flags
-    record = "--record" in flags
     unknown_names = [n for n in names if n not in BENCHES]
     if unknown_names:
         _usage_error(f"unknown benchmark(s): {' '.join(unknown_names)} "
@@ -195,6 +201,12 @@ def main() -> None:
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)
+    if gate:
+        # compose run -> record -> gate: judge the trajectories this very
+        # invocation appended (requires --record to have anything new)
+        from repro.tools.benchhist import gate_all
+
+        sys.exit(gate_all(bench_dir))
 
 
 if __name__ == "__main__":

@@ -16,6 +16,13 @@ that scale offline:
   Lindley engines, start to finish.
 - **Flash-crowd and bursty-MMPP replays**: shorter stress traces through
   the same ladder, exercising the other two chunked generators.
+- **Diurnal pipeline replay**: the same >= 1e7-request diurnal trace
+  streamed through the fastest rung decomposed into its
+  retrieve -> rerank -> generate tandem
+  (:func:`repro.serving.traces.replay_dag`), carrying per-stage backlogs
+  across chunk boundaries — on the numpy chained closed form and, when
+  importable, on the fused jitted jax chunk engine
+  (``backend="jax"``, the >= ~1.3M req/s acceptance measurement).
 - **Planner validation**: the same plan is validated with
   :meth:`repro.core.planner.Planner.validate` at the diurnal trace's
   base / mean / peak rates (``backend="auto"``, which at this grid size
@@ -36,6 +43,7 @@ from repro.serving.traces import (
     bursty_mmpp_trace,
     diurnal_trace,
     flash_crowd_trace,
+    replay_dag,
     replay_mix,
 )
 from repro.workflows.surrogate import RagSurrogate
@@ -64,6 +72,14 @@ BENCH_SPEC = BenchmarkSpec(
         MeasurementSpec("wait_model_max_rel_err", "frac", False,
                         path="validation.wait_model_max_rel_err",
                         tolerance=0.25),
+        MeasurementSpec("pipeline_replay_rps", "req/s", True,
+                        path="pipeline_replay.rps", volatile=True),
+        MeasurementSpec("pipeline_replay_jax_rps", "req/s", True,
+                        path="pipeline_replay.jax_rps", target=1.3e6,
+                        volatile=True, smoke=False, optional=True),
+        MeasurementSpec("pipeline_e2e_compliance", "frac", True,
+                        path="pipeline_replay.e2e_slo_compliance",
+                        tolerance=0.05),
     ),
 )
 from .fastsim_bench import run_metadata
@@ -114,6 +130,50 @@ def _replay_section(trace, means, p95s, *, seed: int) -> dict:
     }
 
 
+def _pipeline_replay_section(trace, sur, plan, *, seed: int) -> dict:
+    """Stream the diurnal trace through the fastest rung's stage tandem
+    (:func:`repro.serving.traces.replay_dag`): numpy chained closed form
+    timed as the reference, the fused jax chunk engine timed next to it
+    when importable (jax-less installs record the skip reason)."""
+    from .dag_bench import STAGE_ORDER, _p95_from_cv
+
+    fastest = plan.table.policies[0]
+    parts = sur.stage_latencies_s(fastest.point.config)
+    cv = sur.latency_cv(fastest.point.config)
+    stage_means = [parts[name] for name in STAGE_ORDER]
+    stage_p95s = [_p95_from_cv(m, cv) for m in stage_means]
+
+    with Timer() as t:
+        stats = replay_dag(trace, stage_means, stage_p95s, slo_s=SLO_S,
+                           seed=seed)
+    n = stats.end_to_end.num_requests
+    out = {
+        "requests": n,
+        "stages": list(STAGE_ORDER),
+        "stage_means_s": stage_means,
+        "wall_s": t.elapsed,
+        "rps": n / t.elapsed,
+        "engine": stats.end_to_end.engine,
+        "e2e_mean_latency_s": stats.end_to_end.mean_latency_s,
+        "e2e_p95_latency_s": stats.end_to_end.p95_latency_s,
+        "e2e_slo_compliance": stats.end_to_end.slo_compliance,
+        "stage_mean_wait_s": [s.mean_wait_s for s in stats.stages],
+    }
+    if fastsim.jax_available():
+        # jit compile cost rides in the wall clock: a streaming engine
+        # pays it once per chunk shape, amortized over >= 1e7 requests
+        with Timer() as tj:
+            jstats = replay_dag(trace, stage_means, stage_p95s,
+                                slo_s=SLO_S, seed=seed, backend="jax")
+        out["jax_wall_s"] = tj.elapsed
+        out["jax_rps"] = n / tj.elapsed
+        out["jax_engine"] = jstats.end_to_end.engine
+    else:
+        out["jax_skipped"] = (f"jax not importable "
+                              f"({fastsim.jax_unavailable_reason()})")
+    return out
+
+
 def _run(*, target_requests: float, artifact: str,
          stable: bool = False) -> dict:
     sur, planner, plan = build_plan()
@@ -139,6 +199,8 @@ def _run(*, target_requests: float, artifact: str,
                                   duration_s=min(duration / 8.0, 7200.0),
                                   seed=13),
                 means, p95s, seed=13),
+            "pipeline_replay": _pipeline_replay_section(
+                diurnal, sur, plan, seed=11),
         }
 
         # validate the plan at the load levels the diurnal replay covers:
@@ -168,6 +230,10 @@ def _run(*, target_requests: float, artifact: str,
     }
     save_json(artifact, payload, stable=stable)
     d = sections["diurnal"]
+    pr = sections["pipeline_replay"]
+    pipe = (f" pipeline@{pr['jax_rps'] / 1e6:.2f}M req/s (jax)"
+            if "jax_rps" in pr
+            else f" pipeline@{pr['rps'] / 1e6:.2f}M req/s (numpy)")
     ok = d["requests"] >= 1e7
     return {
         "name": "trace_replay",
@@ -177,7 +243,7 @@ def _run(*, target_requests: float, artifact: str,
             f"days @ {d['rps'] / 1e6:.2f}M req/s engine={d['engine']} "
             f"fast_rung_comp={d['rungs'][0]['slo_compliance']:.4f} "
             f"validated={payload['validation']['num_requests']} reqs "
-            f"on {validation_backend}"
+            f"on {validation_backend}" + pipe
             + ("" if ok or "smoke" in artifact
                else " [<1e7 requests: acceptance FAILED]")
         ),

@@ -1,0 +1,32 @@
+#!/usr/bin/env sh
+# CI benchmark recording: run -> record -> gate in one driver invocation.
+#
+# Appends one BenchRun per benchmark to the committed BENCH_<name>.json
+# trajectories and then judges the suite-wide regression gate over the
+# freshly appended runs (benchmarks/run.py composes the three steps when
+# --gate-all is combined with a run; see docs/performance.md section 9).
+#
+# Usage:
+#   ci/bench_record.sh                  # smoke settings, every benchmark
+#   ci/bench_record.sh --full           # full settings (slow; perf claims)
+#   ci/bench_record.sh dag_bench ...    # smoke settings, named subset
+#   BENCH_DIR=/tmp/t ci/bench_record.sh # record into a throwaway dir
+#
+# Exit code is benchmarks/run.py's: non-zero if any benchmark fails OR
+# any recorded measurement regresses against its trajectory history.
+set -eu
+
+cd "$(dirname "$0")/.."
+
+MODE="--smoke"
+if [ "${1:-}" = "--full" ]; then
+    MODE=""
+    shift
+fi
+
+BENCH_DIR="${BENCH_DIR:-.}"
+
+# shellcheck disable=SC2086  # MODE is intentionally word-split when empty
+exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run $MODE --record --gate-all \
+    "--bench-dir=$BENCH_DIR" "$@"

@@ -347,6 +347,8 @@ class Planner:
         duration_s: float = 120.0,
         replications: int = 4,
         seed: int = 0,
+        backend: str = "auto",
+        scan_impl: str = "auto",
     ) -> "PipelineSweep":  # noqa: F821
         """Validate a pipeline ladder against chained-recursion simulation.
 
@@ -359,7 +361,14 @@ class Planner:
         propagation, :func:`repro.serving.dag.pipeline_sojourn`).  The
         default rates are ``load_fractions`` of the fastest rung's
         bottleneck drain rate ``c_b / s_b`` — the load range the pipeline
-        ladder is supposed to cover."""
+        ladder is supposed to cover.
+
+        ``backend`` / ``scan_impl`` are forwarded to the sweep engine
+        verbatim: ``"auto"`` runs pipeline grids whose stages x slots
+        product clears the jax amortization bar on the jax backend when
+        available, numpy otherwise; results agree across backends
+        (bit-exact for the sequential scan impl — see
+        :func:`repro.serving.dag.sweep_pipeline`)."""
         from ..serving.dag import sweep_pipeline
 
         if not plan.table.policies:
@@ -378,6 +387,8 @@ class Planner:
             replications=replications,
             slo_s=plan.table.slo_p95_s,
             seed=seed,
+            backend=backend,
+            scan_impl=scan_impl,
         )
 
     def validate(

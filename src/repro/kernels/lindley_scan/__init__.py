@@ -1,4 +1,10 @@
-from .ops import lindley_scan
-from .ref import lindley_scan_ref, maxplus_combine
+from .ops import chained_lindley_scan, lindley_scan
+from .ref import chained_lindley_scan_ref, lindley_scan_ref, maxplus_combine
 
-__all__ = ["lindley_scan", "lindley_scan_ref", "maxplus_combine"]
+__all__ = [
+    "lindley_scan",
+    "lindley_scan_ref",
+    "chained_lindley_scan",
+    "chained_lindley_scan_ref",
+    "maxplus_combine",
+]

@@ -52,6 +52,38 @@ def _lindley_kernel(a_ref, s_ref, c_ref, carry_ref, *, time_chunk: int):
     c_ref[...] = rows
 
 
+def _chained_lindley_kernel(a_ref, s_ref, c_ref, carry_ref, *,
+                            time_chunk: int, num_stages: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[...]                     # (tc, bs)
+    s = s_ref[...]                     # (J, tc, bs)
+
+    def step(t, carry):
+        comp, rows = carry             # J-tuple (1, bs), J-tuple (tc, bs)
+        arr = a[t][None, :]            # (1, bs)
+        new_comp, new_rows = [], []
+        for j in range(num_stages):    # static unroll: J stays in-register
+            cj = jnp.maximum(arr, comp[j]) + s[j, t][None, :]
+            new_comp.append(cj)
+            new_rows.append(jax.lax.dynamic_update_index_in_dim(
+                rows[j], cj[0], t, axis=0))
+            arr = cj                   # stage j+1 consumes stage j departures
+        return tuple(new_comp), tuple(new_rows)
+
+    carry0 = carry_ref[...]            # (J, bs)
+    comp0 = tuple(carry0[j][None, :] for j in range(num_stages))
+    rows0 = tuple(jnp.zeros((time_chunk, a.shape[1]), a.dtype)
+                  for _ in range(num_stages))
+    comp, rows = jax.lax.fori_loop(0, time_chunk, step, (comp0, rows0))
+    carry_ref[...] = jnp.concatenate(comp, axis=0)
+    c_ref[...] = jnp.stack(rows, axis=0)
+
+
 def lindley_scan(
     arrivals: jax.Array,   # (N, B): FIFO-ordered arrival times
     services: jax.Array,   # (N, B): matching service times
@@ -89,5 +121,56 @@ def lindley_scan(
         out_specs=pl.BlockSpec((time_chunk, block_b), lambda ib, it: (it, ib)),
         out_shape=jax.ShapeDtypeStruct((n, b), arrivals.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_b), arrivals.dtype)],
+        interpret=interpret,
+    )(arrivals, services)
+
+
+def chained_lindley_scan(
+    arrivals: jax.Array,   # (N, B): FIFO-ordered external arrival times
+    services: jax.Array,   # (J, N, B): per-stage service times
+    *,
+    block_b: int = 128,
+    time_chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-stage completion times C: (J, N, B) for a c = 1 tandem chain.
+
+    The blocked multi-stage variant of :func:`lindley_scan`: each time
+    row runs all J stage recursions back-to-back in-register (stage j+1's
+    arrival is stage j's freshly computed completion), so the whole
+    tandem chain is one kernel launch with a (J, block_b) VMEM carry —
+    no host round-trip between stages.  Same padding contract as the
+    flat kernel: zero-arrival / zero-service pad slots leave every
+    stage's carry unchanged (stage carries are non-decreasing down the
+    chain, so the cascaded ``max`` collapses onto each stage's own
+    backlog).
+    """
+    if services.ndim != 3:
+        raise ValueError(f"services must be (J, N, B), got {services.shape}")
+    j, n, b = services.shape
+    if arrivals.shape != (n, b):
+        raise ValueError(
+            f"shape mismatch: {arrivals.shape} vs {services.shape}")
+    block_b = min(block_b, b)
+    time_chunk = min(time_chunk, n)
+    if b % block_b or n % time_chunk:
+        raise ValueError(
+            f"dims ({n},{b}) must divide blocks ({time_chunk},{block_b})")
+    nb, nt = b // block_b, n // time_chunk
+
+    kernel = functools.partial(
+        _chained_lindley_kernel, time_chunk=time_chunk, num_stages=j)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((time_chunk, block_b), lambda ib, it: (it, ib)),
+            pl.BlockSpec((j, time_chunk, block_b),
+                         lambda ib, it: (0, it, ib)),
+        ],
+        out_specs=pl.BlockSpec((j, time_chunk, block_b),
+                               lambda ib, it: (0, it, ib)),
+        out_shape=jax.ShapeDtypeStruct((j, n, b), arrivals.dtype),
+        scratch_shapes=[pltpu.VMEM((j, block_b), arrivals.dtype)],
         interpret=interpret,
     )(arrivals, services)

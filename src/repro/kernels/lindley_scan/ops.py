@@ -7,8 +7,9 @@ from typing import Optional
 
 import jax
 
+from .kernel import chained_lindley_scan as _chained_kernel
 from .kernel import lindley_scan as _kernel
-from .ref import lindley_scan_ref, maxplus_combine
+from .ref import chained_lindley_scan_ref, lindley_scan_ref, maxplus_combine
 
 
 def _on_cpu() -> bool:
@@ -29,4 +30,24 @@ def lindley_scan(
                    time_chunk=time_chunk, interpret=interp)
 
 
-__all__ = ["lindley_scan", "lindley_scan_ref", "maxplus_combine"]
+@functools.partial(jax.jit, static_argnames=("block_b", "time_chunk", "interpret"))
+def chained_lindley_scan(
+    arrivals: jax.Array,
+    services: jax.Array,
+    *,
+    block_b: int = 128,
+    time_chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interp = _on_cpu() if interpret is None else interpret
+    return _chained_kernel(arrivals, services, block_b=block_b,
+                           time_chunk=time_chunk, interpret=interp)
+
+
+__all__ = [
+    "lindley_scan",
+    "lindley_scan_ref",
+    "chained_lindley_scan",
+    "chained_lindley_scan_ref",
+    "maxplus_combine",
+]

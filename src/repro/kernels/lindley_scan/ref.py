@@ -53,3 +53,23 @@ def lindley_scan_ref(arrivals: jax.Array, services: jax.Array) -> jax.Array:
     acum, bcum = jax.lax.associative_scan(
         maxplus_combine, (services, arrivals + services), axis=0)
     return jnp.maximum(acum, bcum)
+
+
+def chained_lindley_scan_ref(arrivals: jax.Array,
+                             services: jax.Array) -> jax.Array:
+    """Per-stage completion times of a tandem of c = 1 Lindley systems.
+
+    ``arrivals``: (N, B) external arrivals in FIFO order; ``services``:
+    (J, N, B) per-stage service times.  Stage j+1's arrival process is
+    stage j's departure process (completions of a c = 1 FIFO stage are
+    already non-decreasing, so no re-sort is needed), which makes the
+    whole tandem J chained max-plus scans: J · O(log N) associative-scan
+    depth instead of O(J · N) sequential steps.  Returns the (J, N, B)
+    stack of per-stage completion times.
+    """
+    out = []
+    cur = arrivals
+    for j in range(services.shape[0]):
+        cur = lindley_scan_ref(cur, services[j])
+        out.append(cur)
+    return jnp.stack(out, axis=0)

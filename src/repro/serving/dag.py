@@ -1054,7 +1054,9 @@ def sweep_pipeline(dag: WorkflowDAG,
                    duration_s: float = 120.0,
                    replications: int = 4,
                    slo_s: float = 1.0,
-                   seed: int = 0) -> PipelineSweep:
+                   seed: int = 0,
+                   backend: str = "auto",
+                   scan_impl: str = "auto") -> PipelineSweep:
     """Replay every pipeline rung against a grid of Poisson arrival rates
     with R replications via the chained closed-form recursion
     (:func:`repro.serving.fastsim.chained_lindley` per topological
@@ -1064,8 +1066,31 @@ def sweep_pipeline(dag: WorkflowDAG,
 
     Streams are content-keyed (rate / stage-config fingerprints), so each
     (replication, rung, load) cell is a pure function of its inputs —
-    lanes share arrival traces (common random numbers across rungs)."""
-    from .fastsim import _fingerprint, chained_lindley, lognormal_params
+    lanes share arrival traces (common random numbers across rungs).
+
+    ``backend`` selects the evaluation engine.  ``"numpy"`` is the
+    authoritative reference: the original per-(replication, rung, load)
+    loop, byte-stable across PRs.  ``"jax"`` batches the whole sweep
+    into one (R, K, L) padded grid in the
+    :func:`repro.serving.fastsim.simulate_batch` style — identical
+    content-keyed host draws (so common random numbers across rungs are
+    preserved, and coinciding per-stage configs share one draw), the
+    stage network evaluated through jitted device scans with host-side
+    permutations (:func:`repro.serving.fastsim._jax_pipeline_grid` —
+    runs of c = 1 stages lower to one fused multi-stage scan), and
+    per-cell p95 order statistics on the host with the same
+    non-interpolated convention.
+    ``"auto"`` picks jax only for grids whose ``stages x slots`` product
+    clears :func:`repro.serving.fastsim.resolve_backend`'s amortization
+    bar.  With ``scan_impl="sequential"`` (the CPU ``"auto"``
+    resolution) the jax grids are bit-exact against numpy; associative /
+    pallas impls are float64-allclose."""
+    from .fastsim import (
+        _fingerprint,
+        chained_lindley,
+        lognormal_params,
+        resolve_backend,
+    )
 
     rung_cfgs = [dag.validate_stage_indices(r) for r in rungs]
     rates = [float(r) for r in arrival_rates_qps]
@@ -1077,22 +1102,57 @@ def sweep_pipeline(dag: WorkflowDAG,
     topo = dag.topological_order()
     sink = dag.sink()
 
-    lat_sum = np.zeros((K, L))
-    p95_acc = np.zeros((K, L))
-    ok = np.zeros((K, L))
-    total = 0
+    # pre-draw the per-(replication, load) arrival traces: each has its
+    # own content-keyed generator, so hoisting the draws out of the sweep
+    # loop is byte-identical to drawing them inline
+    traces: List[List[np.ndarray]] = []
     for r in range(R):
-        for l, rate in enumerate(rates):
+        row = []
+        for rate in rates:
             trace_key = [seed & 0x7FFFFFFF, 11, r,
                          _fingerprint(np.float64(rate).tobytes()),
                          _fingerprint(np.float64(duration_s).tobytes())]
             gen = np.random.Generator(np.random.PCG64(
                 np.random.SeedSequence(trace_key)))
             n = gen.poisson(rate * duration_s)
+            row.append(np.sort(gen.uniform(0.0, duration_s, size=n))
+                       if n > 0 else np.empty(0, dtype=float))
+        traces.append(row)
+    n_max = max((t.size for row in traces for t in row), default=0)
+    max_c = max(dag.stages[j].num_servers for j in topo)
+    chosen = resolve_backend(backend, num_servers=max_c,
+                             total_slots=R * K * L * n_max,
+                             num_stages=len(topo))
+
+    if chosen == "jax" and n_max > 0:
+        lat_sum, p95_acc, ok, total = _sweep_pipeline_jax(
+            dag, topo, sink, rung_cfgs, rates, traces,
+            slo_s=slo_s, seed=seed, scan_impl=scan_impl)
+        predicted = tuple(
+            tuple(pipeline_sojourn(dag, cfg, rate) for rate in rates)
+            for cfg in rung_cfgs)
+        return PipelineSweep(
+            arrival_rates_qps=tuple(rates),
+            replications=R,
+            duration_s=duration_s,
+            mean_latency_s=tuple(map(tuple, lat_sum / R)),
+            p95_latency_s=tuple(map(tuple, p95_acc / R)),
+            slo_compliance=tuple(map(tuple, ok / R)),
+            predicted_sojourn_s=predicted,
+            num_requests=total,
+        )
+
+    lat_sum = np.zeros((K, L))
+    p95_acc = np.zeros((K, L))
+    ok = np.zeros((K, L))
+    total = 0
+    for r in range(R):
+        for l, rate in enumerate(rates):
+            A = traces[r][l]
+            n = A.size
             if n == 0:
                 ok[:, l] += 1.0
                 continue
-            A = np.sort(gen.uniform(0.0, duration_s, size=n))
             for k, cfg in enumerate(rung_cfgs):
                 services = []
                 servers = []
@@ -1134,14 +1194,143 @@ def sweep_pipeline(dag: WorkflowDAG,
     )
 
 
+def _pipeline_topo_meta(dag: WorkflowDAG,
+                        topo: Sequence[int]) -> Tuple[Tuple, ...]:
+    """Static topology descriptor for the batched jax DAG evaluator:
+    per topological position, ``(predecessor positions, num_servers,
+    needs_sort)``.  ``needs_sort`` propagates sortedness statically:
+    sorted external arrivals stay sorted through c = 1 stages (FIFO
+    completions are non-decreasing in dispatch order, and the stable
+    argsort of a sorted vector is the identity — even under ties) and
+    through joins of sorted branches (element-wise max preserves
+    monotonicity); only stages downstream of a c > 1 stage pay a
+    device-side stable argsort."""
+    pos = {j: i for i, j in enumerate(topo)}
+    sorted_out: List[bool] = []
+    meta = []
+    for i, j in enumerate(topo):
+        preds = tuple(pos[p] for p in dag.predecessors(j))
+        in_sorted = all(sorted_out[p] for p in preds) if preds else True
+        c = dag.stages[j].num_servers
+        sorted_out.append(in_sorted and c == 1)
+        meta.append((preds, c, not in_sorted))
+    return tuple(meta)
+
+
+def _sweep_pipeline_jax(dag: WorkflowDAG, topo: Sequence[int], sink: int,
+                        rung_cfgs: Sequence[Tuple[int, ...]],
+                        rates: Sequence[float],
+                        traces: Sequence[Sequence[np.ndarray]], *,
+                        slo_s: float, seed: int, scan_impl: str):
+    """Batched jax evaluation of the pipeline sweep: one padded
+    (R*K*L, N_max) grid per array, the whole stage network jitted,
+    per-cell statistics on the host with the numpy path's exact
+    conventions (non-interpolated p95 via ``np.partition``, identical
+    accumulation order over replications).
+
+    Host draws reuse the numpy path's content-keyed streams byte-for-
+    byte; because service streams are keyed by (replication, stage,
+    config content, rate) — not by rung — rungs that pin the same config
+    for a stage share one draw (the common-random-numbers contract),
+    which the cache below exploits instead of re-drawing per rung.
+    Padded arrival slots carry ``+inf`` so they stay trailing through
+    every device-side sort and join."""
+    from . import fastsim as _fs
+    from jax.experimental import enable_x64
+
+    from .fastsim import _fingerprint, lognormal_params
+
+    R, L, K = len(traces), len(rates), len(rung_cfgs)
+    J = len(topo)
+    n_max = max(t.size for row in traces for t in row)
+    B = R * K * L
+    base = seed & 0x7FFFFFFF
+
+    A = np.full((B, n_max), np.inf, dtype=float)
+    S = np.zeros((J, B, n_max), dtype=float)
+    cell_counts = np.zeros(B, dtype=np.int64)
+
+    def cell(r: int, k: int, l: int) -> int:
+        return (r * K + k) * L + l
+
+    svc_cache: dict = {}
+    for r in range(R):
+        for l, rate in enumerate(rates):
+            trace = traces[r][l]
+            n = trace.size
+            for k, cfg in enumerate(rung_cfgs):
+                b = cell(r, k, l)
+                cell_counts[b] = n
+                if n == 0:
+                    continue
+                A[b, :n] = trace
+                for i, j in enumerate(topo):
+                    st = dag.stages[j]
+                    m = st.mean_s[cfg[j]]
+                    p95 = None if st.p95_s is None else st.p95_s[cfg[j]]
+                    ck = (r, l, j, m, p95)
+                    svc = svc_cache.get(ck)
+                    if svc is None:
+                        skey = [base, 12, r, j,
+                                _fingerprint(np.float64(m).tobytes()
+                                             + np.float64(p95 or 0.0)
+                                             .tobytes()),
+                                _fingerprint(np.float64(rate).tobytes())]
+                        sgen = np.random.Generator(np.random.PCG64(
+                            np.random.SeedSequence(skey)))
+                        if p95 is not None:
+                            mu, sigma = lognormal_params(m, p95)
+                            svc = sgen.lognormal(mu, sigma, size=n)
+                        else:
+                            svc = np.full(n, m)
+                        svc_cache[ck] = svc
+                    S[i, b, :n] = svc
+
+    topo_meta = _pipeline_topo_meta(dag, topo)
+    impl = _fs._resolve_scan_impl(scan_impl)
+    sink_pos = list(topo).index(sink)
+    # One strided pass to the scan layout (J, N, B); per-stage slices are
+    # then contiguous device pushes inside the grid evaluator.
+    S_nb = np.ascontiguousarray(S.transpose(0, 2, 1))
+    with enable_x64():
+        sink_comp = _fs._jax_pipeline_grid(
+            A, S_nb, topo_meta, impl,
+            out_pos=(sink_pos,))[sink_pos]             # (B, N_max)
+
+    lat_sum = np.zeros((K, L))
+    p95_acc = np.zeros((K, L))
+    ok = np.zeros((K, L))
+    total = 0
+    for r in range(R):
+        for l in range(L):
+            n = traces[r][l].size
+            for k in range(K):
+                if n == 0:
+                    ok[k, l] += 1.0
+                    continue
+                b = cell(r, k, l)
+                lats = sink_comp[b, :n] - traces[r][l]
+                lat_sum[k, l] += lats.mean()
+                idx = int(0.95 * (n - 1))
+                p95_acc[k, l] += np.partition(lats, idx)[idx]
+                ok[k, l] += (lats <= slo_s).mean()
+                total += n
+    return lat_sum, p95_acc, ok, total
+
+
 def _chain_dag(dag: WorkflowDAG, topo: Sequence[int], A: np.ndarray,
                services: Sequence[np.ndarray],
-               servers: Sequence[int]) -> np.ndarray:
+               servers: Sequence[int], *,
+               backend: str = "numpy",
+               scan_impl: str = "auto") -> np.ndarray:
     """Vectorized DAG chaining: run each topological stage through
     :func:`repro.serving.fastsim.chained_lindley` (one stage at a time so
     joins can max their predecessors' completions).  ``services[i]`` is
     the service stream of the i-th *topological* stage, consumed in that
-    stage's dispatch order."""
+    stage's dispatch order.  ``backend`` / ``scan_impl`` forward to
+    :func:`repro.serving.fastsim.chained_lindley` per stage (the parity
+    property tests drive the jax engine through this path against the
+    numpy reference and the event-heap oracle)."""
     from .fastsim import chained_lindley
 
     comp = np.zeros((dag.num_stages, A.size))
@@ -1154,5 +1343,7 @@ def _chain_dag(dag: WorkflowDAG, topo: Sequence[int], A: np.ndarray,
         else:
             arr_j = np.max(np.stack([comp[p] for p in pr]), axis=0)
         comp[j] = chained_lindley(arr_j, [services[i]],
-                                  num_servers=[servers[i]])[-1]
+                                  num_servers=[servers[i]],
+                                  backend=backend,
+                                  scan_impl=scan_impl)[-1]
     return comp

@@ -465,6 +465,37 @@ def _make_chunk_jax():
     return scan_chunk
 
 
+def _make_chunk_dag_jax(num_stages: int):
+    """Build the jitted fused tandem-chunk evaluator: one device program
+    statically unrolled over the J stages, each replaying the c = 1
+    closed form (``P = cumsum(S)``, ``M = cummax(A - (P - S))``,
+    ``C = P + max(M, comp0)``) with stage j+1 consuming stage j's
+    completions in-register.  Allclose (~1e-13) vs the numpy chunk, not
+    bit-exact: XLA's ``cumsum`` may reassociate the prefix additions —
+    the same caveat :func:`_chunk_closed_form` already carries vs the
+    sequential recursion.  Returns per-stage waits, sojourns, departures
+    and the carried backlog tails."""
+    _jax, _jnp = _fs._jax, _fs._jnp
+
+    @_jax.jit
+    def chunk(A, S, comp0):           # (n,), (J, n), (J,)
+        cur = A
+        waits, lats, tails = [], [], []
+        for j in range(num_stages):   # static unroll over stages
+            s = S[j]
+            P = _jnp.cumsum(s)
+            M = _jax.lax.cummax(cur - (P - s))
+            C = P + _jnp.maximum(M, comp0[j])
+            waits.append(_jnp.maximum(C - s - cur, 0.0))
+            lats.append(C - cur)
+            tails.append(C[-1])
+            cur = C
+        return (_jnp.stack(waits), _jnp.stack(lats), cur,
+                _jnp.stack(tails))
+
+    return chunk
+
+
 def replay_mix(trace, service_mean_s: Sequence[float],
                service_p95_s: Optional[Sequence[float]] = None, *,
                num_servers: int = 1, slo_s: Optional[float] = None,
@@ -611,6 +642,7 @@ class DagReplayStats:
 def replay_dag(trace, stage_mean_s: Sequence[float],
                stage_p95_s: Optional[Sequence[float]] = None, *,
                slo_s: Optional[float] = None, seed: int = 0,
+               backend: str = "auto",
                quantile_bins: int = 8192) -> DagReplayStats:
     """Stream one chunked trace through a *tandem* of single-server stages
     via chained closed-form Lindley recursions — stage n's departures are
@@ -625,7 +657,23 @@ def replay_dag(trace, stage_mean_s: Sequence[float],
     trace-fingerprint)`` in the :func:`replay_mix` style.  Multi-server or
     fork-join pipelines need :func:`repro.serving.dag.sweep_pipeline` or
     the event-heap :class:`repro.serving.dag.DagSimulator`.
+
+    ``backend`` follows the fastsim convention.  ``"auto"`` and
+    ``"numpy"`` run the per-stage numpy closed form (engine
+    ``"chained_closed_form"`` — the byte-stable reference, and the
+    consistent ``"auto"`` resolution: this is the all-c = 1 case, where
+    the flat replay resolves to ``closed_form`` too).  ``"jax"`` fuses
+    all J stage recursions into one jitted device program per chunk
+    (engine ``"chained_closed_form_jax"``), carrying the per-stage
+    backlog vector across chunk boundaries on the host — allclose
+    (~1e-13) agreement, identical content-keyed service draws.
     """
+    if backend not in ("auto", "numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "jax" and not jax_available():
+        raise RuntimeError(
+            f"backend='jax' requested but jax is not importable "
+            f"({jax_unavailable_reason()})")
     means = np.asarray(stage_mean_s, dtype=float)
     if means.ndim != 1 or means.size == 0:
         raise ValueError("stage_mean_s must be a non-empty 1-D sequence")
@@ -663,26 +711,60 @@ def replay_dag(trace, stage_mean_s: Sequence[float],
     e2e_sketch = StreamingQuantile(quantile_bins, e2e_init)
     comp0 = np.zeros(J, dtype=float)
 
+    use_jax = backend == "jax"
+    if use_jax:
+        from jax.experimental import enable_x64
+        chunk_jax = _make_chunk_dag_jax(J)
+
     for A in trace.chunks():
         n = A.size
-        cur = A
-        for j in range(J):
-            if ln_params is not None:
-                mu, sigma = ln_params[j]
-                S = gens[j].lognormal(mean=mu, sigma=sigma, size=n)
-            else:
-                S = gens[j].exponential(scale=means[j], size=n)
-            waits, lats, tail = _chunk_closed_form(cur, S[:, None],
-                                                   comp0[j:j + 1])
-            comp0[j] = tail[0]
-            w = waits[:, 0]
-            l = lats[:, 0]
-            wait_sum[j] += w.sum()
-            lat_sum[j] += l.sum()
-            if n:
-                max_lat[j] = max(max_lat[j], float(l.max()))
-            sketches[j].update(l)
-            cur = cur + l   # departures: stage arrivals + stage sojourns
+        if use_jax and n:
+            S = np.empty((J, n), dtype=float)
+            for j in range(J):
+                if ln_params is not None:
+                    mu, sigma = ln_params[j]
+                    S[j] = gens[j].lognormal(mean=mu, sigma=sigma, size=n)
+                else:
+                    S[j] = gens[j].exponential(scale=means[j], size=n)
+            # pad to a power-of-two length so jit specializes on few
+            # shapes; zero-arrival / zero-service pad slots replicate
+            # each stage's last completion, leaving the carried backlog
+            # tails untouched
+            pad = max(4096, 1 << (n - 1).bit_length()) - n
+            Ap = np.pad(A, (0, pad))
+            Sp = np.pad(S, ((0, 0), (0, pad)))
+            with enable_x64():
+                wj, lj, dep, tails = chunk_jax(
+                    _fs._jnp.asarray(Ap), _fs._jnp.asarray(Sp),
+                    _fs._jnp.asarray(comp0))
+                waits_g = np.asarray(wj)[:, :n]
+                lats_g = np.asarray(lj)[:, :n]
+                cur = np.asarray(dep)[:n]
+                comp0 = np.asarray(tails)
+            for j in range(J):
+                wait_sum[j] += waits_g[j].sum()
+                lat_sum[j] += lats_g[j].sum()
+                max_lat[j] = max(max_lat[j], float(lats_g[j].max()))
+                sketches[j].update(lats_g[j])
+        else:
+            cur = A
+            for j in range(J):
+                if ln_params is not None:
+                    mu, sigma = ln_params[j]
+                    S1 = gens[j].lognormal(mean=mu, sigma=sigma, size=n)
+                else:
+                    S1 = gens[j].exponential(scale=means[j], size=n)
+                waits, lats, tail = _chunk_closed_form(cur, S1[:, None],
+                                                       comp0[j:j + 1])
+                comp0[j] = tail[0]
+                w = waits[:, 0]
+                l = lats[:, 0]
+                wait_sum[j] += w.sum()
+                lat_sum[j] += l.sum()
+                if n:
+                    max_lat[j] = max(max_lat[j], float(l.max()))
+                sketches[j].update(l)
+                cur = cur + l   # departures: arrivals + stage sojourns
         e2e = cur - A
         count += n
         e2e_lat_sum += e2e.sum()
@@ -694,7 +776,7 @@ def replay_dag(trace, stage_mean_s: Sequence[float],
 
     duration = float(trace.duration_s)
     n_eff = max(count, 1)
-    engine = "chained_closed_form"
+    engine = "chained_closed_form_jax" if use_jax else "chained_closed_form"
 
     def stats(wsum: float, lsum: float, sketch: StreamingQuantile,
               mx: float, ok: Optional[int]) -> ReplayStats:

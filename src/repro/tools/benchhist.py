@@ -75,6 +75,9 @@ VOLATILE_KEYS = frozenset({
     "jax_speedup",
     "numpy_rps",
     "jax_rps",
+    "jax_wall_s",
+    "numpy_s",
+    "jax_s",
     "gate",
     "large_sweep",
 })

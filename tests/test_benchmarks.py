@@ -291,6 +291,25 @@ def test_record_then_gate_all_roundtrip(tmp_path):
     assert "fastsim_bench.batch_speedup_c1" in proc.stdout
 
 
+def test_composed_run_record_gate_single_invocation(tmp_path):
+    """`--smoke --record --gate-all` must compose run -> record -> gate in
+    ONE invocation (the ``ci/bench_record.sh`` recipe): the selected
+    benchmark runs at smoke settings, its measurements land in the
+    throwaway bench-dir, and the suite gate judges that freshly appended
+    trajectory before the process exits 0."""
+    from repro.tools import benchhist
+
+    proc = _run_gate("--smoke", "--record", "--gate-all",
+                     f"--bench-dir={tmp_path}", "dag_bench")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "dag_bench," in proc.stdout          # the benchmark ran
+    assert "recorded" in proc.stderr            # ... and recorded
+    assert "gate-all: OK" in proc.stdout        # ... and was gated
+    runs = benchhist.load_trajectory(
+        benchhist.trajectory_path(tmp_path, "dag_bench"))
+    assert len(runs) == 1 and runs[0].mode == "smoke"
+
+
 def test_gate_all_on_committed_trajectories_exits_zero():
     """The committed per-PR trajectories must pass their own gate — this
     is the suite-wide generalization of --perf-gate, and it runs on

@@ -300,6 +300,39 @@ def test_resolve_backend_auto_on_dag_sized_grids():
         total_slots=full) == "numpy"
 
 
+def test_resolve_backend_auto_counts_stage_recursions():
+    """Pipeline-aware auto sizing: the amortization bar counts recursion
+    steps (``total_slots x num_stages``), so a per-stage grid too small
+    for the flat path qualifies once enough chained stages multiply the
+    device work — and exactly at the boundary on both sides.
+    """
+    bar = fastsim._JAX_AUTO_MIN_SLOTS
+    want = "jax" if jax_available() else "numpy"
+
+    # flat default (num_stages=1): the bar applies to total_slots alone
+    assert resolve_backend("auto", total_slots=bar - 1) == "numpy"
+    assert resolve_backend("auto", total_slots=bar) == want
+    assert resolve_backend("auto", total_slots=bar - 1,
+                           num_stages=1) == "numpy"
+
+    # a 3-stage pipeline clears the bar at a third of the flat slot count
+    per_stage = -(-bar // 3)                     # ceil(bar / 3)
+    assert per_stage * 3 >= bar
+    assert per_stage < bar
+    assert resolve_backend("auto", total_slots=per_stage,
+                           num_stages=3) == want
+    # ... but one slot under the boundary still resolves numpy
+    under = (bar - 1) // 3
+    assert under * 3 < bar
+    assert resolve_backend("auto", total_slots=under,
+                           num_stages=3) == "numpy"
+
+    # degenerate stage counts clamp to the flat semantics, never divide
+    assert resolve_backend("auto", total_slots=bar, num_stages=0) == want
+    assert resolve_backend("auto", total_slots=bar - 1,
+                           num_stages=0) == "numpy"
+
+
 # --------------------------------------------------------------------------
 # Planner.validate backend forwarding
 # --------------------------------------------------------------------------
