@@ -1,0 +1,216 @@
+"""Chaos benchmark: degradation-aware adaptation through a capacity outage.
+
+The scenario stacks the fault plane's three hazards against a c = 4 pool
+serving the synthetic three-rung ladder (the Table-I shape also used by
+:mod:`benchmarks.multi_server_bench`):
+
+- **crash/recover**: workers 0 and 1 crash in sequence mid-run and come
+  back together much later — the pool spends the middle of the run at
+  half capacity;
+- **flash crowd**: the arrival rate ramps to 2x base *during* the outage
+  (the compound failure the paper's fixed-capacity setting fears most);
+- **straggler**: one surviving worker serves 1.5x slower for a stretch
+  of the outage window.
+
+Three arms replay the identical trace, all through the
+:func:`repro.serving.fastsim.simulate` dispatcher (a non-empty fault
+schedule routes every arm to the event-heap oracle):
+
+- ``degradation-aware``: Elastico over the full-capacity table plus the
+  pre-derived per-c' degraded tables
+  (:func:`repro.core.aqm.derive_degraded_tables`);
+  :meth:`repro.core.elastico.ElasticoController.on_capacity_change`
+  swaps the active table the moment the scheduler loses or regains a
+  worker, so thresholds always describe the *surviving* capacity.
+- ``fault-oblivious``: the same controller with full-capacity thresholds
+  only — it still reacts to the backlog the outage causes, but with
+  N(up) targets sized for 4 workers it reacts late and relaxes early.
+- ``static-accurate``: the most-accurate rung pinned, the paper's
+  fault-free baseline — at half capacity its service rate is below the
+  crowd's arrival rate, so the queue (and latency) diverge until
+  recovery.
+
+The headline (and the smoke gate) is the PR's acceptance criterion:
+degradation-aware SLO compliance must be >= 1.5x the static ladder's
+through the outage.  Everything is virtual-time deterministic given the
+seeds.
+"""
+
+from __future__ import annotations
+
+from repro.core.aqm import HysteresisSpec, derive_degraded_tables, derive_policies
+from repro.core.elastico import ElasticoController
+from repro.core.pareto import LatencyProfile, ParetoPoint
+from repro.serving import fastsim
+from repro.serving.faults import FaultSchedule, Straggler, WorkerCrash
+from repro.serving.simulator import lognormal_sampler_from_profile
+from repro.serving.workload import flash_crowd_pattern, generate_arrivals
+
+from repro.tools.benchhist import BenchmarkSpec, MeasurementSpec
+
+from .common import Timer, save_json
+
+
+def _variant(rows, name):
+    (row,) = [r for r in rows if r["variant"] == name]
+    return row
+
+
+# Trajectory measurements (BENCH_fault_bench.json): the acceptance-
+# criterion ratio (>= 1.5x static through the outage), the aware arm's
+# absolute compliance, and its margin over fault-oblivious switching.
+BENCH_SPEC = BenchmarkSpec(
+    artifact="fault_bench.json",
+    smoke_artifact="fault_bench_smoke.json",
+    measurements=(
+        MeasurementSpec(
+            "aware_vs_static_compliance", "x", True,
+            extract=lambda rows: (
+                _variant(rows, "degradation-aware")["compliance"]
+                / max(_variant(rows, "static-accurate")["compliance"], 1e-9)),
+            target=1.5, tolerance=0.15),
+        MeasurementSpec(
+            "aware_compliance", "frac", True,
+            extract=lambda rows: _variant(
+                rows, "degradation-aware")["compliance"],
+            tolerance=0.05),
+        MeasurementSpec(
+            "aware_vs_oblivious_goodput", "x", True,
+            extract=lambda rows: (
+                _variant(rows, "degradation-aware")["goodput"]
+                / max(_variant(rows, "fault-oblivious")["goodput"], 1e-9)),
+            tolerance=0.10),
+    ),
+)
+
+# the synthetic Table-I-shaped ladder (seconds) at a 1 s SLO
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+SLO_S = 1.0
+NUM_SERVERS = 4
+# base 6 qps: the accurate rung is stable at c = 4 (rho ~ 0.68) and
+# unstable at c = 2 (service rate 4.4 qps) — the outage alone breaks the
+# static ladder, and the 2x crowd during it breaks it decisively
+BASE_QPS = 6.0
+CROWD_FACTOR = 2.0
+DURATION_S = 120.0
+
+
+def _front():
+    return [
+        ParetoPoint(config=("rung", i), accuracy=a,
+                    profile=LatencyProfile(mean=m, p95=p))
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def _scenario(duration_s: float, seed: int = 1):
+    """The trace and the fault schedule, timed as fractions of the horizon
+    so smoke runs exercise the same phases."""
+    crowd = flash_crowd_pattern(
+        BASE_QPS, peak_factor=CROWD_FACTOR,
+        crowd_start_s=0.35 * duration_s,
+        ramp_s=0.05 * duration_s,
+        hold_s=0.20 * duration_s)
+    arrivals = generate_arrivals(crowd, duration_s, seed=seed)
+    faults = FaultSchedule(
+        crashes=(
+            WorkerCrash(time_s=0.25 * duration_s, worker_id=0,
+                        recover_s=0.70 * duration_s),
+            WorkerCrash(time_s=0.30 * duration_s, worker_id=1,
+                        recover_s=0.70 * duration_s),
+        ),
+        stragglers=(
+            Straggler(worker_id=2, start_s=0.40 * duration_s,
+                      end_s=0.50 * duration_s, factor=1.5),
+        ),
+    )
+    return arrivals, faults
+
+
+def _run(duration_s: float, artifact: str = "fault_bench.json",
+         stable: bool = False) -> dict:
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    arrivals, faults = _scenario(duration_s)
+    hyst = HysteresisSpec(downscale_cooldown_s=5.0)
+    table = derive_policies(_front(), slo_p95_s=SLO_S, hysteresis=hyst,
+                            num_servers=NUM_SERVERS)
+    degraded = derive_degraded_tables(_front(), slo_p95_s=SLO_S,
+                                      hysteresis=hyst,
+                                      num_servers=NUM_SERVERS)
+    arms = {
+        "degradation-aware": lambda: (
+            ElasticoController(table, degraded_tables=degraded), 0),
+        "fault-oblivious": lambda: (ElasticoController(table), 0),
+        "static-accurate": lambda: (None, len(MEANS) - 1),
+    }
+    rows = []
+    total_completed = 0
+    with Timer() as t:
+        for name, make in arms.items():
+            ctrl, static = make()
+            out = fastsim.simulate(
+                sampler, arrivals, duration_s,
+                controller=ctrl,
+                static_index=static,
+                seed=0,
+                num_servers=NUM_SERVERS,
+                faults=faults,
+            )
+            total_completed += out.num_completed
+            rows.append({
+                "variant": name,
+                "offered": out.offered,
+                "completed": out.num_completed,
+                "failed": out.failed,
+                "retried": out.retried,
+                "in_flight": out.in_flight,
+                "compliance": out.slo_compliance(SLO_S),
+                "goodput": out.goodput(SLO_S),
+                "p95_latency_s": out.p95_latency(),
+                "mean_accuracy": out.mean_accuracy(ACCS),
+                "switches": len(out.switch_events),
+                "capacity_swaps": (len(ctrl.capacity_timeline)
+                                   if ctrl is not None else 0),
+            })
+    save_json(artifact, rows, stable=stable)
+
+    aware = _variant(rows, "degradation-aware")
+    obliv = _variant(rows, "fault-oblivious")
+    static = _variant(rows, "static-accurate")
+    ratio = aware["compliance"] / max(static["compliance"], 1e-9)
+    derived = (
+        f"c={NUM_SERVERS} outage+crowd: compliance "
+        f"aware={aware['compliance']:.3f} "
+        f"oblivious={obliv['compliance']:.3f} "
+        f"static={static['compliance']:.3f} ({ratio:.2f}x static, "
+        f"{aware['capacity_swaps']} capacity swaps, "
+        f"{aware['retried']} retries)"
+        + ("" if ratio >= 1.5 else " [<1.5x: acceptance FAILED]")
+    )
+    return {
+        "name": "fault_bench",
+        "us_per_call": t.elapsed / max(total_completed, 1) * 1e6,
+        "derived": derived,
+    }
+
+
+def run() -> dict:
+    return _run(DURATION_S)
+
+
+def run_smoke() -> dict:
+    """Smallest setting: a 40 s horizon with the same phase fractions —
+    the outage, crowd, and straggler windows all still overlap.  The
+    smoke gate asserts the >= 1.5x acceptance ratio so a regression in
+    degradation-aware switching fails CI, not just the full run."""
+    result = _run(40.0, artifact="fault_bench_smoke.json", stable=True)
+    if "FAILED" in result["derived"]:
+        raise AssertionError(
+            f"fault_bench smoke gate: {result['derived']}")
+    return result
+
+
+if __name__ == "__main__":
+    print(run())

@@ -58,6 +58,7 @@ from . import (
     cost_objective,
     dag_bench,
     fastsim_bench,
+    fault_bench,
     fig1_pareto,
     predictive_ablation,
     fig3_convergence,
@@ -90,6 +91,7 @@ MODULES = {
     "fastsim_bench": fastsim_bench,
     "trace_replay": trace_replay_bench,
     "dag_bench": dag_bench,
+    "fault_bench": fault_bench,
 }
 
 BENCHES = {name: mod.run for name, mod in MODULES.items()}

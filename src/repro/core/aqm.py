@@ -921,6 +921,55 @@ def derive_mix_policies(
     )
 
 
+def derive_degraded_tables(
+    front: Sequence[ParetoPoint],
+    *,
+    slo_p95_s: float,
+    slack_buffer_s: float = 0.050,
+    hysteresis: HysteresisSpec = HysteresisSpec(),
+    num_servers: int,
+    max_batch_size: int = 1,
+    batch_profiles: Optional[Sequence[Optional[BatchProfile]]] = None,
+    heterogeneous: bool = False,
+):
+    """Pre-derive one threshold table per surviving capacity c' in 1..c.
+
+    The degradation-aware analogue of re-running :func:`derive_policies`
+    offline when the deployment shrinks: losing a worker changes the
+    aggregate drain rate c/s-bar that every threshold is stated in
+    (Eq. 10/13 scale linearly with c), so a ladder derived for c servers
+    is silently wrong at c - 1 — its N_up tolerates queues the surviving
+    pool can no longer drain inside the SLO.  This helper derives the
+    whole family up front so the runtime can swap tables at the instant a
+    crash is detected (:meth:`repro.core.elastico.ElasticoController.\
+on_capacity_change`) instead of thrashing on stale thresholds.
+
+    Returns ``{c': table}`` for every c' in 1..``num_servers`` (the full-
+    capacity table is included at key ``num_servers``, derived by the
+    identical call :meth:`repro.core.planner.Planner.plan` makes, so the
+    runtime's full-capacity behavior is unchanged by construction).
+    ``heterogeneous=True`` derives mix ladders
+    (:func:`derive_mix_policies`) instead — for offline capacity planning
+    only; the runtime capacity swap is homogeneous-only because a degraded
+    mix table's assignment vectors are sized for the surviving pool.
+    """
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    derive = derive_mix_policies if heterogeneous else derive_policies
+    return {
+        c: derive(
+            front,
+            slo_p95_s=slo_p95_s,
+            slack_buffer_s=slack_buffer_s,
+            hysteresis=hysteresis,
+            num_servers=c,
+            max_batch_size=max_batch_size,
+            batch_profiles=batch_profiles,
+        )
+        for c in range(1, num_servers + 1)
+    }
+
+
 def mix_mean_wait(mix: MixPolicy, arrival_rate_qps: float) -> float:
     """Predicted stationary mean wait of a heterogeneous mix under Poisson
     arrivals at ``arrival_rate_qps`` — Allen-Cunneen M/G/c with the mix's

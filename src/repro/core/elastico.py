@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Mapping, Optional, Sequence, Tuple
 
 from .aqm import AQMPolicyTable, MixPolicy, MixPolicyTable, SwitchingPolicy
 
@@ -75,12 +75,22 @@ class ElasticoController:
     table: AQMPolicyTable
     initial_index: Optional[int] = None
     aggressive_descent: bool = False
+    # degradation-aware adaptation (beyond-paper): one threshold table per
+    # surviving capacity c' (:func:`repro.core.aqm.derive_degraded_tables`).
+    # When the runtime loses or regains workers it calls
+    # :meth:`on_capacity_change` and the controller swaps the active table,
+    # instantly re-anchoring N_up/N_dn to the surviving drain rate instead
+    # of thrashing on thresholds derived for a pool that no longer exists.
+    degraded_tables: Optional[Mapping[int, AQMPolicyTable]] = None
 
     current_index: int = field(init=False)
     last_upscale_s: float = field(init=False, default=float("-inf"))
     last_downscale_s: float = field(init=False, default=float("-inf"))
     _low_since_s: Optional[float] = field(init=False, default=None)
     events: List[SwitchEvent] = field(init=False, default_factory=list)
+    # (time_s, live_servers) table swaps applied by on_capacity_change
+    capacity_timeline: List[Tuple[float, int]] = field(init=False,
+                                                       default_factory=list)
 
     def __post_init__(self) -> None:
         if self.table.ladder_size == 0:
@@ -94,6 +104,17 @@ class ElasticoController:
         )
         if not 0 <= self.current_index < self.table.ladder_size:
             raise ValueError("initial index out of range")
+        # the table the controller was built with is the full-capacity
+        # table; capacity recoveries restore it
+        self._full_table = self.table
+        if self.degraded_tables is not None:
+            for c, tab in self.degraded_tables.items():
+                if int(c) < 1:
+                    raise ValueError("degraded_tables keys are live server "
+                                     "counts (>= 1)")
+                if tab.ladder_size == 0:
+                    raise ValueError(
+                        f"degraded table for c'={c} admits no configuration")
 
     # -- accessors ------------------------------------------------------------
 
@@ -251,7 +272,59 @@ class ElasticoController:
         self.events.append(event)
         return event
 
+    def on_capacity_change(self, live_servers: int, queue_depth: int,
+                           now_s: float) -> Optional[SwitchEvent]:
+        """Swap the active threshold table to the one derived for the
+        surviving capacity (degradation-aware adaptation).
+
+        Called by the scheduler when a worker is marked down or up
+        (:meth:`repro.serving.scheduler.Scheduler.mark_worker_down`).  At
+        full capacity (or above any derived table) the full table is
+        restored.  The active ladder *index* is preserved — the admitted
+        ladder is capacity-independent (Eq. 7 excludes on p95 vs SLO
+        alone), so rung k names the same configuration in every table —
+        and only clamped when a degraded table is shorter; a clamp emits a
+        :class:`SwitchEvent` so the runtime actually changes rung.  Either
+        way the sustain window resets: thresholds just moved, so a
+        downscale decision pending against the old ones is stale.  A
+        no-op (returns None) without ``degraded_tables`` or when no table
+        is derived for this capacity.
+        """
+        if live_servers < 1:
+            raise ValueError("live_servers must be >= 1")
+        if queue_depth < 0:
+            raise ValueError("negative queue depth")
+        if self.degraded_tables is None:
+            return None
+        if live_servers >= self._full_table.num_servers:
+            new_table = self._full_table
+        else:
+            new_table = self.degraded_tables.get(live_servers)
+            if new_table is None:
+                return None
+        if new_table is self.table:
+            return None
+        self.table = new_table
+        self._low_since_s = None
+        self.capacity_timeline.append((now_s, live_servers))
+        k = self.current_index
+        if k < new_table.ladder_size:
+            return None
+        event = SwitchEvent(
+            time_s=now_s,
+            from_index=k,
+            to_index=new_table.ladder_size - 1,
+            queue_depth=queue_depth,
+            direction="faster",
+            reason=(f"capacity change: {live_servers} live server(s), "
+                    f"ladder clamped from rung {k}"),
+        )
+        self.current_index = event.to_index
+        self.events.append(event)
+        return event
+
     def reset(self) -> None:
+        self.table = self._full_table
         self.current_index = (
             self.initial_index
             if self.initial_index is not None
@@ -261,6 +334,7 @@ class ElasticoController:
         self.last_downscale_s = float("-inf")
         self._low_since_s = None
         self.events.clear()
+        self.capacity_timeline.clear()
 
 
 @dataclass
@@ -301,3 +375,12 @@ class ElasticoMixController(ElasticoController):
 
     def assignment_for(self, index: int) -> Tuple[int, ...]:
         return self.table.assignment(index)
+
+    def on_capacity_change(self, live_servers: int, queue_depth: int,
+                           now_s: float) -> Optional[SwitchEvent]:
+        raise NotImplementedError(
+            "runtime capacity swap is homogeneous-only: a degraded mix "
+            "table's assignment vectors are sized for the surviving pool "
+            "and cannot repin a pool with fixed worker indices; use "
+            "derive_degraded_tables(..., heterogeneous=True) for offline "
+            "capacity planning instead")

@@ -29,6 +29,7 @@ from .aqm import (
     AQMPolicyTable,
     HysteresisSpec,
     MixPolicyTable,
+    derive_degraded_tables,
     derive_mix_policies,
     derive_policies,
 )
@@ -87,6 +88,21 @@ class DeploymentPlan:
     profiled: Dict[Config, LatencyProfile]
     dominated: Tuple[ParetoPoint, ...]
     mix_table: Optional[MixPolicyTable] = None
+    # degradation-aware adaptation (beyond-paper): {c': table} for every
+    # surviving capacity c' in 1..num_servers, pre-derived so the runtime
+    # can re-anchor thresholds the instant a worker is lost
+    # (:func:`repro.core.aqm.derive_degraded_tables`).  None for c = 1
+    # plans — there is no smaller capacity to degrade to.
+    degraded_tables: Optional[Dict[int, AQMPolicyTable]] = None
+
+    def controller(self, **kwargs) -> "ElasticoController":  # noqa: F821
+        """Build the runtime controller for this plan, degradation-aware
+        whenever the plan carries degraded tables."""
+        from .elastico import ElasticoController
+
+        return ElasticoController(self.table,
+                                  degraded_tables=self.degraded_tables,
+                                  **kwargs)
 
     def describe(self) -> str:
         batch = (f", in-worker batching B = {self.table.max_batch_size}"
@@ -117,6 +133,12 @@ class DeploymentPlan:
                     f"acc~{mp.expected_accuracy:.3f} N_up={mp.upscale_threshold} "
                     f"N_dn={mp.downscale_threshold} N_steal={mp.steal_threshold}"
                 )
+        if self.degraded_tables is not None:
+            lines.append(
+                f"  degraded ladders: thresholds pre-derived for "
+                f"c' = 1..{self.table.num_servers} (capacity-loss "
+                f"re-anchoring via on_capacity_change)"
+            )
         return "\n".join(lines)
 
 
@@ -296,12 +318,27 @@ class Planner:
                 num_servers=self.num_servers,
                 max_batch_size=self.max_batch_size,
             )
+        degraded: Optional[Dict[int, AQMPolicyTable]] = None
+        if self.num_servers > 1:
+            # pre-derive the degraded-capacity family so the runtime can
+            # re-anchor thresholds the instant a worker is lost; c' == c
+            # repeats the derive_policies call above (identical thresholds
+            # by construction — full capacity behaves exactly as planned)
+            degraded = derive_degraded_tables(
+                front,
+                slo_p95_s=slo_p95_s,
+                slack_buffer_s=self.slack_buffer_s,
+                hysteresis=self.hysteresis,
+                num_servers=self.num_servers,
+                max_batch_size=self.max_batch_size,
+            )
         return DeploymentPlan(
             front=tuple(front),
             table=table,
             profiled=profiled,
             dominated=dominated,
             mix_table=mix_table,
+            degraded_tables=degraded,
         )
 
     def plan_pipeline(

@@ -65,6 +65,7 @@ from ..core.aqm import (
     fork_join_sojourn,
 )
 from ..core.elastico import ElasticoController
+from .faults import FaultSchedule
 from .scheduler import Dispatch, Scheduler
 from .simulator import (
     CompletedRequest,
@@ -615,9 +616,11 @@ class PipelinePlan:
 class StageStats:
     """Per-stage accounting of one :class:`DagSimulator` run.  The
     conservation invariant the property tests pin:
-    ``admitted == completed + in_flight`` at every stage, where
+    ``admitted == completed + in_flight + failed`` at every stage, where
     ``in_flight`` counts buffered plus in-service requests at the moment
-    the run stopped (always 0 for drained runs)."""
+    the run stopped (always 0 for drained fault-free runs) and ``failed``
+    counts requests whose crash-retry budget was exhausted at this stage
+    (always 0 without a fault schedule)."""
 
     name: str
     offered: int
@@ -627,6 +630,8 @@ class StageStats:
     busy_s: Tuple[float, ...]
     depth_samples: Tuple[Tuple[float, int], ...]
     config_timeline: Tuple[Tuple[float, int], ...]
+    failed: int = 0
+    retried: int = 0
 
     @property
     def admitted(self) -> int:
@@ -703,6 +708,16 @@ class DagSimulator:
     control_tick_s: float = 0.25
     switch_latency_s: float = 0.010
     seed: int = 0
+    # fault plane (beyond-paper): per-stage worker crashes/recoveries,
+    # straggler windows, and stage-wide brownouts
+    # (:mod:`repro.serving.faults` — every fault here must carry a stage
+    # index).  Crash semantics mirror the flat simulator: the in-flight
+    # batch on a crashed stage worker is cancelled and requeued at that
+    # stage's queue head, retrying up to ``retry_budget`` times before
+    # counting as ``failed`` at that stage.  An empty schedule (or None)
+    # reproduces the fault-free run bit-for-bit.
+    faults: Optional[FaultSchedule] = None
+    retry_budget: int = 3
 
     def _resolve_rungs(self) -> List[Tuple[int, ...]]:
         if self.static_stage_indices is not None:
@@ -739,6 +754,26 @@ class DagSimulator:
         preds = [dag.predecessors(j) for j in range(dag.num_stages)]
         succs = [dag.successors(j) for j in range(dag.num_stages)]
         rungs = self._resolve_rungs()
+
+        faults = (self.faults
+                  if self.faults is not None and not self.faults.is_empty()
+                  else None)
+        if self.retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        if faults is not None:
+            scoped = ([(c.stage, c.worker_id) for c in faults.crashes]
+                      + [(s.stage, s.worker_id) for s in faults.stragglers]
+                      + [(b.stage, 0) for b in faults.brownouts])
+            for j, w in scoped:
+                if j is None or not 0 <= j < dag.num_stages:
+                    raise ValueError(
+                        f"DAG faults must carry a stage index in "
+                        f"[0, {dag.num_stages}); got {j!r}")
+                if w >= dag.stages[j].num_servers:
+                    raise ValueError(
+                        f"fault addresses worker {w} of stage "
+                        f"{dag.stages[j].name!r} "
+                        f"(c={dag.stages[j].num_servers})")
 
         ctrl = self.controller
         if ctrl is not None:
@@ -777,6 +812,13 @@ class DagSimulator:
             heapq.heappush(events, (t, order, "tick", None))
             order += 1
             t += self.control_tick_s
+        if faults is not None:
+            # capacity events are seeded after arrivals and ticks, so at
+            # equal times they process after same-time ticks/arrivals
+            for j in range(dag.num_stages):
+                for ft, fkind, fworker in faults.capacity_events(j):
+                    heapq.heappush(events, (ft, order, fkind, (j, fworker)))
+                    order += 1
 
         arrival_time: Dict[int, float] = {i: a for i, a in enumerate(arrivals)}
         busy: List[List[float]] = [[0.0] * st.num_servers
@@ -790,6 +832,13 @@ class DagSimulator:
         stage_completed = [0] * dag.num_stages
         acc: Dict[int, float] = {}
         rung_timeline: List[Tuple[float, int]] = [(0.0, rung)]
+        # fault-tracking state, all untouched when faults is None: worker
+        # epochs (a crash bumps the epoch so the stale completion event is
+        # skipped), dispatch metadata needed to unwind a crashed batch,
+        # and per-(stage, request) crash-retry attempts
+        epoch: Dict[Tuple[int, int], int] = {}
+        meta: Dict[Tuple[int, int], Tuple[int, float, float, int, float]] = {}
+        attempts: Dict[Tuple[int, int], int] = {}
 
         def execute_stage(j: int, polled) -> None:
             nonlocal order
@@ -797,12 +846,15 @@ class DagSimulator:
             assert not lingers     # B = 1: no linger is ever scheduled
             for d in dispatches:
                 svc = samplers[j](d.config_index, rngs[j])
+                if faults is not None:
+                    svc *= faults.inflation(d.worker_id, d.start_s, stage=j)
                 comp = d.start_s + svc
                 busy[j][d.worker_id] += comp - d.start_s
                 a_factor = dag.stages[j].accuracy_of(d.config_index)
                 for rid in d.items:
                     if a_factor != 1.0 or rid in acc:
                         acc[rid] = acc.get(rid, 1.0) * a_factor
+                rec_lo = len(completed)
                 if j == sink:
                     for rid in d.items:
                         completed.append(CompletedRequest(
@@ -815,8 +867,13 @@ class DagSimulator:
                             batch_size=d.batch_size,
                         ))
                 pending[(j, d.worker_id)] = d.items
+                ep = 0
+                if faults is not None:
+                    key = (j, d.worker_id)
+                    ep = epoch.get(key, 0)
+                    meta[key] = (ep, d.start_s, comp, rec_lo, a_factor)
                 heapq.heappush(events, (comp, order, "completion",
-                                        (j, d.worker_id)))
+                                        (j, d.worker_id, ep)))
                 order += 1
 
         def poll_all(now: float) -> None:
@@ -864,11 +921,51 @@ class DagSimulator:
                 poll_all(now)
                 observe_ctrl(now)
             elif kind == "completion":
-                j, worker = payload  # type: ignore[misc]
+                j, worker, ep = payload  # type: ignore[misc]
+                if faults is not None:
+                    if ep != epoch.get((j, worker), 0):
+                        continue    # stale: the worker crashed mid-batch
+                    meta.pop((j, worker), None)
                 scheds[j].release(worker, now)
                 items = pending.pop((j, worker))
                 stage_completed[j] += len(items)
                 forward(j, items, now)
+                poll_all(now)
+                observe_ctrl(now)
+            elif kind == "crash":
+                j, w = payload  # type: ignore[misc]
+                scheds[j].mark_worker_down(w, now)
+                requeue: List[object] = []
+                key = (j, w)
+                if key in meta:
+                    # cancel the in-flight batch: refund the unserved busy
+                    # time, undo the accuracy factor, null the sink
+                    # records, and requeue survivors at the queue head
+                    ep, start_s, comp_s, rec_lo, a_factor = meta.pop(key)
+                    epoch[key] = ep + 1
+                    items = pending.pop(key)
+                    busy[j][w] -= comp_s - max(start_s, min(now, comp_s))
+                    if a_factor != 1.0:
+                        for rid in items:
+                            acc[rid] = acc.get(rid, 1.0) / a_factor
+                    if j == sink:
+                        for i in range(rec_lo, rec_lo + len(items)):
+                            completed[i] = None  # type: ignore[call-overload]
+                    for rid in items:
+                        a = attempts.get((j, rid), 0) + 1
+                        attempts[(j, rid)] = a
+                        if a > self.retry_budget:
+                            scheds[j].record_failed(1)
+                        else:
+                            requeue.append(rid)
+                    scheds[j].worker_idle_while_down(w)
+                requeue.extend(scheds[j].drain_worker_backlog(w))
+                scheds[j].requeue_front(requeue)
+                poll_all(now)
+                observe_ctrl(now)
+            elif kind == "recover":
+                j, w = payload  # type: ignore[misc]
+                scheds[j].mark_worker_up(w, now)
                 poll_all(now)
                 observe_ctrl(now)
             else:   # control tick
@@ -879,6 +976,10 @@ class DagSimulator:
                 for j in range(dag.num_stages):
                     stage_depth_samples[j].append((now, scheds[j].buffered()))
 
+        if faults is not None:
+            # crashed sink dispatches left None placeholders (so earlier
+            # record indices stayed stable); drop them now
+            completed = [r for r in completed if r is not None]
         in_service = [0] * dag.num_stages
         for (j, _w), items in pending.items():
             in_service[j] += len(items)
@@ -891,6 +992,8 @@ class DagSimulator:
             busy_s=tuple(busy[j]),
             depth_samples=tuple(stage_depth_samples[j]),
             config_timeline=tuple(scheds[j].config_timeline),
+            failed=scheds[j].failed,
+            retried=scheds[j].retried,
         ) for j in range(dag.num_stages))
         assert drain or stopped_early or not events
 
@@ -908,6 +1011,9 @@ class DagSimulator:
             num_batches=sum(s.num_batches for s in scheds),
             offered=scheds[sources[0]].offered,
             dropped=sum(s.dropped for s in scheds),
+            failed=sum(s.failed for s in scheds),
+            retried=sum(s.retried for s in scheds),
+            in_flight=sum(s.in_flight for s in stats),
             stage_stats=stats,
             request_accuracy={r.request_id: acc.get(r.request_id, 1.0)
                               for r in completed},

@@ -66,7 +66,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence
 
 from ..core.elastico import ElasticoController, ElasticoMixController
-from .executor import ExecutionRecord, WorkerPool, WorkflowExecutor
+from .executor import ExecutionRecord, WorkerError, WorkerPool, WorkflowExecutor
+from .faults import FaultSchedule
 from .monitor import LoadMonitor
 from .scheduler import Scheduler
 from .workload import Request
@@ -92,6 +93,15 @@ class EngineReport:
     ``assignment_timeline`` records ``(time_s, assignment_vector)`` repin
     events when a mix controller drives a heterogeneous pool; empty for
     homogeneous runs, whose ``config_timeline`` records the global switches.
+
+    Robustness surface (beyond-paper): ``failed`` counts requests whose
+    workflow execution kept raising until the worker retry budget ran out
+    (distinct from admission ``dropped``); ``worker_errors`` lists every
+    captured worker-thread exception; ``drain_timed_out`` flags a
+    ``drain_and_stop`` that hit its deadline (or gave up because every
+    worker had halted) with ``backlog`` requests still unserved.  The
+    conservation invariant:
+    ``total_requests == len(records) + dropped + failed + backlog``.
     """
 
     records: List[ExecutionRecord]
@@ -107,6 +117,10 @@ class EngineReport:
     max_batch_size: int = 1
     rerouted: int = 0
     stolen_batches: int = 0
+    failed: int = 0
+    worker_errors: List[WorkerError] = field(default_factory=list)
+    drain_timed_out: bool = False
+    backlog: int = 0
 
     def slo_compliance(self, slo_s: float) -> float:
         if not self.records:
@@ -160,6 +174,9 @@ class ServingEngine:
         steal: bool = False,
         steal_threshold: Optional[int] = None,
         admission_reroute: bool = False,
+        faults: Optional[FaultSchedule] = None,
+        on_worker_error: str = "restart",
+        retry_budget: int = 3,
     ) -> None:
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
@@ -188,7 +205,21 @@ class ServingEngine:
         self.pool = WorkerPool(
             executor, c=num_workers, on_observe=self._observe,
             scheduler=self.scheduler, clock=clock,
+            on_worker_error=on_worker_error, retry_budget=retry_budget,
+            faults=faults,
         )
+        # wall-clock fault plane: capacity events (crash/recover) are
+        # applied from the control loop at tick granularity — a running
+        # thread cannot be preempted, so a "crashed" worker finishes its
+        # in-flight batch and then receives no further dispatches until the
+        # recovery event returns it to the free pool.  Straggler/brownout
+        # inflation is applied by the workers themselves (sleep-stretch in
+        # the worker loop).
+        self._faults = (faults if faults is not None and not faults.is_empty()
+                        else None)
+        self._fault_events = (list(self._faults.capacity_events(None))
+                              if self._faults is not None else [])
+        self._fault_pos = 0
         self.control_tick_s = control_tick_s
         self._clock = clock
         self._stop = threading.Event()
@@ -248,11 +279,23 @@ class ServingEngine:
         including any forming batch held open by a linger window) plus
         ``pool.pending()`` (dispatched to a worker mailbox but not yet
         finished), so a worker mid-linger cannot race the shutdown into
-        dropping its partial batch."""
+        dropping its partial batch.  The loop gives up early — instead of
+        sleeping out the full timeout — once every worker has halted on a
+        failure (``on_worker_error='halt'``), and reports either outcome
+        via ``EngineReport.drain_timed_out`` / ``backlog``."""
         deadline = self._clock() + timeout_s
+        drain_timed_out = False
         while (self.pool.buffered() > 0 or self.executor.in_flight() > 0
-               or self.pool.pending() > 0) and self._clock() < deadline:
+               or self.pool.pending() > 0):
+            if self.pool.all_workers_dead():
+                drain_timed_out = True   # nothing can drain this backlog
+                break
+            if self._clock() >= deadline:
+                drain_timed_out = True
+                break
             time.sleep(0.01)
+        backlog = (self.pool.buffered() + self.executor.in_flight()
+                   + self.pool.pending())
         with self.pool.lock:
             self.scheduler.close()
         self._stop.set()
@@ -275,6 +318,10 @@ class ServingEngine:
             max_batch_size=self.pool.max_batch_size,
             rerouted=self.scheduler.rerouted,
             stolen_batches=self.scheduler.stolen_batches,
+            failed=self.scheduler.failed,
+            worker_errors=list(self.pool.worker_errors),
+            drain_timed_out=drain_timed_out,
+            backlog=backlog,
         )
 
     # -- loops ---------------------------------------------------------------
@@ -285,8 +332,34 @@ class ServingEngine:
 
     def _control_loop(self) -> None:
         while not self._stop.is_set():
+            self._apply_faults()
             self._observe()
             time.sleep(self.control_tick_s)
+
+    def _apply_faults(self) -> None:
+        """Apply every due capacity event from the fault schedule: crash
+        takes the worker out of dispatch rotation (and rescues its
+        per-worker backlog to the queue head), recover returns it.  Both
+        run the scheduler's capacity-change hook, so a degradation-aware
+        controller swaps its threshold table in the same critical
+        section."""
+        if self._fault_pos >= len(self._fault_events):
+            return
+        now = self._now_rel()
+        with self.pool.lock:
+            while (self._fault_pos < len(self._fault_events)
+                   and self._fault_events[self._fault_pos][0] <= now):
+                _t, kind, w = self._fault_events[self._fault_pos]
+                self._fault_pos += 1
+                if kind == "crash":
+                    self.scheduler.mark_worker_down(w, now)
+                    rescued = self.scheduler.drain_worker_backlog(w)
+                    if rescued:
+                        self.scheduler.requeue_front(rescued)
+                else:
+                    self.scheduler.mark_worker_up(w, now)
+                self.pool._pump_locked()
+            self.pool.lock.notify_all()
 
     def _observe(self) -> None:
         if self.controller is None:

@@ -34,9 +34,10 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from ..core.space import Config
+from .faults import FaultSchedule
 from .scheduler import AdmissionDecision, Dispatch, Scheduler
 from .workload import Request
 
@@ -63,6 +64,20 @@ class ExecutionRecord:
     @property
     def latency_s(self) -> float:
         return self.completion_s - self.arrival_s
+
+
+@dataclass(frozen=True)
+class WorkerError:
+    """One captured worker-thread failure: a workflow function raised while
+    executing a dispatch.  Surfaced on ``WorkerPool.worker_errors`` (and
+    from there on :attr:`repro.serving.engine.EngineReport.worker_errors`)
+    instead of dying silently in a daemon thread."""
+
+    worker_id: int
+    time_s: float
+    request_ids: tuple
+    error: str          # repr of the exception
+    halted: bool        # True when the failure took the worker down
 
 
 class WorkflowExecutor:
@@ -264,7 +279,17 @@ class WorkerPool:
         batch_timeout_s: float = 0.0,
         scheduler: Optional[Scheduler] = None,
         clock: Callable[[], float] = time.monotonic,
+        on_worker_error: str = "restart",
+        retry_budget: int = 3,
+        faults: Optional[FaultSchedule] = None,
     ) -> None:
+        if on_worker_error not in ("restart", "halt"):
+            raise ValueError("on_worker_error must be 'restart' or 'halt'")
+        if retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        if faults is not None and faults.max_worker() >= c:
+            raise ValueError("fault schedule addresses a worker beyond the "
+                             f"pool size {c}")
         if scheduler is not None:
             if scheduler.num_workers != c:
                 raise ValueError(
@@ -296,6 +321,15 @@ class WorkerPool:
         self._clock = clock
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        # supervision: captured workflow exceptions, per-request retry
+        # attempts, and the set of workers halted by a failure
+        self._on_worker_error = on_worker_error
+        self.retry_budget = retry_budget
+        self.worker_errors: List[WorkerError] = []
+        self._retry_attempts: Dict[int, int] = {}
+        self._dead: set = set()
+        self._faults = (faults if faults is not None and not faults.is_empty()
+                        else None)
         self._served_per_worker = [0] * c
         self._dispatches_per_worker = [0] * c
         self._stolen_per_worker = [0] * c
@@ -389,6 +423,25 @@ class WorkerPool:
         drop a dispatched batch."""
         return sum(self._pending_per_worker)
 
+    def dead_workers(self) -> List[int]:
+        """Workers taken down by a workflow failure under
+        ``on_worker_error='halt'`` (reads are benign-racy)."""
+        with self.lock:
+            return sorted(self._dead)
+
+    def all_workers_dead(self) -> bool:
+        """True when every worker thread has halted on a failure — the
+        engine's drain loop gives up early instead of sleeping out its
+        timeout against a pool that can no longer make progress."""
+        with self.lock:
+            return len(self._dead) == self.c
+
+    def failed(self) -> int:
+        """Requests whose workflow execution kept raising until the retry
+        budget ran out (scheduler-accounted, distinct from drops)."""
+        with self.lock:
+            return self._sched.failed
+
     def in_flight(self) -> int:
         return self.executor.in_flight()
 
@@ -477,6 +530,8 @@ class WorkerPool:
             if self._on_observe is not None:
                 self._on_observe()   # arrival-to-service boundary decision
             cfg = d.config_index if d.pinned else None
+            error: Optional[BaseException] = None
+            t0 = self._clock()
             try:
                 if len(d.items) == 1:
                     # unbatched fast path: identical to the pre-batching pool
@@ -488,14 +543,70 @@ class WorkerPool:
                     self.executor.execute_batch(list(d.items),
                                                 worker_id=worker_id,
                                                 config_index=cfg)
-            finally:
-                with self.lock:
-                    self._pending_per_worker[worker_id] = 0
-                    self._sched.release(worker_id, self._clock())
-                    self._pump_locked()
+            except Exception as exc:   # worker supervision: capture, don't die
+                error = exc
+            if error is not None:
+                if self._supervise(worker_id, d, error):
+                    return   # halted: the thread exits, the worker stays down
+                continue
+            if self._faults is not None:
+                # straggler / brownout windows on the wall clock: stretch
+                # the batch's realized service time by the inflation factor
+                infl = self._faults.inflation(worker_id, t0)
+                if infl > 1.0:
+                    time.sleep((self._clock() - t0) * (infl - 1.0))
+            with self.lock:
+                self._pending_per_worker[worker_id] = 0
+                self._sched.release(worker_id, self._clock())
+                self._pump_locked()
             self._served_per_worker[worker_id] += len(d.items)
             self._dispatches_per_worker[worker_id] += 1
             if d.stolen:
                 self._stolen_per_worker[worker_id] += 1
             if self._on_observe is not None:
                 self._on_observe()
+
+    def _supervise(self, worker_id: int, d: Dispatch,
+                   exc: BaseException) -> bool:
+        """Handle a workflow exception: record it, requeue the batch at the
+        queue head under the retry budget (exhausted requests count as
+        ``failed`` on the scheduler), and either release the worker back
+        into rotation (``on_worker_error='restart'``) or take it down
+        (``'halt'`` — the scheduler stops routing to it and the thread
+        exits).  Returns True when the worker halted."""
+        halt = self._on_worker_error == "halt"
+        with self.lock:
+            now = self._clock()
+            self._pending_per_worker[worker_id] = 0
+            self.worker_errors.append(WorkerError(
+                worker_id=worker_id,
+                time_s=now,
+                request_ids=tuple(r.request_id for r in d.items),
+                error=repr(exc),
+                halted=halt,
+            ))
+            requeue = []
+            for req in d.items:
+                a = self._retry_attempts.get(req.request_id, 0) + 1
+                self._retry_attempts[req.request_id] = a
+                if a > self.retry_budget:
+                    self._sched.record_failed(1)
+                else:
+                    requeue.append(req)
+            if halt:
+                self._dead.add(worker_id)
+                # the worker never released: mark it down while busy, then
+                # flag it idle (its batch is cancelled) so a later
+                # mark_worker_up could return it to the free pool
+                self._sched.mark_worker_down(worker_id, now)
+                self._sched.worker_idle_while_down(worker_id)
+                requeue.extend(self._sched.drain_worker_backlog(worker_id))
+            else:
+                self._sched.release(worker_id, now)
+            if requeue:
+                self._sched.requeue_front(requeue)
+            self._pump_locked()
+            self.lock.notify_all()
+        if self._on_observe is not None:
+            self._on_observe()
+        return halt

@@ -158,6 +158,8 @@ def fast_path_eligible(
     queue_discipline: str = "shared",
     steal: bool = False,
     steal_threshold: Optional[int] = None,
+    faults: Any = None,
+    request_timeout_s: Optional[float] = None,
 ) -> bool:
     """Can this scenario take the vectorized fast path?
 
@@ -167,9 +169,11 @@ def fast_path_eligible(
     dynamic-policy feature — an Elastico controller, in-worker batching
     (B > 1; a linger window at B = 1 never forms, so ``batch_timeout_s``
     alone does not disqualify), admission control, per-worker backlogs,
-    work stealing — changes which request runs where/when in ways the
-    closed-form recursion does not capture, so those scenarios go to the
-    event-heap oracle."""
+    work stealing, fault injection (a non-empty
+    :class:`repro.serving.faults.FaultSchedule`), request deadlines —
+    changes which request runs where/when in ways the closed-form
+    recursion does not capture, so those scenarios go to the event-heap
+    oracle."""
     return (
         controller is None
         and max_batch_size == 1
@@ -178,6 +182,8 @@ def fast_path_eligible(
         and max_queue_depth is None
         and not admission_reroute
         and num_servers >= 1
+        and (faults is None or faults.is_empty())
+        and request_timeout_s is None
     )
 
 
@@ -553,6 +559,10 @@ def simulate(
     queue_discipline: str = "shared",
     steal: bool = False,
     steal_threshold: Optional[int] = None,
+    faults: Any = None,
+    retry_budget: int = 3,
+    request_timeout_s: Optional[float] = None,
+    retry_backoff_s: float = 0.05,
 ):
     """Dispatcher: one serving scenario, fastest engine that is still exact.
 
@@ -578,6 +588,8 @@ def simulate(
         queue_discipline=queue_discipline,
         steal=steal,
         steal_threshold=steal_threshold,
+        faults=faults,
+        request_timeout_s=request_timeout_s,
     ):
         return _run_fast_single(
             service_sampler,
@@ -606,6 +618,10 @@ def simulate(
         queue_discipline=queue_discipline,
         steal=steal,
         steal_threshold=steal_threshold,
+        faults=faults,
+        retry_budget=retry_budget,
+        request_timeout_s=request_timeout_s,
+        retry_backoff_s=retry_backoff_s,
     ).run(arrivals, duration_s)
 
 

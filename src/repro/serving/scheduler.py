@@ -77,7 +77,7 @@ from __future__ import annotations
 import heapq
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.elastico import ElasticoController, ElasticoMixController, SwitchEvent
 
@@ -260,6 +260,13 @@ class Scheduler:
                                           for _ in range(self.num_workers)]
         self._rr = 0                      # round-robin routing cursor
         self._free: List[int] = list(range(self.num_workers))  # min-heap
+        # worker liveness (fault plane): down workers never appear in
+        # _free, so neither poll path can dispatch to them.  _down_idle
+        # remembers whether a down worker owes a release — a worker that
+        # crashed mid-dispatch (virtual drivers cancel the batch; the
+        # threaded pool lets it finish) must not rejoin _free twice.
+        self._down: set = set()
+        self._down_idle: Dict[int, bool] = {}
         # one forming batch lingers at a time (shared discipline); the token
         # invalidates a scheduled expiry once its batch dispatched early.
         self._linger_pending = False
@@ -270,6 +277,8 @@ class Scheduler:
         self.dispatched = 0
         self.offered = 0
         self.dropped = 0
+        self.failed = 0       # retry budget exhausted (distinct from dropped)
+        self.retried = 0      # requeues after a crash / deadline expiry
         self.rerouted = 0
         self.stolen_batches = 0
         self.config_timeline: List[Tuple[float, int]] = (
@@ -456,8 +465,138 @@ class Scheduler:
     # -- workers -------------------------------------------------------------
 
     def release(self, worker_id: int, now: float) -> None:
-        """Mark a worker free (its previous dispatch completed)."""
+        """Mark a worker free (its previous dispatch completed).  A worker
+        that was marked down while serving stays out of the free heap; the
+        release is remembered so a later :meth:`mark_worker_up` restores
+        it exactly once."""
+        if worker_id in self._down:
+            self._down_idle[worker_id] = True
+            return
         heapq.heappush(self._free, worker_id)
+
+    # -- worker liveness (fault plane) ---------------------------------------
+
+    def live_workers(self) -> int:
+        """Workers currently up (down workers never receive dispatches)."""
+        return self.num_workers - len(self._down)
+
+    def is_down(self, worker_id: int) -> bool:
+        return worker_id in self._down
+
+    def mark_worker_down(self, worker_id: int, now: float):
+        """Take a worker out of service.  Idempotent.  Frees nothing the
+        worker holds — the driver owns cancelling/finishing the in-flight
+        dispatch (simulators cancel and call
+        :meth:`worker_idle_while_down`; the threaded pool lets the batch
+        finish, and :meth:`release` records the idle state).  Invokes the
+        controller's capacity-change hook (degradation-aware adaptation)
+        and returns the resulting switch event, if any."""
+        if not 0 <= worker_id < self.num_workers:
+            raise IndexError(f"worker {worker_id} out of range")
+        if worker_id in self._down:
+            return None
+        was_free = worker_id in self._free
+        if was_free:
+            self._free.remove(worker_id)
+            heapq.heapify(self._free)
+        self._down.add(worker_id)
+        self._down_idle[worker_id] = was_free
+        return self._on_capacity_change(now)
+
+    def worker_idle_while_down(self, worker_id: int) -> None:
+        """Driver note: the down worker's in-flight dispatch was cancelled
+        (or finished), so recovery should return it to the free heap."""
+        if worker_id in self._down:
+            self._down_idle[worker_id] = True
+
+    def mark_worker_up(self, worker_id: int, now: float):
+        """Return a worker to service.  Idempotent.  Rejoins the free heap
+        only when the worker is idle (its last dispatch was cancelled or
+        released while down).  Invokes the capacity-change hook and
+        returns the resulting switch event, if any."""
+        if worker_id not in self._down:
+            return None
+        self._down.discard(worker_id)
+        if self._down_idle.pop(worker_id, False):
+            heapq.heappush(self._free, worker_id)
+        return self._on_capacity_change(now)
+
+    def _on_capacity_change(self, now: float):
+        """Re-anchor the controller on the surviving capacity.  Only the
+        homogeneous controller participates: a mix controller's degraded
+        tables carry assignment vectors sized for the *surviving* pool,
+        which cannot be applied to this scheduler's fixed worker indexing
+        at runtime (derive them offline via
+        :func:`repro.core.aqm.derive_degraded_tables` for capacity
+        planning instead)."""
+        if self.controller is None or self._mix_ctrl is not None:
+            return None
+        hook = getattr(self.controller, "on_capacity_change", None)
+        if hook is None:
+            return None
+        ev = hook(self.live_workers(), self.buffered(), now)
+        if ev is not None:
+            self._apply_switch(ev, now)
+        return ev
+
+    # -- retry / requeue (fault plane) ---------------------------------------
+
+    def record_failed(self, n: int = 1) -> None:
+        """Count requests whose retry budget is exhausted — conservation
+        accounting distinguishes ``failed`` (gave up after faults) from
+        ``dropped`` (rejected at admission)."""
+        self.failed += n
+
+    def requeue_front(self, items: Sequence[Any]) -> None:
+        """Put recovered requests back at the *head* of the queue in their
+        original FIFO order (they already waited their turn once).  Not
+        counted in ``offered`` — requeues move admitted work, they are not
+        new arrivals.  Under per-worker queues the batch goes to the head
+        of the lowest-numbered live worker's backlog (the crashed owner is
+        down; any live backlog preserves FIFO-per-queue semantics)."""
+        if not items:
+            return
+        self.retried += len(items)
+        if self.queue_discipline == "shared":
+            self._waiting.extendleft(reversed(items))
+            return
+        target = 0
+        for w in range(self.num_workers):
+            if w not in self._down:
+                target = w
+                break
+        self._queues[target].extendleft(reversed(items))
+
+    def requeue_tail(self, item: Any) -> None:
+        """Re-enqueue one request at the tail (deadline-expiry retries
+        rejoin the back of the line).  Not counted in ``offered``."""
+        self.retried += 1
+        self._enqueue(item)
+
+    def cancel_waiting(self, item: Any) -> bool:
+        """Remove a buffered request (deadline expiry).  Returns False when
+        the item is no longer buffered (already dispatched)."""
+        try:
+            self._waiting.remove(item)
+            return True
+        except ValueError:
+            pass
+        for q in self._queues:
+            try:
+                q.remove(item)
+                return True
+            except ValueError:
+                continue
+        return False
+
+    def drain_worker_backlog(self, worker_id: int) -> List[Any]:
+        """Empty and return a worker's own backlog (crash recovery under
+        per-worker queues re-routes the orphaned backlog).  Always empty
+        under the shared discipline."""
+        q = self._queues[worker_id]
+        items = list(q)
+        q.clear()
+        return items
 
     def next_linger_deadline(self) -> Optional[Tuple[float, int]]:
         """(deadline, token) of the pending forming batch, if any — the

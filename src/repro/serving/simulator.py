@@ -79,6 +79,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.elastico import ElasticoController
 from ..core.pareto import BatchProfile
+from .faults import FaultSchedule
 from .scheduler import Dispatch, Linger, Scheduler
 from .workload import RateFn, generate_arrivals
 
@@ -173,6 +174,14 @@ class SimulationResult:
     dropped: int = 0            # admission-control rejections
     rerouted: int = 0           # admissions saved by the mix-aware re-route
     stolen_batches: int = 0     # dispatches pulled from another backlog
+    # fault plane: retry budget exhausted (distinct from dropped), requeues
+    # after crashes / deadline expiries, and requests still buffered or in
+    # service when the run stopped (> 0 only when every worker died with
+    # work outstanding).  Conservation invariant (property-tested):
+    # offered == completed + dropped + failed + in_flight.
+    failed: int = 0
+    retried: int = 0
+    in_flight: int = 0
 
     def mean_batch_size(self) -> float:
         """Realized requests per dispatch; 1.0 for unbatched runs."""
@@ -313,10 +322,42 @@ class ServingSimulator:
     queue_discipline: str = "shared"
     steal: bool = False
     steal_threshold: Optional[int] = None
+    # fault plane (beyond-paper): a deterministic FaultSchedule of worker
+    # crash/recover events and straggler service-inflation windows
+    # (:mod:`repro.serving.faults`).  A crashed worker's in-flight batch is
+    # cancelled and requeued at the queue head; each request retries up to
+    # ``retry_budget`` times before counting as ``failed``.
+    # ``request_timeout_s`` adds a queue-wait deadline: a request buffered
+    # past it is pulled from the queue and re-offered at the tail after an
+    # exponential backoff (retry_backoff_s * 2^(attempt-1)), sharing the
+    # same retry budget.  faults=None (or an empty schedule) and
+    # request_timeout_s=None reproduce the fault-free schedules
+    # bit-for-bit: no extra heap events, no extra RNG draws.
+    faults: Optional[FaultSchedule] = None
+    retry_budget: int = 3
+    request_timeout_s: Optional[float] = None
+    retry_backoff_s: float = 0.05
 
     def run(self, arrivals: Sequence[float], duration_s: float) -> SimulationResult:
         if self.num_servers < 1:
             raise ValueError("num_servers must be >= 1")
+        faults = (self.faults
+                  if self.faults is not None and not self.faults.is_empty()
+                  else None)
+        timeout_s = self.request_timeout_s
+        if faults is not None and faults.max_worker(None) >= self.num_servers:
+            raise ValueError(
+                f"fault schedule addresses worker {faults.max_worker(None)} "
+                f"but the pool has {self.num_servers} server(s)")
+        if self.retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        if timeout_s is not None and timeout_s <= 0:
+            raise ValueError("request_timeout_s must be > 0 (or None)")
+        if self.retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
+        # track per-request fault state only when something can go wrong —
+        # the fault-free path must stay bit-for-bit the pre-fault loop
+        track = faults is not None or timeout_s is not None
         rng = random.Random(self.seed)
         sched = Scheduler(
             num_workers=self.num_servers,
@@ -345,11 +386,47 @@ class ServingSimulator:
             heapq.heappush(events, (t, order, "tick", None))
             order += 1
             t += self.control_tick_s
+        if faults is not None:
+            # capacity events enter the heap after arrivals and ticks, so
+            # at equal timestamps a crash resolves after the tick/arrival
+            # already scheduled there — a fixed, documented tie-break
+            for ft, fkind, fworker in faults.capacity_events(None):
+                heapq.heappush(events, (ft, order, fkind, fworker))
+                order += 1
 
         arrival_time: Dict[int, float] = {i: a for i, a in enumerate(arrivals)}
         busy_s: List[float] = [0.0] * self.num_servers
-        completed: List[CompletedRequest] = []
+        completed: List[Optional[CompletedRequest]] = []
         depth_samples: List[Tuple[float, int]] = []
+        # fault-tracking state (inert when track is False)
+        epoch: List[int] = [0] * self.num_servers
+        active: Dict[int, Tuple[int, Tuple, float, float, int]] = {}
+        attempts: Dict[int, int] = {}
+        tokens: Dict[int, int] = {}
+        queued: set = set()
+
+        def arm_timeout(rid: int, now: float) -> None:
+            nonlocal order
+            tokens[rid] = tokens.get(rid, 0) + 1
+            heapq.heappush(events, (now + timeout_s, order, "timeout",
+                                    (rid, tokens[rid])))
+            order += 1
+
+        def retry_or_fail(rid: int, now: float, *, backoff: bool) -> bool:
+            """Charge one attempt; schedule a backoff retry (timeout path)
+            or report survivorship (crash path).  Returns True when the
+            request stays alive."""
+            nonlocal order
+            a = attempts.get(rid, 0) + 1
+            attempts[rid] = a
+            if a > self.retry_budget:
+                sched.record_failed(1)
+                return False
+            if backoff:
+                delay = self.retry_backoff_s * (2 ** (a - 1))
+                heapq.heappush(events, (now + delay, order, "retry", rid))
+                order += 1
+            return True
 
         def batch_service_time(cfg: int, b: int) -> float:
             # one rng draw per dispatch, same order as the unbatched
@@ -373,8 +450,11 @@ class ServingSimulator:
             dispatches, lingers = polled
             for d in dispatches:
                 svc = batch_service_time(d.config_index, d.batch_size)
+                if faults is not None:
+                    svc *= faults.inflation(d.worker_id, d.start_s)
                 comp = d.start_s + svc
                 busy_s[d.worker_id] += comp - d.start_s
+                rec_lo = len(completed)
                 for rid in d.items:
                     completed.append(CompletedRequest(
                         request_id=rid,
@@ -385,7 +465,14 @@ class ServingSimulator:
                         server_id=d.worker_id,
                         batch_size=d.batch_size,
                     ))
-                heapq.heappush(events, (comp, order, "completion", d.worker_id))
+                ep = 0
+                if track:
+                    queued.difference_update(d.items)
+                    ep = epoch[d.worker_id]
+                    active[d.worker_id] = (ep, d.items, d.start_s, comp,
+                                           rec_lo)
+                heapq.heappush(events, (comp, order, "completion",
+                                        (d.worker_id, ep)))
                 order += 1
             for lg in lingers:
                 heapq.heappush(events, (lg.deadline_s, order, "linger",
@@ -397,11 +484,20 @@ class ServingSimulator:
             if now > duration_s and kind == "tick":
                 continue
             if kind == "arrival":
-                sched.offer(int(payload), now)  # type: ignore[arg-type]
+                adm = sched.offer(int(payload), now)  # type: ignore[arg-type]
+                if track and adm.admitted:
+                    queued.add(int(payload))  # type: ignore[arg-type]
+                    if timeout_s is not None:
+                        arm_timeout(int(payload), now)  # type: ignore[arg-type]
                 execute(sched.poll(now))
                 sched.observe(now)
             elif kind == "completion":
-                sched.release(int(payload), now)  # type: ignore[arg-type]
+                worker, ep = payload  # type: ignore[misc]
+                if track:
+                    if ep != epoch[worker]:
+                        continue   # stale: the serving worker crashed
+                    active.pop(worker, None)
+                sched.release(worker, now)
                 execute(sched.poll(now))
                 sched.observe(now)
             elif kind == "linger":
@@ -410,11 +506,62 @@ class ServingSimulator:
                     execute(res)
                     sched.observe(now)
                 # else: stale timeout for a batch that already dispatched
+            elif kind == "crash":
+                w = int(payload)  # type: ignore[arg-type]
+                sched.mark_worker_down(w, now)
+                requeue: List[int] = []
+                if w in active:
+                    # cancel the in-flight batch: invalidate its pending
+                    # completion, refund the unserved busy time, and null
+                    # its prematurely-appended records
+                    ep, items, start_s, comp, rec_lo = active.pop(w)
+                    epoch[w] += 1
+                    busy_s[w] -= comp - max(start_s, min(now, comp))
+                    for i in range(rec_lo, rec_lo + len(items)):
+                        completed[i] = None
+                    for rid in items:
+                        if retry_or_fail(rid, now, backoff=False):
+                            requeue.append(rid)
+                    sched.worker_idle_while_down(w)
+                # orphaned per-worker backlog moves (no attempt charged:
+                # those requests never started service)
+                requeue.extend(sched.drain_worker_backlog(w))
+                sched.requeue_front(requeue)
+                for rid in requeue:
+                    queued.add(rid)
+                    if timeout_s is not None:
+                        arm_timeout(rid, now)   # fresh deadline per attempt
+                execute(sched.poll(now))
+                sched.observe(now)
+            elif kind == "recover":
+                sched.mark_worker_up(int(payload), now)  # type: ignore[arg-type]
+                execute(sched.poll(now))
+                sched.observe(now)
+            elif kind == "timeout":
+                rid, token = payload  # type: ignore[misc]
+                if tokens.get(rid) != token or rid not in queued:
+                    continue   # stale deadline: dispatched or re-armed
+                if not sched.cancel_waiting(rid):
+                    continue
+                queued.discard(rid)
+                retry_or_fail(rid, now, backoff=True)
+                sched.observe(now)
+            elif kind == "retry":
+                rid = int(payload)  # type: ignore[arg-type]
+                sched.requeue_tail(rid)
+                queued.add(rid)
+                if timeout_s is not None:
+                    arm_timeout(rid, now)
+                execute(sched.poll(now))
+                sched.observe(now)
             else:  # control tick
                 sched.observe(now)
                 execute(sched.poll(now))
                 depth_samples.append((now, sched.buffered()))
 
+        if track:
+            completed = [r for r in completed if r is not None]
+        in_service = sum(len(entry[1]) for entry in active.values())
         ctrl = self.controller
         return SimulationResult(
             completed=completed,
@@ -430,4 +577,7 @@ class ServingSimulator:
             dropped=sched.dropped,
             rerouted=sched.rerouted,
             stolen_batches=sched.stolen_batches,
+            failed=sched.failed,
+            retried=sched.retried,
+            in_flight=sched.buffered() + in_service,
         )

@@ -57,6 +57,7 @@ from repro.serving.dag import (
     sweep_pipeline,
 )
 from repro.serving.fastsim import chained_lindley
+from repro.serving.faults import Brownout, FaultSchedule, Straggler, WorkerCrash
 from repro.serving.scheduler import Scheduler
 from repro.serving.simulator import (
     ServingSimulator,
@@ -260,6 +261,69 @@ def test_stage_conservation(kind, width, topo_seed, rate, bound, drain):
     if drain:
         assert sink_stats.completed == len(out.completed)
         assert out.offered == len(arr)
+
+
+def _random_stage_faults(dag, fault_seed, horizon):
+    """A per-stage fault schedule for an arbitrary topology: at most one
+    crash window per stage (on a worker that stage actually has), plus
+    stage-scoped stragglers and brownouts, all derived from the seed."""
+    rng = random.Random(fault_seed)
+    crashes, stragglers, brownouts = [], [], []
+    for j, stg in enumerate(dag.stages):
+        if rng.random() < 0.55:
+            t = rng.uniform(0.05, 0.6) * horizon
+            recover = (t + rng.uniform(0.05, 0.3) * horizon
+                       if rng.random() < 0.75 else None)
+            crashes.append(WorkerCrash(
+                time_s=t, worker_id=rng.randrange(stg.num_servers),
+                recover_s=recover, stage=j))
+        if rng.random() < 0.35:
+            a = rng.uniform(0.0, 0.7) * horizon
+            stragglers.append(Straggler(
+                worker_id=rng.randrange(stg.num_servers), start_s=a,
+                end_s=a + rng.uniform(0.05, 0.25) * horizon,
+                factor=rng.uniform(1.2, 2.5), stage=j))
+        if rng.random() < 0.3:
+            a = rng.uniform(0.0, 0.7) * horizon
+            brownouts.append(Brownout(
+                stage=j, start_s=a,
+                end_s=a + rng.uniform(0.05, 0.25) * horizon,
+                factor=rng.uniform(1.2, 2.0)))
+    return FaultSchedule(crashes=tuple(crashes),
+                         stragglers=tuple(stragglers),
+                         brownouts=tuple(brownouts))
+
+
+@given(st.integers(0, 2), st.integers(1, 3), st.integers(0, 10**6),
+       st.floats(4.0, 12.0), st.integers(0, 3),
+       st.sampled_from([True, False]))
+@settings(max_examples=15, deadline=None)
+def test_stage_conservation_under_random_faults(kind, width, topo_seed,
+                                                rate, budget, drain):
+    """admitted == completed + in_flight + failed at every stage, for
+    random topologies under random crash/straggler/brownout schedules and
+    retry budgets — a failed request never propagates downstream, a
+    crashed batch never vanishes."""
+    dag = _random_dag(kind, width, topo_seed)
+    faults = _random_stage_faults(dag, topo_seed + 17, 20.0)
+    arr = generate_arrivals(constant_rate(rate), 20.0, seed=topo_seed % 500)
+    out = DagSimulator(dag, static_stage_indices=(0,) * dag.num_stages,
+                       seed=topo_seed % 89, faults=faults,
+                       retry_budget=budget).run(arr, 20.0, drain=drain)
+    total_failed = 0
+    for s in out.stage_stats:
+        assert s.admitted == s.completed + s.in_flight + s.failed, s
+        assert s.retried >= 0
+        total_failed += s.failed
+    assert out.failed == total_failed
+    assert out.offered == len(arr)
+    # sink records are never duplicated, whatever was retried upstream
+    ids = [r.request_id for r in out.completed]
+    assert len(set(ids)) == len(ids)
+    # a drained run with every crash recovered ends with nothing in flight
+    if drain and all(c.recover_s is not None for c in faults.crashes):
+        assert out.in_flight == 0
+        assert sum(s.in_flight for s in out.stage_stats) == 0
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,557 @@
+"""Fault-injection plane and degradation-aware adaptation.
+
+The contract stack, strictest first:
+
+1. **The empty schedule is inert**: ``faults=None``, ``FaultSchedule()``
+   and an omitted argument all take the identical code path — completions,
+   timelines and busy time are bit-for-bit equal across the flat
+   simulator (every queue discipline and batch shape) and the DAG oracle.
+2. **Crash semantics are exact**: a crashed worker's in-flight batch is
+   cancelled and requeued at the queue head, retried under a per-request
+   budget, and counted as ``failed`` — never silently lost — when the
+   budget runs out.  Deterministic samplers make the retried completion
+   times exact.
+3. **Degradation-aware control**: :func:`repro.core.aqm.\
+derive_degraded_tables` pre-derives one threshold table per surviving
+   capacity, and :meth:`repro.core.elastico.ElasticoController.\
+on_capacity_change` swaps them at the instant the scheduler loses or
+   regains a worker.
+4. **Wall-clock hardening**: a raising ``workflow_fn`` neither deadlocks
+   the pool nor loses accounting; ``drain_and_stop`` reports a truthful
+   ``drain_timed_out`` / ``backlog`` instead of hanging when every worker
+   is dead.
+"""
+
+import time
+
+import pytest
+
+from proptest import given, settings, st
+
+from repro.core.aqm import (
+    HysteresisSpec,
+    derive_degraded_tables,
+    derive_mix_policies,
+    derive_policies,
+)
+from repro.core.elastico import ElasticoController, ElasticoMixController
+from repro.serving import fastsim
+from repro.serving.dag import DagSimulator, StageSpec, WorkflowDAG
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import WorkerPool, WorkflowExecutor
+from repro.serving.fastsim import FastSimulationResult, fast_path_eligible
+from repro.serving.faults import Brownout, FaultSchedule, Straggler, WorkerCrash
+from repro.serving.simulator import (
+    ServingSimulator,
+    SimulationResult,
+    deterministic_sampler,
+    lognormal_sampler_from_profile,
+)
+from repro.serving.workload import (
+    Request,
+    constant_rate,
+    generate_arrivals,
+)
+
+from conftest import synthetic_point
+
+MEANS = [0.10, 0.25, 0.45]
+P95S = [0.14, 0.35, 0.63]
+ACCS = [0.76, 0.82, 0.85]
+SLO_S = 1.0
+
+
+def ladder_front():
+    return [
+        synthetic_point(m, p, a, f"c{i}")
+        for i, (m, p, a) in enumerate(zip(MEANS, P95S, ACCS))
+    ]
+
+
+def flat_stage(name="svc", **kw):
+    return StageSpec(name=name, mean_s=tuple(MEANS), p95_s=tuple(P95S),
+                     accuracy=tuple(ACCS), **kw)
+
+
+# --------------------------------------------------------------------------
+# 1. schedule construction and validation
+# --------------------------------------------------------------------------
+
+
+def test_fault_dataclass_validation():
+    with pytest.raises(ValueError, match="recover_s"):
+        WorkerCrash(time_s=5.0, worker_id=0, recover_s=5.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        WorkerCrash(time_s=-1.0, worker_id=0)
+    with pytest.raises(ValueError, match="factor"):
+        Straggler(worker_id=0, start_s=0.0, end_s=1.0, factor=1.0)
+    with pytest.raises(ValueError, match="start_s"):
+        Straggler(worker_id=0, start_s=2.0, end_s=1.0, factor=2.0)
+    with pytest.raises(ValueError, match="factor"):
+        Brownout(stage=0, start_s=0.0, end_s=1.0, factor=0.5)
+
+
+def test_schedule_rejects_overlapping_down_windows():
+    # crash at t=3 while still down since t=1 is a schedule bug
+    with pytest.raises(ValueError, match="overlapping"):
+        FaultSchedule(crashes=(
+            WorkerCrash(time_s=1.0, worker_id=0, recover_s=5.0),
+            WorkerCrash(time_s=3.0, worker_id=0, recover_s=9.0),
+        ))
+    # a permanent crash (recover_s=None) blocks any later crash too
+    with pytest.raises(ValueError, match="overlapping"):
+        FaultSchedule(crashes=(
+            WorkerCrash(time_s=1.0, worker_id=0),
+            WorkerCrash(time_s=3.0, worker_id=0),
+        ))
+    # sequential windows on one worker, and overlap on *different* workers
+    # (or the same id at a different stage), are fine
+    FaultSchedule(crashes=(
+        WorkerCrash(time_s=1.0, worker_id=0, recover_s=2.0),
+        WorkerCrash(time_s=2.0, worker_id=0, recover_s=3.0),
+        WorkerCrash(time_s=1.5, worker_id=1, recover_s=9.0),
+        WorkerCrash(time_s=1.5, worker_id=0, recover_s=9.0, stage=2),
+    ))
+
+
+def test_capacity_events_sorted_crash_before_recover():
+    sched = FaultSchedule(crashes=(
+        WorkerCrash(time_s=2.0, worker_id=1, recover_s=4.0),
+        WorkerCrash(time_s=4.0, worker_id=0, recover_s=6.0),
+    ))
+    ev = sched.capacity_events(None)
+    assert ev == [(2.0, "crash", 1), (4.0, "crash", 0),
+                  (4.0, "recover", 1), (6.0, "recover", 0)]
+    # stage scoping: nothing addressed to stage 3
+    assert sched.capacity_events(3) == []
+
+
+def test_inflation_composes_stragglers_and_brownouts():
+    sched = FaultSchedule(
+        stragglers=(
+            Straggler(worker_id=0, start_s=1.0, end_s=2.0, factor=2.0),
+            Straggler(worker_id=0, start_s=1.5, end_s=3.0, factor=1.5,
+                      stage=1),
+        ),
+        brownouts=(Brownout(stage=1, start_s=0.0, end_s=4.0, factor=3.0),),
+    )
+    # flat pool: only the stage=None straggler applies, [start, end) closed-open
+    assert sched.inflation(0, 1.0) == 2.0
+    assert sched.inflation(0, 2.0) == 1.0
+    assert sched.inflation(1, 1.0) == 1.0
+    # stage 1: brownout x stage-scoped straggler compose multiplicatively
+    assert sched.inflation(0, 1.5, stage=1) == pytest.approx(4.5)
+    assert sched.inflation(0, 3.5, stage=1) == 3.0
+    assert sched.max_worker(None) == 0
+    assert sched.max_worker(1) == 0
+    assert FaultSchedule().max_worker() == -1
+
+
+def test_driver_validation_rejects_out_of_range_faults():
+    bad = FaultSchedule(crashes=(WorkerCrash(time_s=1.0, worker_id=5),))
+    with pytest.raises(ValueError, match="worker 5"):
+        ServingSimulator(deterministic_sampler(MEANS), num_servers=2,
+                         faults=bad).run([0.0], 5.0)
+    with pytest.raises(ValueError, match="retry_budget"):
+        ServingSimulator(deterministic_sampler(MEANS),
+                         retry_budget=-1).run([0.0], 5.0)
+    # DAG faults must carry an in-range stage index...
+    dag = WorkflowDAG.single(flat_stage(num_servers=2))
+    flat_fault = FaultSchedule(crashes=(WorkerCrash(time_s=1.0, worker_id=0),))
+    with pytest.raises(ValueError, match="stage"):
+        DagSimulator(dag, static_stage_indices=(0,),
+                     faults=flat_fault).run([0.0], 5.0)
+    # ...and a worker id inside that stage's pool
+    deep = FaultSchedule(
+        crashes=(WorkerCrash(time_s=1.0, worker_id=3, stage=0),))
+    with pytest.raises(ValueError, match="worker"):
+        DagSimulator(dag, static_stage_indices=(0,),
+                     faults=deep).run([0.0], 5.0)
+    # threaded pool validates eagerly at construction
+    with pytest.raises(ValueError, match="worker"):
+        WorkerPool(WorkflowExecutor(configs=[("c", 0)],
+                                    workflow_fn=lambda c, p: 1.0),
+                   c=1, faults=bad)
+    with pytest.raises(ValueError, match="on_worker_error"):
+        WorkerPool(WorkflowExecutor(configs=[("c", 0)],
+                                    workflow_fn=lambda c, p: 1.0),
+                   c=1, on_worker_error="ignore")
+
+
+# --------------------------------------------------------------------------
+# 2. the empty schedule is inert (bit-for-bit golden invariant)
+# --------------------------------------------------------------------------
+
+
+def _flat_surface(out):
+    return (out.completed, out.config_timeline, out.queue_depth_samples,
+            out.per_server_busy_s, out.offered, out.dropped, out.failed,
+            out.retried, out.in_flight)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(num_servers=1),
+    dict(num_servers=3),
+    dict(num_servers=2, max_batch_size=4, batch_timeout_s=0.02),
+    dict(num_servers=3, queue_discipline="per_worker", steal=True),
+    dict(num_servers=2, max_queue_depth=3),
+])
+def test_empty_schedule_is_bit_for_bit_inert_flat(kw):
+    """faults=FaultSchedule() reproduces faults=None exactly, across every
+    queue discipline and batch shape — no extra events, no extra RNG."""
+    arr = generate_arrivals(constant_rate(8.0), 30.0, seed=5)
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    base = ServingSimulator(sampler, static_index=1, seed=9, **kw
+                            ).run(arr, 30.0)
+    inert = ServingSimulator(sampler, static_index=1, seed=9,
+                             faults=FaultSchedule(), **kw).run(arr, 30.0)
+    assert _flat_surface(inert) == _flat_surface(base)
+
+
+def test_empty_schedule_is_bit_for_bit_inert_controller_and_dag():
+    table = derive_policies(ladder_front(), slo_p95_s=SLO_S)
+    arr = generate_arrivals(constant_rate(6.0), 40.0, seed=2)
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+
+    base = ServingSimulator(sampler, controller=ElasticoController(table),
+                            seed=4).run(arr, 40.0)
+    inert = ServingSimulator(sampler, controller=ElasticoController(table),
+                             seed=4, faults=FaultSchedule()).run(arr, 40.0)
+    assert _flat_surface(inert) == _flat_surface(base)
+    assert ([e.time_s for e in inert.switch_events]
+            == [e.time_s for e in base.switch_events])
+
+    dag = WorkflowDAG.tandem([flat_stage(name="a", num_servers=2),
+                              flat_stage(name="b")])
+    db = DagSimulator(dag, static_stage_indices=(0, 1), seed=3
+                      ).run(arr, 40.0)
+    di = DagSimulator(dag, static_stage_indices=(0, 1), seed=3,
+                      faults=FaultSchedule()).run(arr, 40.0)
+    assert di.completed == db.completed
+    assert di.stage_stats == db.stage_stats
+
+
+# --------------------------------------------------------------------------
+# 3. crash / straggler / deadline semantics (deterministic, exact)
+# --------------------------------------------------------------------------
+
+
+def test_crash_requeues_at_head_and_retries_exactly():
+    """One worker, one request: crashed mid-service at t=0.05, recovered
+    at t=0.2 — the request must restart at exactly 0.2 and complete at
+    0.3 (deterministic 0.1 s service), counted once, retried once."""
+    faults = FaultSchedule(crashes=(
+        WorkerCrash(time_s=0.05, worker_id=0, recover_s=0.2),))
+    out = ServingSimulator(deterministic_sampler(MEANS), static_index=0,
+                           faults=faults).run([0.0], 5.0)
+    assert len(out.completed) == 1
+    r = out.completed[0]
+    assert r.start_s == pytest.approx(0.2)
+    assert r.completion_s == pytest.approx(0.3)
+    assert out.retried == 1 and out.failed == 0 and out.in_flight == 0
+    # the cancelled attempt's busy time was refunded: only the 0.05 s
+    # spent before the crash plus the 0.1 s successful run are booked
+    assert sum(out.per_server_busy_s) == pytest.approx(0.15)
+
+
+def test_crash_exhausts_retry_budget_into_failed():
+    faults = FaultSchedule(crashes=(
+        WorkerCrash(time_s=0.05, worker_id=0, recover_s=0.2),))
+    out = ServingSimulator(deterministic_sampler(MEANS), static_index=0,
+                           faults=faults, retry_budget=0).run([0.0], 5.0)
+    assert len(out.completed) == 0
+    assert out.failed == 1 and out.retried == 0
+    assert out.offered == len(out.completed) + out.dropped + out.failed \
+        + out.in_flight
+
+
+def test_permanent_total_crash_strands_work_as_in_flight():
+    """Every worker dead with no recovery: buffered work is reported as
+    in_flight (conservation, not silent loss) and the run terminates."""
+    faults = FaultSchedule(crashes=(WorkerCrash(time_s=0.05, worker_id=0),))
+    arr = [0.0, 0.01, 0.02, 0.03, 0.04]
+    out = ServingSimulator(deterministic_sampler(MEANS), static_index=0,
+                           faults=faults).run(arr, 10.0)
+    assert len(out.completed) == 0 and out.failed == 0
+    assert out.in_flight == len(arr)
+    assert out.retried == 1  # the cancelled in-service request requeued
+    assert out.offered == len(arr)
+
+
+def test_surviving_worker_absorbs_permanent_crash():
+    faults = FaultSchedule(crashes=(WorkerCrash(time_s=1.0, worker_id=0),))
+    arr = generate_arrivals(constant_rate(6.0), 20.0, seed=7)
+    out = ServingSimulator(deterministic_sampler(MEANS), static_index=0,
+                           num_servers=2, faults=faults).run(arr, 20.0)
+    assert len(out.completed) == len(arr)
+    assert out.failed == 0 and out.in_flight == 0
+    # no dispatch ever starts on the dead worker after the crash
+    assert all(r.start_s <= 1.0 for r in out.completed if r.server_id == 0)
+
+
+def test_straggler_inflates_service_exactly_within_window():
+    faults = FaultSchedule(stragglers=(
+        Straggler(worker_id=0, start_s=0.0, end_s=1.0, factor=2.0),))
+    out = ServingSimulator(deterministic_sampler(MEANS), static_index=0,
+                           faults=faults).run([0.0, 2.0], 10.0)
+    a, b = out.completed
+    assert a.completion_s - a.start_s == pytest.approx(0.2)   # inside window
+    assert b.completion_s - b.start_s == pytest.approx(0.1)   # outside
+    assert out.retried == out.failed == 0
+
+
+def test_request_deadline_expires_waiting_requests_with_backoff():
+    """Queue-wait deadline: the blocked request is pulled at timeout,
+    re-offered at the tail after an exponential backoff, and fails once
+    the shared retry budget is spent.  The in-service request is never
+    cancelled by its deadline."""
+    out = ServingSimulator(
+        deterministic_sampler(MEANS), static_index=2,  # 0.45 s service
+        request_timeout_s=0.1, retry_budget=1, retry_backoff_s=0.05,
+    ).run([0.0, 0.01], 10.0)
+    assert [r.request_id for r in out.completed] == [0]
+    assert out.failed == 1 and out.retried == 1
+    assert out.offered == len(out.completed) + out.failed
+
+
+def test_dag_crash_with_brownout_conserves_every_stage():
+    dag = WorkflowDAG.tandem([flat_stage(name="a", num_servers=2),
+                              flat_stage(name="b")])
+    faults = FaultSchedule(
+        brownouts=(Brownout(stage=0, start_s=0.0, end_s=100.0, factor=2.0),),
+        crashes=(WorkerCrash(time_s=2.0, worker_id=0, recover_s=6.0,
+                             stage=1),))
+    arr = generate_arrivals(constant_rate(4.0), 20.0, seed=11)
+    # stage b runs its slowest rung (0.45 s mean) against 4 qps: its one
+    # worker is saturated, so the t=2 crash is guaranteed to interrupt an
+    # in-service batch and force a head-of-queue retry
+    out = DagSimulator(dag, static_stage_indices=(0, 2), seed=1,
+                       faults=faults).run(arr, 20.0)
+    for s in out.stage_stats:
+        assert s.admitted == s.completed + s.in_flight + s.failed, s
+    assert out.stage_stats[1].retried >= 1
+    assert out.stage_stats[1].failed == 0  # default budget covers one crash
+
+
+def test_dag_brownout_inflation_is_exact():
+    """Single stage, single worker, single arrival: the browned-out
+    sojourn is exactly factor x the fault-free one (same seed, same
+    lognormal draw — only the multiplier differs)."""
+    dag = WorkflowDAG.single(flat_stage())
+    base = DagSimulator(dag, static_stage_indices=(0,), seed=13
+                        ).run([0.0], 10.0)
+    slow = DagSimulator(
+        dag, static_stage_indices=(0,), seed=13,
+        faults=FaultSchedule(brownouts=(
+            Brownout(stage=0, start_s=0.0, end_s=10.0, factor=2.5),)),
+    ).run([0.0], 10.0)
+    (rb,), (rs,) = base.completed, slow.completed
+    assert rs.start_s == rb.start_s == 0.0
+    assert rs.completion_s == pytest.approx(2.5 * rb.completion_s)
+
+
+# --------------------------------------------------------------------------
+# 4. degradation-aware control (tables per surviving capacity)
+# --------------------------------------------------------------------------
+
+
+def test_derive_degraded_tables_family():
+    hyst = HysteresisSpec()
+    fam = derive_degraded_tables(ladder_front(), slo_p95_s=SLO_S,
+                                 hysteresis=hyst, num_servers=4)
+    assert sorted(fam) == [1, 2, 3, 4]
+    full = derive_policies(ladder_front(), slo_p95_s=SLO_S, hysteresis=hyst,
+                           num_servers=4)
+    # the full-capacity member is the identical derivation the Planner runs
+    assert fam[4].policies == full.policies
+    for c, tab in fam.items():
+        assert tab.num_servers == c
+    # thresholds scale with the drain rate: fewer survivors -> tighter N_up
+    for i in range(len(MEANS)):
+        ups = [fam[c].policies[i].upscale_threshold for c in (1, 2, 3, 4)]
+        assert ups == sorted(ups), ups
+        assert ups[0] < ups[-1]
+
+
+def test_on_capacity_change_swaps_and_restores_tables():
+    fam = derive_degraded_tables(ladder_front(), slo_p95_s=SLO_S,
+                                 num_servers=3)
+    ctrl = ElasticoController(fam[3], degraded_tables=fam)
+    assert ctrl.table is ctrl._full_table
+    ev = ctrl.on_capacity_change(2, 0, 1.0)
+    assert ev is None  # same ladder length: swap without a rung change
+    assert ctrl.table.policies == fam[2].policies
+    assert ctrl.capacity_timeline == [(1.0, 2)]
+    # idempotent at unchanged capacity
+    assert ctrl.on_capacity_change(2, 0, 1.5) is None
+    assert ctrl.capacity_timeline == [(1.0, 2)]
+    # recovery restores the full table; >= full capacity maps to full
+    ctrl.on_capacity_change(3, 0, 2.0)
+    assert ctrl.table is ctrl._full_table
+    assert ctrl.capacity_timeline == [(1.0, 2), (2.0, 3)]
+    # without degraded tables the hook is a no-op
+    plain = ElasticoController(fam[3])
+    assert plain.on_capacity_change(1, 0, 1.0) is None
+    assert plain.capacity_timeline == []
+
+
+def test_on_capacity_change_clamps_to_shorter_ladder():
+    full = derive_policies(ladder_front(), slo_p95_s=SLO_S, num_servers=2)
+    short = derive_policies(ladder_front()[:1], slo_p95_s=SLO_S,
+                            num_servers=1)
+    ctrl = ElasticoController(full, degraded_tables={1: short},
+                              initial_index=2)
+    ev = ctrl.on_capacity_change(1, 7, 3.0)
+    assert ev is not None and ev.to_index == 0 and ev.from_index == 2
+    assert "capacity change" in ev.reason
+    assert ctrl.current_index == 0
+    with pytest.raises(ValueError):
+        ctrl.on_capacity_change(0, 0, 4.0)
+
+
+def test_mix_controller_rejects_runtime_capacity_swap():
+    mix = derive_mix_policies(ladder_front(), slo_p95_s=SLO_S, num_servers=2)
+    ctrl = ElasticoMixController(mix)
+    with pytest.raises(NotImplementedError, match="homogeneous-only"):
+        ctrl.on_capacity_change(1, 0, 1.0)
+
+
+def test_simulator_drives_capacity_swaps_through_scheduler():
+    """End to end: a crash/recover pair reaches the controller via the
+    scheduler's capacity-change hook, swapping tables both ways."""
+    fam = derive_degraded_tables(ladder_front(), slo_p95_s=SLO_S,
+                                 num_servers=2)
+    ctrl = ElasticoController(fam[2], degraded_tables=fam)
+    faults = FaultSchedule(crashes=(
+        WorkerCrash(time_s=5.0, worker_id=0, recover_s=15.0),))
+    arr = generate_arrivals(constant_rate(5.0), 30.0, seed=3)
+    out = ServingSimulator(lognormal_sampler_from_profile(MEANS, P95S),
+                           controller=ctrl, num_servers=2, faults=faults,
+                           ).run(arr, 30.0)
+    assert [(t, c) for t, c in ctrl.capacity_timeline] == [(5.0, 1),
+                                                           (15.0, 2)]
+    assert out.offered == len(out.completed) + out.dropped + out.failed \
+        + out.in_flight
+
+
+def test_planner_packages_degraded_tables():
+    from repro.core.planner import Planner
+
+    planner = Planner(profiler=lambda c, n: [0.05 * (1 + c[1])] * n,
+                      num_servers=3)
+    feasible = {("rung", i): a for i, a in enumerate(ACCS)}
+    plan = planner.plan(feasible, slo_p95_s=SLO_S)
+    assert plan.degraded_tables is not None
+    assert sorted(plan.degraded_tables) == [1, 2, 3]
+    ctrl = plan.controller()
+    assert ctrl.degraded_tables is plan.degraded_tables
+    assert "degraded" in plan.describe()
+    # single-server plans have nothing to degrade to
+    single = Planner(profiler=lambda c, n: [0.05] * n)
+    assert single.plan(feasible, slo_p95_s=SLO_S).degraded_tables is None
+
+
+# --------------------------------------------------------------------------
+# 5. fastsim dispatcher gating
+# --------------------------------------------------------------------------
+
+
+def test_fastsim_routes_faults_to_oracle():
+    assert fast_path_eligible(faults=None)
+    assert fast_path_eligible(faults=FaultSchedule())
+    crash = FaultSchedule(crashes=(WorkerCrash(time_s=1.0, worker_id=0),))
+    assert not fast_path_eligible(faults=crash)
+    assert not fast_path_eligible(request_timeout_s=1.0)
+
+    arr = generate_arrivals(constant_rate(5.0), 10.0, seed=1)
+    sampler = lognormal_sampler_from_profile(MEANS, P95S)
+    fast = fastsim.simulate(sampler, arr, 10.0, faults=FaultSchedule())
+    assert isinstance(fast, FastSimulationResult)
+    oracle = fastsim.simulate(sampler, arr, 10.0, num_servers=2,
+                              faults=crash, retry_budget=2)
+    assert isinstance(oracle, SimulationResult)
+    assert oracle.offered == len(arr)
+    assert oracle.offered == oracle.num_completed + oracle.dropped \
+        + oracle.failed + oracle.in_flight
+
+
+# --------------------------------------------------------------------------
+# 6. wall-clock hardening (threaded engine)
+# --------------------------------------------------------------------------
+
+
+def _flaky_workflow(fail_ids):
+    def fn(config, payload):
+        if payload in fail_ids:
+            raise RuntimeError(f"boom on {payload}")
+        time.sleep(0.001)
+        return 1.0
+    return fn
+
+
+def _engine(fn, **kw):
+    executor = WorkflowExecutor(configs=[("cfg", 0)], workflow_fn=fn)
+    return ServingEngine(executor, control_tick_s=0.01, **kw)
+
+
+def test_raising_workflow_does_not_deadlock_or_lose_accounting():
+    """Satellite regression: a workflow_fn exception surfaces in
+    EngineReport.worker_errors, the request fails after its retry budget,
+    and every other request still completes — no hang, no lost slot."""
+    engine = _engine(_flaky_workflow({7}), retry_budget=1)
+    engine.start()
+    for i in range(20):
+        engine.submit(Request(request_id=i, arrival_s=0.0, payload=i))
+    report = engine.drain_and_stop(timeout_s=10.0)
+    assert not report.drain_timed_out and report.backlog == 0
+    assert sorted(r.request_id for r in report.records) == [
+        i for i in range(20) if i != 7]
+    assert report.failed == 1
+    # budget 1 -> the raising request was attempted twice
+    assert len(report.worker_errors) == 2
+    for err in report.worker_errors:
+        assert "boom on 7" in err.error and not err.halted
+        assert err.request_ids == (7,)
+    assert report.total_requests == len(report.records) + report.dropped \
+        + report.failed + report.backlog
+
+
+def test_halt_policy_kills_worker_and_drain_reports_backlog():
+    """on_worker_error='halt' with a single worker: the pool goes dead,
+    drain_and_stop early-stops instead of spinning out its timeout, and
+    the unserved requests are reported as backlog."""
+    engine = _engine(_flaky_workflow({0}), on_worker_error="halt",
+                     retry_budget=0)
+    engine.start()
+    for i in range(4):
+        engine.submit(Request(request_id=i, arrival_s=0.0, payload=i))
+    t0 = time.monotonic()
+    report = engine.drain_and_stop(timeout_s=30.0)
+    assert time.monotonic() - t0 < 5.0  # early stop, not the 30 s timeout
+    assert report.drain_timed_out
+    assert engine.pool.all_workers_dead()
+    assert engine.pool.dead_workers() == [0]
+    assert report.failed == 1
+    assert len(report.records) == 0
+    assert report.backlog == 3
+    (err,) = report.worker_errors
+    assert err.halted
+    assert report.total_requests == len(report.records) + report.dropped \
+        + report.failed + report.backlog
+
+
+def test_engine_fault_schedule_crashes_worker_at_tick_granularity():
+    """A scheduled wall-clock crash removes the worker from dispatch at
+    the next control tick; the survivor serves everything."""
+    faults = FaultSchedule(crashes=(WorkerCrash(time_s=0.05, worker_id=0),))
+    engine = _engine(_flaky_workflow(set()), num_workers=2, faults=faults)
+    engine.start()
+    time.sleep(0.2)  # let the crash tick land
+    for i in range(30):
+        engine.submit(Request(request_id=i, arrival_s=0.0, payload=i))
+    report = engine.drain_and_stop(timeout_s=10.0)
+    assert len(report.records) == 30
+    assert report.failed == 0 and not report.worker_errors
+    assert engine.scheduler.is_down(0)
+    served = {r.worker_id for r in report.records}
+    assert served == {1}
